@@ -1,0 +1,85 @@
+"""Branch-parallel makespan benchmark — the paper's headline experiment.
+
+Serial/fastest-per-op execution (what TF r1.10 does) vs concurrency-aware
+co-scheduling (the paper's proposal) on GoogleNet's full inception graph,
+plus the stacked-branch-GEMM kernel vs per-branch GEMMs (the intra-chip
+fusion analogue), measured on this host.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro import kernels as K
+from repro.configs import get_config
+from repro.core import compare_policies, run_stacked_matmul
+from repro.models.cnn import build_graph
+
+
+def makespan_table(batch: int = 32):
+    rows = []
+    g = build_graph(get_config("googlenet"), batch=batch)
+    res = compare_policies(g)
+    co_groups = [grp for grp in res["concurrent"].groups if len(grp.ops) > 1]
+    # count complementary algorithm pairs (the "27 similar cases" claim)
+    n_pairs = sum(1 for grp in co_groups
+                  if len(set(grp.algorithms.values())) > 1)
+    rows.append({
+        "table": "makespan", "network": "googlenet", "batch": batch,
+        "ops": len(g),
+        "serial_modeled_ms": round(res["serial_makespan"] * 1e3, 3),
+        "concurrent_modeled_ms": round(res["concurrent_makespan"] * 1e3, 3),
+        "speedup": round(res["speedup"], 3),
+        "co_exec_groups": len(co_groups),
+        "complementary_pairs": n_pairs,
+    })
+    return rows
+
+
+def stacked_branch_gemm_bench(g: int = 4, m: int = 256, k: int = 512,
+                              n: int = 256):
+    """Intra-chip co-execution: one stacked kernel vs G separate GEMMs."""
+    x = jax.random.normal(jax.random.PRNGKey(0), (m, k), jnp.float32)
+    ws = jax.random.normal(jax.random.PRNGKey(1), (g, k, n), jnp.float32)
+
+    stacked = jax.jit(lambda x, ws: run_stacked_matmul(x, ws, combine="concat"))
+    serial = jax.jit(lambda x, ws: jnp.concatenate(
+        [K.matmul(x, ws[i]) for i in range(g)], axis=-1))
+
+    def t(fn):
+        fn(x, ws)
+        t0 = time.time()
+        for _ in range(3):
+            jax.block_until_ready(fn(x, ws))
+        return (time.time() - t0) / 3 * 1e6
+
+    us_stacked, us_serial = t(stacked), t(serial)
+    return [{
+        "table": "stacked_gemm", "branches": g, "shape": f"{m}x{k}x{n}",
+        "us_per_call": round(us_stacked, 1),
+        "us_serial": round(us_serial, 1),
+        "host_speedup": round(us_serial / max(us_stacked, 1e-9), 3),
+        "note": "XLA-CPU wall time; TPU gain comes from DMA/MXU overlap",
+    }]
+
+
+def fused_complementary_bench(m=2048, k=2048, n=2048, r=65536, c=128):
+    """The intra-SM analogue made literal: one kernel co-executing an
+    MXU-bound GEMM with an HBM-bound reduction.  Reports the modeled TPU
+    co-execution win (cost model) — the quantity the paper's Table 1
+    argues for."""
+    from repro.core import Op, co_execution_time, profile, serial_time
+    a = profile(Op.make("gemm", "matmul", m=m, k=k, n=n), "mxu128")
+    b = profile(Op.make("red", "pointwise", elements=r * c), "vpu")
+    t_serial = serial_time([a, b])
+    t_co = co_execution_time([a, b])
+    return [{
+        "table": "fused_branches", "shape": f"gemm{m}x{k}x{n}+reduce{r}x{c}",
+        "us_per_call": round(t_co * 1e6, 2),
+        "us_serial_modeled": round(t_serial * 1e6, 2),
+        "modeled_speedup": round(t_serial / max(t_co, 1e-12), 3),
+        "gemm_bound": a.bound, "reduce_bound": b.bound,
+        "kernel": "kernels/fused_branches.py (validated interpret=True)",
+    }]

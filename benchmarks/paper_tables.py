@@ -1,0 +1,104 @@
+"""Paper-table analogues (SPAA '20 brief announcement).
+
+Table 1 — resource profiles of different algorithms for the two independent
+convolutions of GoogleNet's first inception module (3x3 and 5x5 branches):
+our TPU analogue reports modeled MXU utilization, HBM pressure, VMEM claim
+and measured XLA-CPU wall time per algorithm.
+
+Table 2 — workspace memory vs runtime for the 5x5 convolution of the third
+inception module across every supported algorithm: demonstrates C4
+(non-correlation of time and workspace).
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro import kernels as K
+from repro.core import Op, profile, supported_algorithms
+
+
+def _timeit(fn, *args, reps: int = 3) -> float:
+    fn(*args)  # compile
+    t0 = time.time()
+    for _ in range(reps):
+        jax.block_until_ready(fn(*args))
+    return (time.time() - t0) / reps * 1e6  # us
+
+
+def table1_resource_profiles(batch: int = 4):
+    """Two independent convs of inception 3a: (1x1->)3x3 and (1x1->)5x5."""
+    rows = []
+    convs = [("incep3a/3x3", 28, 96, 128, 3), ("incep3a/5x5", 28, 16, 32, 5)]
+    for name, hw, cin, cout, k in convs:
+        op = Op.make(name, "conv2d", n=batch, h=hw, w=hw, c=cin, kh=k, kw=k,
+                     k=cout, stride=1)
+        x = jax.random.normal(jax.random.PRNGKey(0), (batch, hw, hw, cin),
+                              jnp.float32)
+        w = 0.1 * jax.random.normal(jax.random.PRNGKey(1),
+                                    (k, k, cin, cout), jnp.float32)
+        for alg in supported_algorithms(op):
+            pr = profile(op, alg)
+            fn = jax.jit(lambda x, w, a=alg: K.conv2d(x, w, algorithm=a))
+            us = _timeit(fn, x, w)
+            mxu_util = min(pr.compute_time / pr.time, 1.0)
+            hbm_util = min(pr.memory_time / pr.time, 1.0)
+            rows.append({
+                "table": "t1", "layer": name, "algorithm": alg,
+                "us_per_call": round(us, 1),
+                "mxu_frac": round(mxu_util, 3),
+                "hbm_frac": round(hbm_util, 3),
+                "vmem_bytes": int(pr.vmem_bytes),
+                "workspace_bytes": int(pr.workspace_bytes),
+                "bound": pr.bound,
+            })
+    return rows
+
+
+def table2_workspace_vs_time(batch: int = 4):
+    """5x5 conv of inception 4d-ish: workspace vs runtime per algorithm."""
+    rows = []
+    hw, cin, cout, k = 14, 32, 64, 5
+    op = Op.make("incep4/5x5", "conv2d", n=batch, h=hw, w=hw, c=cin, kh=k,
+                 kw=k, k=cout, stride=1)
+    x = jax.random.normal(jax.random.PRNGKey(0), (batch, hw, hw, cin),
+                          jnp.float32)
+    w = 0.1 * jax.random.normal(jax.random.PRNGKey(1), (k, k, cin, cout),
+                                jnp.float32)
+    for alg in ("im2col_gemm", "direct", "winograd3x3"):
+        if not K.conv2d_supported(alg, k, k, 1):
+            rows.append({"table": "t2", "algorithm": alg,
+                         "us_per_call": None,
+                         "workspace_bytes": None,
+                         "note": "not supported for this input"})
+            continue
+        ws = K.conv2d_workspace_bytes(alg, x.shape, w.shape)
+        fn = jax.jit(lambda x, w, a=alg: K.conv2d(x, w, algorithm=a))
+        us = _timeit(fn, x, w)
+        pr = profile(op, alg)
+        rows.append({"table": "t2", "algorithm": alg,
+                     "us_per_call": round(us, 1),
+                     "workspace_bytes": int(ws),
+                     "modeled_tpu_us": round(pr.time * 1e6, 1)})
+    return rows
+
+
+def matmul_algorithm_table(m=512, k=1024, n=512):
+    """GEMM zoo (the LM-scale analogue of the conv zoo)."""
+    rows = []
+    x = jax.random.normal(jax.random.PRNGKey(0), (m, k), jnp.float32)
+    y = jax.random.normal(jax.random.PRNGKey(1), (k, n), jnp.float32)
+    op = Op.make("gemm", "matmul", m=m, k=k, n=n)
+    for alg in K.MATMUL_ALGORITHMS:
+        fn = jax.jit(lambda x, y, a=alg: K.matmul(x, y, algorithm=a))
+        us = _timeit(fn, x, y)
+        pr = profile(op, alg)
+        rows.append({"table": "gemm", "algorithm": alg,
+                     "us_per_call": round(us, 1),
+                     "workspace_bytes": int(
+                         K.matmul_workspace_bytes(alg, m, n, k)),
+                     "vmem_bytes": int(K.matmul_vmem_bytes(alg)),
+                     "modeled_tpu_us": round(pr.time * 1e6, 2)})
+    return rows

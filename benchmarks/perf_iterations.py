@@ -1,0 +1,130 @@
+"""§Perf: hypothesis -> change -> before/after on the three hillclimb cells.
+
+Analyzes the perf-variant dry-run HLOs (produced by dryrun.py --perf ...)
+against each cell's baseline and emits results/perf_iterations.json +
+a markdown log for EXPERIMENTS.md.
+"""
+from __future__ import annotations
+
+import json
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.configs import SHAPES, get_config                  # noqa: E402
+from repro.roofline.analyze import HloModule, roofline_terms  # noqa: E402
+
+DRY = os.path.join(os.path.dirname(__file__), "..", "results", "dryrun")
+
+CELLS = {
+    "llama3_8b__train_4k": [
+        ("baseline", ""),
+        ("causal_skip", "causal_skip"),
+        ("dots_remat", "dots_remat"),
+        ("seq_shard", "seq_shard"),
+        ("skip+dots+sp", "causal_skip_dots_remat_seq_shard"),
+        ("zero3", "zero3"),
+        ("zero3+skip+dots", "causal_skip_dots_remat_zero3"),
+    ],
+    "granite_moe_1b_a400m__train_4k": [
+        ("baseline", ""),
+        ("dp_over_model", "dp_over_model"),
+        ("dp+skip+dots", "causal_skip_dots_remat_dp_over_model"),
+        ("dp+moe_local", "dp_over_model_moe_local"),
+        ("dp+local+sk+dt", "causal_skip_dots_remat_dp_over_model_moe_local"),
+    ],
+    "jamba_1_5_large_398b__train_4k": [
+        ("baseline", ""),
+        ("dots_remat", "dots_remat"),
+        ("seq_shard", "seq_shard"),
+        ("dots+sp", "dots_remat_seq_shard"),
+        ("zero3", "zero3"),
+        ("zero3+dots", "dots_remat_zero3"),
+        ("moe_ep", "moe_ep"),
+        ("moe_ep+dots", "dots_remat_moe_ep"),
+        ("moe_ep+dots+skip", "causal_skip_dots_remat_moe_ep"),
+    ],
+    "gemma2_27b__train_4k": [
+        ("baseline", ""),
+        ("zero3+skip+dots", "causal_skip_dots_remat_zero3"),
+    ],
+    "qwen2_moe_a2_7b__train_4k": [
+        ("baseline", ""),
+        ("zero3", "zero3"),
+        ("zero3+skip+dots", "causal_skip_dots_remat_zero3"),
+    ],
+    # serving-path hillclimb (decode/prefill cells)
+    "llama3_8b__decode_32k": [
+        ("baseline", ""),
+        ("no_fsdp", "no_fsdp"),
+        ("no_fsdp+cacheSP", "cache_seq_shard_no_fsdp"),
+    ],
+    "jamba_1_5_large_398b__decode_32k": [
+        ("baseline", ""),
+        ("no_fsdp", "no_fsdp"),
+    ],
+    "jamba_1_5_large_398b__prefill_32k": [
+        ("baseline", ""),
+        ("no_fsdp", "no_fsdp"),
+        ("no_fsdp+moe_ep", "moe_ep_no_fsdp"),
+    ],
+}
+
+
+def analyze(cell: str, suffix: str):
+    tag = f"{cell}__single" + (f"__{suffix}" if suffix else "")
+    hpath = os.path.join(DRY, tag + ".hlo.txt")
+    jpath = os.path.join(DRY, tag + ".json")
+    if not os.path.exists(hpath):
+        return None
+    rec = json.load(open(jpath))
+    cost = HloModule(open(hpath).read()).cost()
+    t = roofline_terms(cost)
+    arch, shape_name = cell.split("__", 1)
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    if shape.kind == "train":
+        mf = 6.0 * cfg.active_param_count() * shape.global_batch \
+            * shape.seq_len / rec["chips"]
+    elif shape.kind == "prefill":
+        mf = 2.0 * cfg.active_param_count() * shape.global_batch \
+            * shape.seq_len / rec["chips"]
+    else:  # decode: one token per sequence per step
+        mf = 2.0 * cfg.active_param_count() * shape.global_batch \
+            / rec["chips"]
+    step = max(t["compute_s"], t["memory_s"], t["collective_s"])
+    t["roofline_fraction"] = (mf / 197e12) / max(step, 1e-30)
+    t["usefulness"] = mf / max(t["flops"], 1.0)
+    t["temp_gb"] = rec.get("temp_size_in_bytes", 0) / 1e9
+    return t
+
+
+def main():
+    out = {}
+    for cell, variants in CELLS.items():
+        rows = []
+        for name, suffix in variants:
+            t = analyze(cell, suffix)
+            if t is None:
+                continue
+            rows.append({"variant": name, **{k: t[k] for k in (
+                "compute_s", "memory_s", "collective_s", "dominant",
+                "roofline_fraction", "usefulness", "temp_gb", "flops",
+                "wire_bytes")}})
+        out[cell] = rows
+        print(f"\n== {cell} ==")
+        print(f"{'variant':14s} {'compute':>9s} {'memory':>9s} {'coll':>9s} "
+              f"{'dom':>11s} {'frac':>7s} {'useful':>7s} {'tempGB':>7s}")
+        for r in rows:
+            print(f"{r['variant']:14s} {r['compute_s']:9.3f} "
+                  f"{r['memory_s']:9.3f} {r['collective_s']:9.3f} "
+                  f"{r['dominant']:>11s} {r['roofline_fraction']:7.3f} "
+                  f"{r['usefulness']:7.3f} {r['temp_gb']:7.1f}")
+    with open(os.path.join(os.path.dirname(__file__), "..", "results",
+                           "perf_iterations.json"), "w") as f:
+        json.dump(out, f, indent=1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,95 @@
+"""§Roofline: three-term roofline per (arch x shape) from the dry-run HLO.
+
+Reads results/dryrun/<arch>__<shape>__single.{json,hlo.txt}, runs the
+while-corrected HLO analyzer, and emits results/roofline.json plus a
+markdown table for EXPERIMENTS.md.
+
+  compute_s  = FLOPs_per_chip / 197e12
+  memory_s   = HBM_bytes_per_chip / 819e9
+  coll_s     = wire_bytes_per_chip / 50e9
+  MODEL_FLOPS = c * N_active * tokens   (c=6 train fwd+bwd, c=2 fwd-only)
+  usefulness  = MODEL_FLOPS_per_chip / HLO_FLOPs_per_chip
+"""
+from __future__ import annotations
+
+import json
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.configs import ARCHS, SHAPES, get_config          # noqa: E402
+from repro.roofline.analyze import HloModule, roofline_terms  # noqa: E402
+
+DRY = os.path.join(os.path.dirname(__file__), "..", "results", "dryrun")
+OUT = os.path.join(os.path.dirname(__file__), "..", "results",
+                   "roofline.json")
+
+
+def model_flops(cfg, shape) -> float:
+    n = cfg.active_param_count()
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n * tokens
+    # decode: one token per sequence per step
+    return 2.0 * n * shape.global_batch
+
+
+def analyze_cell(arch: str, shape_name: str, mesh: str = "single"):
+    tag = f"{arch}__{shape_name}__{mesh}"
+    jpath = os.path.join(DRY, tag + ".json")
+    hpath = os.path.join(DRY, tag + ".hlo.txt")
+    if not os.path.exists(jpath):
+        return None
+    rec = json.load(open(jpath))
+    if not rec.get("ok") or not os.path.exists(hpath):
+        return rec
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    cost = HloModule(open(hpath).read()).cost()
+    terms = roofline_terms(cost)
+    mf = model_flops(cfg, shape) / rec["chips"]
+    terms["model_flops_per_chip"] = mf
+    terms["usefulness"] = mf / max(cost.flops, 1.0)
+    # roofline fraction: the useful-compute time over the modeled step time
+    ideal = mf / 197e12
+    step = max(terms["compute_s"], terms["memory_s"], terms["collective_s"])
+    terms["roofline_fraction"] = ideal / max(step, 1e-30)
+    rec["roofline"] = terms
+    return rec
+
+
+def main():
+    rows = []
+    for arch in (a for a in ARCHS if a != "googlenet"):
+        cfg = get_config(arch)
+        shapes = ["train_4k", "prefill_32k", "decode_32k"] + \
+            (["long_500k"] if cfg.sub_quadratic else [])
+        for s in shapes:
+            print(f"[roofline] {arch} {s}", flush=True)
+            rec = analyze_cell(arch, s)
+            if rec is not None:
+                rows.append(rec)
+    with open(OUT, "w") as f:
+        json.dump(rows, f, indent=1)
+
+    # markdown table
+    print("\n| arch | shape | compute_s | memory_s | coll_s | dominant | "
+          "useful | roofline_frac |")
+    print("|---|---|---|---|---|---|---|---|")
+    for r in rows:
+        t = r.get("roofline")
+        if not t:
+            print(f"| {r['arch']} | {r['shape']} | - | - | - | FAILED | - | - |")
+            continue
+        print(f"| {r['arch']} | {r['shape']} | {t['compute_s']:.4f} | "
+              f"{t['memory_s']:.4f} | {t['collective_s']:.4f} | "
+              f"{t['dominant']} | {t['usefulness']:.3f} | "
+              f"{t['roofline_fraction']:.3f} |")
+
+
+if __name__ == "__main__":
+    main()

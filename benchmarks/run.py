@@ -1,0 +1,66 @@
+"""Benchmark harness — one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows:
+  t1        — Table-1 analogue: per-algorithm resource profiles of two
+              independent inception convolutions.
+  t2        — Table-2 analogue: workspace memory vs runtime per conv
+              algorithm (C4 non-correlation).
+  gemm      — the GEMM algorithm zoo (LM-scale analogue).
+  makespan  — serial vs concurrency-aware scheduling on GoogleNet (the
+              paper's proposal, modeled TPU makespan) + the 27-cases count.
+  stacked   — intra-chip stacked branch GEMM vs per-branch GEMMs.
+  roofline  — summary of the dry-run roofline table (if generated).
+
+Wall times are XLA-CPU (this host); modeled columns are TPU-v5e analytic.
+"""
+from __future__ import annotations
+
+import json
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+
+def _emit(rows):
+    for r in rows:
+        name = r.pop("table")
+        us = r.pop("us_per_call", "")
+        derived = ";".join(f"{k}={v}" for k, v in r.items())
+        print(f"{name},{us},{derived}", flush=True)
+
+
+def main() -> None:
+    from benchmarks.paper_tables import (matmul_algorithm_table,
+                                         table1_resource_profiles,
+                                         table2_workspace_vs_time)
+    from benchmarks.branch_parallel_bench import (
+        fused_complementary_bench, makespan_table, stacked_branch_gemm_bench)
+
+    print("name,us_per_call,derived")
+    _emit(table1_resource_profiles())
+    _emit(table2_workspace_vs_time())
+    _emit(matmul_algorithm_table())
+    _emit(makespan_table())
+    _emit(stacked_branch_gemm_bench())
+    _emit(fused_complementary_bench())
+
+    # roofline summary (from results/roofline.json if the dry-run ran)
+    rl = os.path.join(os.path.dirname(__file__), "..", "results",
+                      "roofline.json")
+    if os.path.exists(rl):
+        rows = json.load(open(rl))
+        for r in rows:
+            t = r.get("roofline")
+            if not t:
+                continue
+            print(f"roofline,,arch={r['arch']};shape={r['shape']};"
+                  f"dominant={t['dominant']};compute_s={t['compute_s']:.4f};"
+                  f"memory_s={t['memory_s']:.4f};"
+                  f"coll_s={t['collective_s']:.4f};"
+                  f"useful={t['usefulness']:.3f};"
+                  f"roofline_frac={t['roofline_fraction']:.3f}", flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,77 @@
+"""MoE experts as the paper's branches: spatial partitioning at mesh scale.
+
+  PYTHONPATH=src XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+      python examples/moe_expert_parallel.py
+
+Experts ARE independent branches (DESIGN.md §4): this example shards the
+granite-MoE reduced config over a (data=4, model=2) mesh — expert weights
+partitioned over the ``model`` axis (the inter-SM partitioning analogue) —
+and shows (a) identical loss to single-device execution, (b) the collective
+schedule GSPMD emits for the fork (dispatch) and join (combine), and (c) a
+few training steps under the production step function.
+"""
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_reduced
+from repro.launch import steps as ST
+from repro.models import transformer as T
+from repro.sharding import param_specs, specs as SH
+
+
+def main():
+    cfg = get_reduced("granite_moe_1b_a400m")
+    params = T.init_params(cfg, jax.random.PRNGKey(0))
+    opt = ST.make_optimizer(cfg)
+    state = opt.init(params)
+    key = jax.random.PRNGKey(1)
+    batch = {"tokens": jax.random.randint(key, (8, 64), 0, cfg.vocab)}
+    batch["labels"] = batch["tokens"]
+    fn = ST.make_train_step(cfg, opt, remat=False)
+
+    # single device reference
+    _, _, m_ref = jax.jit(fn)(params, state, batch)
+    print(f"[1] single-device loss = {float(m_ref['loss']):.5f}")
+
+    # expert-parallel mesh
+    mesh = jax.make_mesh((4, 2), ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    with SH.activations_on(mesh):
+        ps = param_specs(params, mesh)
+        spec = jax.tree.leaves(
+            ps["blocks"][0]["moe"], is_leaf=lambda x: hasattr(x, "spec"))[1]
+        print(f"[2] expert w_in spec (E sharded over 'model'): {spec.spec}")
+        params_sh = jax.device_put(params, ps)
+        state_sh = {"step": state["step"],
+                    "m": jax.device_put(state["m"], ps),
+                    "v": jax.device_put(state["v"], ps)}
+        batch_sh = jax.device_put(batch,
+                                  ST.batch_shardings(cfg, mesh, batch))
+        jitted = jax.jit(fn)
+        lowered = jitted.lower(params_sh, state_sh, batch_sh)
+        hlo = lowered.compile().as_text()
+        colls = {}
+        for kind in ("all-gather", "all-reduce", "reduce-scatter",
+                     "all-to-all", "collective-permute"):
+            n = hlo.count(f" {kind}(")
+            if n:
+                colls[kind] = n
+        print(f"[3] collective schedule for the fork/join: {colls}")
+
+        p, s, m = jitted(params_sh, state_sh, batch_sh)
+        print(f"[4] expert-parallel loss = {float(m['loss']):.5f} "
+              f"(matches: {abs(float(m['loss']) - float(m_ref['loss'])) < 1e-2})")
+        for i in range(5):
+            p, s, m = jitted(p, s, batch_sh)
+        print(f"[5] after 5 EP steps: loss={float(m['loss']):.5f}, "
+              f"drop-free dispatch, grad_norm={float(m['grad_norm']):.3f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,39 @@
+"""Architecture registry: ``get_config(arch)`` / ``--arch <id>``.
+
+Ten assigned architectures (exact public configs) + the paper's native
+GoogleNet CNN.  Each <id>.py defines ``CONFIG`` and ``reduced()`` (the
+smoke-test config of the same family).
+"""
+from __future__ import annotations
+
+import importlib
+
+from repro.configs.base import (  # noqa: F401
+    BlockSpec, ModelConfig, MoESpec, SSMSpec, ShapeConfig, SHAPES, TrainConfig,
+)
+
+ARCHS = (
+    "jamba_1_5_large_398b",
+    "granite_moe_1b_a400m",
+    "qwen2_moe_a2_7b",
+    "internvl2_1b",
+    "whisper_tiny",
+    "codeqwen1_5_7b",
+    "minitron_8b",
+    "llama3_8b",
+    "gemma2_27b",
+    "mamba2_370m",
+    "googlenet",          # paper-native CNN (extra)
+)
+
+_ALIASES = {a.replace("_", "-"): a for a in ARCHS}
+
+
+def get_config(arch: str) -> ModelConfig:
+    arch = _ALIASES.get(arch, arch)
+    return importlib.import_module(f"repro.configs.{arch}").CONFIG
+
+
+def get_reduced(arch: str) -> ModelConfig:
+    arch = _ALIASES.get(arch, arch)
+    return importlib.import_module(f"repro.configs.{arch}").reduced()

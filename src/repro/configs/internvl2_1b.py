@@ -1,0 +1,27 @@
+"""internvl2-1b [vlm] — 24L d896 14H (GQA kv=2) d_ff=4864 vocab=151655.
+InternViT frontend + Qwen2-0.5B backbone [arXiv:2404.16821; hf]
+
+Frontend is a STUB per the assignment: ``input_specs()`` supplies
+precomputed patch embeddings (B, 256, d) prepended to the token stream.
+"""
+import dataclasses
+
+from repro.configs.base import BlockSpec, ModelConfig
+
+CONFIG = ModelConfig(
+    name="internvl2-1b", family="vlm",
+    d_model=896, n_layers=24, vocab=151655,
+    n_heads=14, n_kv_heads=2, head_dim=64, d_ff=4864,
+    pattern=(BlockSpec(mixer="attn", mlp="dense"),),
+    rope_theta=1000000.0, qkv_bias=True, activation="silu",
+    tie_embeddings=True,
+    frontend="patch", frontend_len=256,
+    notes=("backbone linear: selection-only; 14 heads !| 16-way axis -> "
+           "GSPMD pads head shards (DESIGN.md §Arch-applicability)"),
+)
+
+
+def reduced():
+    return dataclasses.replace(
+        CONFIG, name="internvl2-reduced", d_model=128, n_layers=4, vocab=512,
+        n_heads=4, n_kv_heads=2, head_dim=32, d_ff=256, frontend_len=16)

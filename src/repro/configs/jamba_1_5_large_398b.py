@@ -1,0 +1,41 @@
+"""jamba-1.5-large-398b [hybrid] — 72L d8192 64H (GQA kv=8) d_ff=24576
+vocab=65536, MoE 16e top-2, Mamba:attention 1:7 interleave, MoE every 2
+layers.  [arXiv:2403.19887; hf]
+
+TPU adaptation note (DESIGN.md §8): Jamba's Mamba-1 layers are implemented
+as Mamba-2 SSD (chunked TPU kernel), d_inner = 2*d, 256 heads x 64,
+state 128, 8 groups — FLOP-comparable, kernel-friendly.
+"""
+import dataclasses
+
+from repro.configs.base import BlockSpec, ModelConfig, MoESpec, SSMSpec
+
+_P = []
+for i in range(8):
+    mixer = "attn" if i == 4 else "mamba"      # 1 attn : 7 mamba per period
+    mlp = "moe" if i % 2 == 1 else "dense"     # MoE every 2 layers
+    _P.append(BlockSpec(mixer=mixer, mlp=mlp))
+
+CONFIG = ModelConfig(
+    name="jamba-1.5-large-398b", family="hybrid",
+    d_model=8192, n_layers=72, vocab=65536,
+    n_heads=64, n_kv_heads=8, head_dim=128, d_ff=24576,
+    pattern=tuple(_P),
+    moe=MoESpec(n_experts=16, top_k=2, d_expert=24576),
+    ssm=SSMSpec(d_inner=16384, n_heads=256, head_dim=64, d_state=128,
+                n_groups=8),
+    rope_theta=None,     # Jamba uses no positional embeddings (Mamba provides)
+    activation="silu", tie_embeddings=True,
+    sub_quadratic=True,  # hybrid: runs long_500k
+    notes=("most-representative arch: MoE experts = branches (EP, 16e | "
+           "16-way), hybrid mamba/attn fork-join at the graph level"),
+)
+
+
+def reduced():
+    return dataclasses.replace(
+        CONFIG, name="jamba-reduced", d_model=128, n_layers=8, vocab=512,
+        n_heads=4, n_kv_heads=2, head_dim=32, d_ff=256,
+        moe=MoESpec(n_experts=4, top_k=2, d_expert=256, capacity_factor=4.0),
+        ssm=SSMSpec(d_inner=256, n_heads=8, head_dim=32, d_state=32,
+                    n_groups=2, chunk=32))

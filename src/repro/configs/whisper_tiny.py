@@ -1,0 +1,31 @@
+"""whisper-tiny [audio] — enc-dec, 4L d384 6H (MHA kv=6) d_ff=1536
+vocab=51865, conv frontend STUB.  [arXiv:2212.04356; unverified]
+
+Assignment semantics: shapes apply to the DECODER token stream (decode_* =
+one token against a seq_len KV cache); the encoder consumes a fixed stub
+context of 1500 precomputed frame embeddings.  Real Whisper caps target
+length at 448 — the assigned shapes are applied literally (DESIGN.md §5).
+"""
+import dataclasses
+
+from repro.configs.base import BlockSpec, ModelConfig
+
+CONFIG = ModelConfig(
+    name="whisper-tiny", family="audio",
+    d_model=384, n_layers=4, vocab=51865,
+    n_heads=6, n_kv_heads=6, head_dim=64, d_ff=1536,
+    pattern=(BlockSpec(mixer="attn", mlp="dense", cross=True),),
+    rope_theta=None,            # whisper uses learned/sinusoidal abs pos
+    activation="gelu", norm="ln", tie_embeddings=True,
+    enc_dec=True, n_enc_layers=4, enc_context_len=1500,
+    frontend="frame",
+    notes=("enc/dec self+cross attention per decoder layer form a branch "
+           "pair given inputs; conv frontend stubbed per assignment"),
+)
+
+
+def reduced():
+    return dataclasses.replace(
+        CONFIG, name="whisper-reduced", d_model=128, n_layers=2, vocab=512,
+        n_heads=4, n_kv_heads=4, head_dim=32, d_ff=256,
+        n_enc_layers=2, enc_context_len=64)

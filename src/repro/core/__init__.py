@@ -1,0 +1,18 @@
+"""The paper's primary contribution: inter-op parallelism for non-linear
+networks — op graph, analytic cost model, concurrency-aware algorithm
+selection, workspace-budgeted co-execution scheduling, and branch-parallel
+execution (stacked kernels intra-chip, spatial mesh partitioning inter-chip).
+"""
+from repro.core.graph import Op, OpGraph                      # noqa: F401
+from repro.core.cost_model import (                            # noqa: F401
+    OpProfile, profile, op_time, best_algorithm, co_execution_time,
+    serial_time, spatial_time, supported_algorithms,
+    PEAK_FLOPS, HBM_BW, ICI_BW, VMEM_BYTES, HBM_BYTES,
+)
+from repro.core.selector import (                              # noqa: F401
+    Selection, select_fastest, select_concurrent, select_for_group,
+)
+from repro.core.scheduler import CoGroup, Schedule, schedule, compare_policies  # noqa: F401
+from repro.core.branch_parallel import (                       # noqa: F401
+    Branches, run, run_xla, run_spatial, run_stacked_matmul,
+)

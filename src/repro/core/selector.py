@@ -1,0 +1,124 @@
+"""Algorithm selection — per-op-fastest vs concurrency-aware (paper C3).
+
+Two policies:
+
+  select_fastest    — what TF r1.10 does (paper Sec 2.1): per-op argmin of
+                      modeled time, ignoring workspace and co-execution.
+  select_concurrent — the paper's proposal: for each co-execution group,
+                      jointly choose algorithms minimizing the *group
+                      makespan* under the co-execution model, subject to
+                      the HBM-workspace and VMEM budgets (C2/C4).  Groups
+                      of <= 4 ops are solved exactly (product space is
+                      tiny); larger groups greedily.
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+
+from repro.core import cost_model as cm
+from repro.core.graph import Op, OpGraph
+
+
+@dataclasses.dataclass
+class Selection:
+    """algorithm choice + modeled profile per op."""
+    algorithms: dict[str, str]
+    profiles: dict[str, cm.OpProfile]
+
+    def time(self, name: str) -> float:
+        return self.profiles[name].time
+
+
+def select_fastest(graph: OpGraph) -> Selection:
+    algs, profs = {}, {}
+    for name, op in graph.ops.items():
+        a, _ = cm.best_algorithm(op)
+        algs[name] = a
+        profs[name] = cm.profile(op, a)
+    return Selection(algs, profs)
+
+
+def _group_feasible(profiles: list[cm.OpProfile],
+                    hbm_budget: float, vmem_budget: float) -> bool:
+    return (sum(p.workspace_bytes for p in profiles) <= hbm_budget
+            and sum(p.vmem_bytes for p in profiles) <= vmem_budget)
+
+
+def select_for_group(ops: list[Op], hbm_budget: float = cm.HBM_BYTES * 0.25,
+                     vmem_budget: float = cm.VMEM_BYTES) -> tuple[dict[str, str], float]:
+    """Joint algorithm choice minimizing co-execution makespan for one group.
+
+    Returns ({op: algorithm}, modeled group time).  If no combination fits
+    the budgets, falls back to per-op-fastest run *serially* (the paper's
+    C2: workspace exhaustion forces serialization).
+    """
+    if len(ops) == 1:
+        a, t = cm.best_algorithm(ops[0])
+        return {ops[0].name: a}, t
+
+    spaces = [cm.supported_algorithms(op) for op in ops]
+    best: tuple[float, dict[str, str]] | None = None
+    n_combos = 1
+    for s in spaces:
+        n_combos *= len(s)
+    if n_combos <= 256:
+        combos = itertools.product(*spaces)
+    else:  # greedy: fastest for op 0, then coordinate descent
+        combos = [_greedy_combo(ops, spaces, hbm_budget, vmem_budget)]
+    for combo in combos:
+        profs = [cm.profile(op, a) for op, a in zip(ops, combo)]
+        if not _group_feasible(profs, hbm_budget, vmem_budget):
+            continue
+        t = cm.co_execution_time(profs)
+        if best is None or t < best[0]:
+            best = (t, dict(zip((o.name for o in ops), combo)))
+    if best is None:  # C2: nothing fits together -> serialize
+        sel = {}
+        t = 0.0
+        for op in ops:
+            a, ti = cm.best_algorithm(op)
+            sel[op.name] = a
+            t += ti
+        return sel, t
+    return best[1], best[0]
+
+
+def _greedy_combo(ops, spaces, hbm_budget, vmem_budget):
+    combo = [cm.best_algorithm(op)[0] for op in ops]
+    improved = True
+    while improved:
+        improved = False
+        for i, op in enumerate(ops):
+            cur = list(combo)
+            base_profs = [cm.profile(o, a) for o, a in zip(ops, cur)]
+            base = cm.co_execution_time(base_profs) \
+                if _group_feasible(base_profs, hbm_budget, vmem_budget) \
+                else float("inf")
+            for a in spaces[i]:
+                cur[i] = a
+                profs = [cm.profile(o, aa) for o, aa in zip(ops, cur)]
+                if not _group_feasible(profs, hbm_budget, vmem_budget):
+                    continue
+                t = cm.co_execution_time(profs)
+                if t < base:
+                    base = t
+                    combo = list(cur)
+                    improved = True
+    return tuple(combo)
+
+
+def select_concurrent(graph: OpGraph, groups: list[list[str]],
+                      hbm_budget: float = cm.HBM_BYTES * 0.25,
+                      vmem_budget: float = cm.VMEM_BYTES) -> Selection:
+    """Concurrency-aware selection over a schedule's co-execution groups."""
+    algs: dict[str, str] = {}
+    for g in groups:
+        ops = [graph.ops[n] for n in g]
+        sel, _ = select_for_group(ops, hbm_budget, vmem_budget)
+        algs.update(sel)
+    for name, op in graph.ops.items():   # singletons not covered by groups
+        if name not in algs:
+            algs[name] = cm.best_algorithm(op)[0]
+    profs = {n: cm.profile(graph.ops[n], a) for n, a in algs.items()}
+    return Selection(algs, profs)

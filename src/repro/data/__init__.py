@@ -1,0 +1,1 @@
+from repro.data.pipeline import SyntheticLM, SyntheticImages, Pipeline  # noqa: F401

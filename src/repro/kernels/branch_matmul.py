@@ -1,0 +1,58 @@
+"""Stacked independent GEMMs — the intra-chip co-execution primitive.
+
+The paper's intra-SM partitioning shares one SM between blocks of different
+kernels.  A TPU core cannot time-share two ``pallas_call``s, so the analogue
+is *batching*: G independent same-shape branch GEMMs (Inception branch
+projections, MoE experts, Winograd's 16 pointwise GEMMs) are stacked into a
+single kernel with a leading grid axis.  The chip then pipelines HBM loads of
+branch g+1 under the MXU work of branch g — the memory stalls of one branch
+hidden by the compute of another, which is exactly the paper's Table-1
+complementarity argument, realized through the TPU's (automatic) DMA/compute
+overlap instead of warp scheduling.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _bmm_kernel(x_ref, y_ref, o_ref, acc_ref, *, nk: int):
+    k = pl.program_id(3)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jnp.dot(
+        x_ref[...], y_ref[...], preferred_element_type=jnp.float32
+    )
+
+    @pl.when(k == nk - 1)
+    def _store():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+def branch_matmul(x, y, *, bm: int = 128, bn: int = 128, bk: int = 128,
+                  interpret: bool = False):
+    """x: (G, M, K), y: (G, K, N) -> (G, M, N); one fused grid over branches."""
+    g, m, k = x.shape
+    g2, k2, n = y.shape
+    assert g == g2 and k == k2, (x.shape, y.shape)
+    assert m % bm == 0 and n % bn == 0 and k % bk == 0
+    nk = k // bk
+    return pl.pallas_call(
+        functools.partial(_bmm_kernel, nk=nk),
+        grid=(g, m // bm, n // bn, nk),
+        in_specs=[
+            pl.BlockSpec((None, bm, bk), lambda gg, i, j, kk: (gg, i, kk)),
+            pl.BlockSpec((None, bk, bn), lambda gg, i, j, kk: (gg, kk, j)),
+        ],
+        out_specs=pl.BlockSpec((None, bm, bn), lambda gg, i, j, kk: (gg, i, j)),
+        out_shape=jax.ShapeDtypeStruct((g, m, n), x.dtype),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        interpret=interpret,
+    )(x, y)

@@ -1,0 +1,158 @@
+"""Flash attention Pallas kernel (GQA / causal / sliding-window / softcap).
+
+Algorithm zoo for attention (paper C3/C4 applied to the LM hot-spot):
+
+  flash        — streaming online-softmax Pallas kernel: O(bq*bk) VMEM
+                 working set, zero HBM workspace.  Compute-bound at train
+                 shapes, HBM-bound at decode.
+  materialized — scores matrix materialized in HBM
+                 (workspace = B*Hq*Sq*Skv*4 bytes), lowered by XLA.  The
+                 "fast but workspace-hungry" cuDNN-FFT analogue; wins for
+                 tiny Skv, blocks co-execution for long context.
+
+Layout: q (B, Sq, Hq, D); k, v (B, Skv, Hkv, D); Hq % Hkv == 0 (GQA).
+Query position i is aligned to key position i + (Skv - Sq) so the same
+kernel serves training (Sq == Skv) and single-token decode (Sq == 1).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+_NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+                  nk: int, bq: int, bk: int, scale: float, causal: bool,
+                  window: int | None, softcap: float | None,
+                  sq: int, skv: int):
+    j = pl.program_id(3)
+
+    @pl.when(j == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, _NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0, 0].astype(jnp.float32)          # (bq, D)
+    k = k_ref[0, 0].astype(jnp.float32)          # (bk, D)
+    v = v_ref[0, 0].astype(jnp.float32)          # (bk, D)
+
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+    if softcap is not None:
+        s = softcap * jnp.tanh(s / softcap)
+
+    qpos = pl.program_id(2) * bq + jax.lax.broadcasted_iota(
+        jnp.int32, (bq, bk), 0) + (skv - sq)
+    kpos = j * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+    mask = kpos < skv                            # key padding
+    if causal:
+        mask &= kpos <= qpos
+    if window is not None:
+        mask &= kpos > qpos - window
+    s = jnp.where(mask, s, _NEG_INF)
+
+    m_prev = m_ref[:, :1]                        # (bq, 1)
+    l_prev = l_ref[:, :1]
+    m_cur = jnp.max(s, axis=-1, keepdims=True)   # (bq, 1)
+    m_new = jnp.maximum(m_prev, m_cur)
+    alpha = jnp.exp(m_prev - m_new)
+    p = jnp.exp(s - m_new)                       # masked lanes: exp(-inf)=0
+    l_new = l_prev * alpha + jnp.sum(p, axis=-1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+    m_ref[...] = jnp.broadcast_to(m_new, m_ref.shape)
+    l_ref[...] = jnp.broadcast_to(l_new, l_ref.shape)
+
+    @pl.when(j == nk - 1)
+    def _store():
+        l = l_ref[:, :1]
+        l = jnp.where(l == 0.0, 1.0, l)          # fully-masked rows -> 0 out
+        o_ref[0, 0] = (acc_ref[...] / l).astype(o_ref.dtype)
+
+
+def flash_attention(q, k, v, *, causal: bool = True, window: int | None = None,
+                    softcap: float | None = None, scale: float | None = None,
+                    block_q: int = 128, block_k: int = 128,
+                    interpret: bool = False):
+    b, sq, hq, d = q.shape
+    _, skv, hkv, _ = k.shape
+    assert hq % hkv == 0, (hq, hkv)
+    group = hq // hkv
+    scale = scale if scale is not None else d ** -0.5
+
+    bq = min(block_q, max(sq, 8))
+    bk = min(block_k, max(skv, 128))
+    sq_p = -(-sq // bq) * bq
+    skv_p = -(-skv // bk) * bk
+    qt = jnp.pad(q.transpose(0, 2, 1, 3), ((0, 0), (0, 0), (0, sq_p - sq), (0, 0)))
+    kt = jnp.pad(k.transpose(0, 2, 1, 3), ((0, 0), (0, 0), (0, skv_p - skv), (0, 0)))
+    vt = jnp.pad(v.transpose(0, 2, 1, 3), ((0, 0), (0, 0), (0, skv_p - skv), (0, 0)))
+    nq, nk = sq_p // bq, skv_p // bk
+
+    out = pl.pallas_call(
+        functools.partial(_flash_kernel, nk=nk, bq=bq, bk=bk, scale=scale,
+                          causal=causal, window=window, softcap=softcap,
+                          sq=sq, skv=skv),
+        grid=(b, hq, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, 1, bq, d), lambda bb, h, i, j: (bb, h, i, 0)),
+            pl.BlockSpec((1, 1, bk, d),
+                         lambda bb, h, i, j, group=group: (bb, h // group, j, 0)),
+            pl.BlockSpec((1, 1, bk, d),
+                         lambda bb, h, i, j, group=group: (bb, h // group, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, bq, d), lambda bb, h, i, j: (bb, h, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, hq, sq_p, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, 128), jnp.float32),   # running max (lane-bcast)
+            pltpu.VMEM((bq, 128), jnp.float32),   # running denom
+            pltpu.VMEM((bq, d), jnp.float32),     # output accumulator
+        ],
+        interpret=interpret,
+    )(qt, kt, vt)
+    return out[:, :, :sq].transpose(0, 2, 1, 3)
+
+
+def attention_materialized(q, k, v, *, causal: bool = True,
+                           window: int | None = None,
+                           softcap: float | None = None,
+                           scale: float | None = None):
+    """XLA-lowered materialized-scores algorithm (big HBM workspace)."""
+    b, sq, hq, d = q.shape
+    _, skv, hkv, _ = k.shape
+    group = hq // hkv
+    scale = scale if scale is not None else d ** -0.5
+    qf = q.astype(jnp.float32).reshape(b, sq, hkv, group, d)
+    logits = jnp.einsum("bqhgd,bkhd->bhgqk", qf, k.astype(jnp.float32)) * scale
+    if softcap is not None:
+        logits = softcap * jnp.tanh(logits / softcap)
+    qpos = jnp.arange(sq) + (skv - sq)
+    kpos = jnp.arange(skv)
+    mask = jnp.ones((sq, skv), bool)
+    if causal:
+        mask &= kpos[None, :] <= qpos[:, None]
+    if window is not None:
+        mask &= kpos[None, :] > qpos[:, None] - window
+    logits = jnp.where(mask[None, None, None], logits, _NEG_INF)
+    p = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhgqk,bkhd->bqhgd", p, v.astype(jnp.float32))
+    return out.reshape(b, sq, hq, d).astype(q.dtype)
+
+
+ATTENTION_ALGORITHMS = {
+    "flash": flash_attention,
+    "materialized": lambda q, k, v, interpret=False, **kw:
+        attention_materialized(q, k, v, **kw),
+}
+
+
+def attention_workspace_bytes(algorithm: str, b, sq, skv, hq) -> int:
+    if algorithm == "materialized":
+        return b * hq * sq * skv * 4
+    return 0

@@ -1,0 +1,99 @@
+"""Fused complementary-branch kernel — intra-SM co-execution, literally.
+
+The paper's intra-SM partitioning argument (Table 1): co-locate a
+compute-bound kernel with a memory-bound kernel so the latter's memory
+stalls hide under the former's ALU work.  A TPU core cannot time-share two
+``pallas_call``s, so this kernel makes the co-location explicit: ONE grid
+executes
+
+  branch A (MXU-bound):  c = x @ y            (tiled GEMM)
+  branch B (HBM-bound):  r = sum_rows(silu(z))  (streamed reduction)
+
+Each grid step issues the MXU matmul for A's tile while the DMA engine
+streams the next slice of B from HBM — B's bytes ride entirely under A's
+FLOPs (the Pallas pipeline double-buffers every input).  This is the
+``co_execution_time = max(sum_compute, sum_memory)`` model of
+``core/cost_model.py`` made concrete, and the strongest TPU analogue of the
+paper's PRECOMP_GEMM + FFT_TILING pairing.
+
+The B tensor is partitioned across A's whole grid: slice index = the
+linearized (i, j, k) grid position, so B's streaming is spread evenly over
+the kernel's lifetime.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _fused_kernel(x_ref, y_ref, z_ref, c_ref, r_ref, acc_ref, *, nk: int):
+    k = pl.program_id(2)
+
+    # branch A: accumulate the GEMM tile (MXU)
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jnp.dot(x_ref[...], y_ref[...],
+                            preferred_element_type=jnp.float32)
+
+    @pl.when(k == nk - 1)
+    def _store():
+        c_ref[...] = acc_ref[...].astype(c_ref.dtype)
+
+    # branch B: reduce this grid step's slice of z (VPU + HBM stream);
+    # partial sums land in r's per-slice row, summed by the wrapper.
+    zb = z_ref[...].astype(jnp.float32)
+    r_ref[0, :] = jax.nn.silu(zb).sum(axis=0).astype(r_ref.dtype)
+
+
+def fused_gemm_reduce(x, y, z, *, bm: int = 128, bn: int = 128,
+                      bk: int = 128, interpret: bool = False):
+    """Returns (x @ y, silu(z).sum(0)).
+
+    x: (M, K), y: (K, N) — padded to block multiples by the caller (ops.py
+    pads); z: (R, C) with R divisible by the grid size (wrapper pads).
+    """
+    m, kdim = x.shape
+    _, n = y.shape
+    assert m % bm == 0 and n % bn == 0 and kdim % bk == 0
+    gm, gn, nk = m // bm, n // bn, kdim // bk
+    steps = gm * gn * nk
+    r_, c_ = z.shape
+    rows = -(-r_ // steps)
+    zp = jnp.pad(z, ((0, rows * steps - r_), (0, 0)))
+
+    def z_index(i, j, kk):
+        return (i * gn * nk + j * nk + kk, 0)
+
+    c, partials = pl.pallas_call(
+        functools.partial(_fused_kernel, nk=nk),
+        grid=(gm, gn, nk),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+            pl.BlockSpec((rows, zp.shape[1]), z_index),
+        ],
+        out_specs=[
+            pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+            pl.BlockSpec((1, zp.shape[1]), lambda i, j, kk:
+                         (i * gn * nk + j * nk + kk, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((m, n), x.dtype),
+            jax.ShapeDtypeStruct((steps, zp.shape[1]), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        interpret=interpret,
+    )(x, y, zp)
+    return c, partials.sum(axis=0).astype(z.dtype)
+
+
+def fused_gemm_reduce_ref(x, y, z):
+    c = jnp.dot(x, y, preferred_element_type=jnp.float32).astype(x.dtype)
+    r = jax.nn.silu(z.astype(jnp.float32)).sum(0).astype(z.dtype)
+    return c, r

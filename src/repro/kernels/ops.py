@@ -1,0 +1,135 @@
+"""Public jit-friendly wrappers over the kernel algorithm zoo.
+
+Every op takes ``algorithm=`` (the paper's central knob) and an
+``interpret=`` override; on a CPU-only host the Pallas kernels run in
+interpret mode automatically so the whole framework is testable without TPU.
+Wrappers pad to hardware-aligned block shapes and slice back.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import matmul as _mm
+from repro.kernels import conv2d as _conv
+from repro.kernels import flash_attention as _attn
+from repro.kernels import ssd as _ssd
+from repro.kernels import branch_matmul as _bmm
+
+
+@functools.cache
+def default_interpret() -> bool:
+    """Pallas interpret mode unless a real TPU backend is present."""
+    return jax.default_backend() != "tpu"
+
+
+def _round_up(x: int, m: int) -> int:
+    return -(-x // m) * m
+
+
+# ---------------------------------------------------------------------------
+# matmul
+# ---------------------------------------------------------------------------
+
+def matmul(x, y, *, algorithm: str = "mxu128", interpret: bool | None = None):
+    """(…, M, K) @ (K, N) with padding to MXU-aligned blocks."""
+    interpret = default_interpret() if interpret is None else interpret
+    lead = x.shape[:-2] if x.ndim > 2 else ()
+    m = int(jnp.prod(jnp.array(x.shape[:-1]))) if x.ndim > 2 else x.shape[0]
+    x2 = x.reshape(-1, x.shape[-1])
+    m, k = x2.shape
+    k2, n = y.shape
+    assert k == k2
+    bm, bn, bk = _mm.matmul_block_shape(algorithm)
+    mp, kp, np_ = _round_up(m, bm), _round_up(k, bk), _round_up(n, bn)
+    xp = jnp.pad(x2, ((0, mp - m), (0, kp - k)))
+    yp = jnp.pad(y, ((0, kp - k), (0, np_ - n)))
+    out = _mm.MATMUL_ALGORITHMS[algorithm](xp, yp, interpret=interpret)
+    out = out[:m, :n]
+    return out.reshape(*lead, x.shape[-2] if x.ndim > 2 else m, n) \
+        if x.ndim > 2 else out
+
+
+matmul_workspace_bytes = _mm.matmul_workspace_bytes
+matmul_vmem_bytes = _mm.matmul_vmem_bytes
+MATMUL_ALGORITHMS = tuple(_mm.MATMUL_ALGORITHMS)
+
+
+# ---------------------------------------------------------------------------
+# conv2d
+# ---------------------------------------------------------------------------
+
+def conv2d(x, w, *, stride: int = 1, padding: str = "SAME",
+           algorithm: str = "im2col_gemm", interpret: bool | None = None):
+    interpret = default_interpret() if interpret is None else interpret
+    fn = _conv.CONV2D_ALGORITHMS[algorithm]
+    return fn(x, w, stride=stride, padding=padding, interpret=interpret)
+
+
+conv2d_workspace_bytes = _conv.conv2d_workspace_bytes
+CONV2D_ALGORITHMS = tuple(_conv.CONV2D_ALGORITHMS)
+
+
+def conv2d_supported(algorithm: str, kh: int, kw: int, stride: int) -> bool:
+    """cuDNN-style support matrix ("DIRECT and WINOGRAD are not supported
+    for this input" — Table 2 footnote analogue)."""
+    if algorithm == "winograd3x3":
+        return (kh, kw) == (3, 3) and stride == 1
+    return True
+
+
+# ---------------------------------------------------------------------------
+# attention
+# ---------------------------------------------------------------------------
+
+def attention(q, k, v, *, causal: bool = True, window: int | None = None,
+              softcap: float | None = None, scale: float | None = None,
+              algorithm: str = "flash", block_q: int = 128, block_k: int = 128,
+              interpret: bool | None = None):
+    interpret = default_interpret() if interpret is None else interpret
+    if algorithm == "materialized":
+        return _attn.attention_materialized(
+            q, k, v, causal=causal, window=window, softcap=softcap, scale=scale)
+    return _attn.flash_attention(
+        q, k, v, causal=causal, window=window, softcap=softcap, scale=scale,
+        block_q=block_q, block_k=block_k, interpret=interpret)
+
+
+attention_workspace_bytes = _attn.attention_workspace_bytes
+ATTENTION_ALGORITHMS = tuple(_attn.ATTENTION_ALGORITHMS)
+
+
+# ---------------------------------------------------------------------------
+# ssd (Mamba-2)
+# ---------------------------------------------------------------------------
+
+def ssd(x, a_log, b, c, *, chunk: int = 128, d_skip=None,
+        algorithm: str = "chunked", interpret: bool | None = None):
+    interpret = default_interpret() if interpret is None else interpret
+    if algorithm == "quadratic":
+        return _ssd.ssd_quadratic(x, a_log, b, c, d_skip=d_skip)
+    return _ssd.ssd_chunked(x, a_log, b, c, chunk=chunk, d_skip=d_skip,
+                            interpret=interpret)
+
+
+ssd_workspace_bytes = _ssd.ssd_workspace_bytes
+SSD_ALGORITHMS = tuple(_ssd.SSD_ALGORITHMS)
+
+
+# ---------------------------------------------------------------------------
+# branch matmul (stacked independent GEMMs)
+# ---------------------------------------------------------------------------
+
+def branch_matmul(x, y, *, interpret: bool | None = None):
+    """(G, M, K) @ (G, K, N) -> (G, M, N), padded per-branch."""
+    interpret = default_interpret() if interpret is None else interpret
+    g, m, k = x.shape
+    _, _, n = y.shape
+    bm = bn = bk = 128
+    mp, kp, np_ = _round_up(m, bm), _round_up(k, bk), _round_up(n, bn)
+    xp = jnp.pad(x, ((0, 0), (0, mp - m), (0, kp - k)))
+    yp = jnp.pad(y, ((0, 0), (0, kp - k), (0, np_ - n)))
+    out = _bmm.branch_matmul(xp, yp, interpret=interpret)
+    return out[:, :m, :n]

@@ -1,0 +1,84 @@
+"""Pure-jnp oracles for every Pallas kernel (the ground truth for tests)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def matmul_ref(x, y):
+    return jnp.dot(x, y, preferred_element_type=jnp.float32).astype(x.dtype)
+
+
+def branch_matmul_ref(x, y):
+    return jnp.einsum("gmk,gkn->gmn", x, y,
+                      preferred_element_type=jnp.float32).astype(x.dtype)
+
+
+def conv2d_ref(x, w, *, stride: int = 1, padding: str = "SAME"):
+    return jax.lax.conv_general_dilated(
+        x, w, window_strides=(stride, stride), padding=padding,
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+        preferred_element_type=jnp.float32,
+    ).astype(x.dtype)
+
+
+def attention_ref(q, k, v, *, causal: bool = True, window: int | None = None,
+                  softcap: float | None = None, scale: float | None = None):
+    """Grouped-query attention oracle.
+
+    q: (B, Sq, Hq, D); k, v: (B, Skv, Hkv, D); Hq % Hkv == 0.
+    window: sliding-window size (tokens attend to the last `window` keys).
+    Query position i is aligned to key position i + (Skv - Sq) (decode case).
+    """
+    b, sq, hq, d = q.shape
+    _, skv, hkv, _ = k.shape
+    group = hq // hkv
+    scale = scale if scale is not None else d ** -0.5
+    qf = q.astype(jnp.float32).reshape(b, sq, hkv, group, d)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    logits = jnp.einsum("bqhgd,bkhd->bhgqk", qf, kf) * scale
+    if softcap is not None:
+        logits = softcap * jnp.tanh(logits / softcap)
+    qpos = jnp.arange(sq) + (skv - sq)
+    kpos = jnp.arange(skv)
+    mask = jnp.ones((sq, skv), bool)
+    if causal:
+        mask &= kpos[None, :] <= qpos[:, None]
+    if window is not None:
+        mask &= kpos[None, :] > qpos[:, None] - window
+    logits = jnp.where(mask[None, None, None], logits, -jnp.inf)
+    p = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhgqk,bkhd->bqhgd", p, vf)
+    return out.reshape(b, sq, hq, d).astype(q.dtype)
+
+
+def ssd_ref(x, a_log, b, c, *, dt=None, d_skip=None):
+    """Mamba-2 SSD oracle via the quadratic (attention-like) form.
+
+    x: (B, S, H, P)   inputs (already multiplied by dt if dt is None)
+    a_log: (B, S, H)  per-step log decay (negative); cumulative decay
+    b: (B, S, G, N)   input->state projections (G state groups, GQA-style)
+    c: (B, S, G, N)   state->output projections; H % G == 0
+    y[t] = sum_{s<=t} (prod_{r=s+1..t} exp(a_log[r])) * (c[t]·b[s]) * x[s]
+    """
+    bsz, s, h, p = x.shape
+    g = b.shape[2]
+    rep = h // g
+    xf = x.astype(jnp.float32)
+    al = a_log.astype(jnp.float32)
+    bf = b.astype(jnp.float32)
+    cf = c.astype(jnp.float32)
+    cum = jnp.cumsum(al, axis=1)                     # (B, S, H)
+    # L[t, s] = exp(cum[t] - cum[s]) for s <= t else 0 (mask inside exp:
+    # NaN-safe under autodiff)
+    diff = cum[:, :, None, :] - cum[:, None, :, :]   # (B, T, S, H)
+    ts = jnp.arange(s)
+    causal = ts[:, None] >= ts[None, :]
+    decay = jnp.exp(jnp.where(causal[None, :, :, None], diff, -1e30))
+    cb = jnp.einsum("btgn,bsgn->btsg", cf, bf)       # (B, T, S, G)
+    cb = jnp.repeat(cb, rep, axis=3)                 # (B, T, S, H)
+    y = jnp.einsum("btsh,btsh,bshp->bthp", cb, decay, xf)
+    if d_skip is not None:
+        y = y + d_skip.astype(jnp.float32)[None, None, :, None] * xf
+    return y.astype(x.dtype)

@@ -1,0 +1,149 @@
+"""Mamba-2 SSD (state-space duality) chunked-scan Pallas kernel.
+
+Algorithm zoo for the SSM mixer:
+
+  chunked   — the SSD blocked algorithm: a Pallas kernel computes, per
+              (batch, chunk) grid cell, the quadratic *intra-chunk* output
+              and the end-of-chunk state contribution; a cheap inter-chunk
+              linear recurrence (jnp scan) threads states across chunks.
+              Workspace = per-chunk states (B * nc * H * N * P).
+  quadratic — the full S x S materialized semiseparable matrix (ref-like,
+              XLA).  Workspace = B * S * S * H * 4 bytes: fine for short
+              sequences, catastrophic at 32k+ — the exact Table-2 tradeoff.
+
+Interface is pre-discretized (the model layer applies dt):
+  x (B, S, H, P), a_log (B, S, H) negative log-decays,
+  b, c (B, S, G, N) with H % G == 0.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.ref import ssd_ref
+
+
+def _ssd_chunk_kernel(x_ref, a_ref, b_ref, c_ref, y_ref, st_ref, cum_ref, *,
+                      l: int, heads: int, p: int, g: int, n: int):
+    """One (batch, chunk) cell: intra-chunk quadratic output + chunk state."""
+    x = x_ref[0, 0].astype(jnp.float32)          # (L, H, P)
+    a = a_ref[0, 0].astype(jnp.float32)          # (L, H)
+    bb = b_ref[0, 0].astype(jnp.float32)         # (L, G, N)
+    cc = c_ref[0, 0].astype(jnp.float32)         # (L, G, N)
+    rep = heads // g
+
+    cum = jnp.cumsum(a, axis=0)                  # (L, H)
+    # decay[t, s, h] = exp(cum[t] - cum[s]) for s <= t; mask inside the exp
+    # so masked lanes never overflow (NaN-safe under autodiff)
+    diff = cum[:, None, :] - cum[None, :, :]     # (L, L, H)
+    ts = jax.lax.broadcasted_iota(jnp.int32, (l, l), 0)
+    ss = jax.lax.broadcasted_iota(jnp.int32, (l, l), 1)
+    decay = jnp.exp(jnp.where((ss <= ts)[..., None], diff, -1e30))
+    cb = jnp.einsum("tgn,sgn->tsg", cc, bb,
+                    preferred_element_type=jnp.float32)
+    cb = jnp.repeat(cb, rep, axis=2)             # (L, L, H)
+    y = jnp.einsum("tsh,shp->thp", cb * decay, x,
+                   preferred_element_type=jnp.float32)
+    # End-of-chunk state: sum_s exp(cum[-1] - cum[s]) * b[s] (x) x[s]
+    sdecay = jnp.exp(cum[-1:] - cum)             # (L, H)
+    bh = jnp.repeat(bb, rep, axis=1)             # (L, H, N)
+    st = jnp.einsum("shn,sh,shp->hnp", bh, sdecay, x,
+                    preferred_element_type=jnp.float32)
+    y_ref[0, 0] = y.astype(y_ref.dtype)
+    st_ref[0, 0] = st
+    cum_ref[0, 0] = cum
+
+
+def ssd_chunked(x, a_log, b, c, *, chunk: int = 128, d_skip=None,
+                init_state=None, return_final_state: bool = False,
+                interpret: bool = False):
+    bsz, s, h, p = x.shape
+    g, n = b.shape[2], b.shape[3]
+    l = min(chunk, s)
+    s_p = -(-s // l) * l
+    pad = s_p - s
+    if pad:
+        # Zero x (no output contribution) and zero a_log (decay 1, harmless
+        # since padded x contributes nothing to states).
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        a_log = jnp.pad(a_log, ((0, 0), (0, pad), (0, 0)))
+        b = jnp.pad(b, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        c = jnp.pad(c, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    nc = s_p // l
+    xc = x.reshape(bsz, nc, l, h, p)
+    ac = a_log.reshape(bsz, nc, l, h)
+    bc = b.reshape(bsz, nc, l, g, n)
+    cc = c.reshape(bsz, nc, l, g, n)
+
+    y_diag, states, cum = pl.pallas_call(
+        functools.partial(_ssd_chunk_kernel, l=l, heads=h, p=p, g=g, n=n),
+        grid=(bsz, nc),
+        in_specs=[
+            pl.BlockSpec((1, 1, l, h, p), lambda i, j: (i, j, 0, 0, 0)),
+            pl.BlockSpec((1, 1, l, h), lambda i, j: (i, j, 0, 0)),
+            pl.BlockSpec((1, 1, l, g, n), lambda i, j: (i, j, 0, 0, 0)),
+            pl.BlockSpec((1, 1, l, g, n), lambda i, j: (i, j, 0, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, l, h, p), lambda i, j: (i, j, 0, 0, 0)),
+            pl.BlockSpec((1, 1, h, n, p), lambda i, j: (i, j, 0, 0, 0)),
+            pl.BlockSpec((1, 1, l, h), lambda i, j: (i, j, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((bsz, nc, l, h, p), x.dtype),
+            jax.ShapeDtypeStruct((bsz, nc, h, n, p), jnp.float32),
+            jax.ShapeDtypeStruct((bsz, nc, l, h), jnp.float32),
+        ],
+        interpret=interpret,
+    )(xc, ac, bc, cc)
+
+    # Inter-chunk recurrence: S_in[c] = sum_{c'<c} exp(sum a over (c', c)) st[c']
+    a_tot = cum[:, :, -1]                        # (B, nc, H)
+
+    def step(s_in, inp):
+        a_c, st_c = inp
+        s_next = s_in * jnp.exp(a_c)[:, :, None, None] + st_c
+        return s_next, s_in
+
+    init = (jnp.zeros((bsz, h, n, p), jnp.float32) if init_state is None
+            else init_state.astype(jnp.float32))
+    final_state, s_in = jax.lax.scan(
+        step, init, (a_tot.transpose(1, 0, 2), states.transpose(1, 0, 2, 3, 4)))
+    s_in = s_in.transpose(1, 0, 2, 3, 4)         # (B, nc, H, N, P) entering each chunk
+
+    # Off-diagonal: y_off[t] = (c[t] . S_in) * exp(cum[t])
+    rep = h // g
+    ch = jnp.repeat(cc, rep, axis=3)             # (B, nc, L, H, N)
+    y_off = jnp.einsum("bclhn,bchnp,bclh->bclhp", ch.astype(jnp.float32),
+                       s_in, jnp.exp(cum))
+    y = y_diag.astype(jnp.float32) + y_off
+    y = y.reshape(bsz, s_p, h, p)[:, :s]
+    if d_skip is not None:
+        y = y + d_skip.astype(jnp.float32)[None, None, :, None] * \
+            xc.reshape(bsz, s_p, h, p)[:, :s].astype(jnp.float32)
+    y = y.astype(x.dtype)
+    if return_final_state:
+        return y, final_state
+    return y
+
+
+def ssd_quadratic(x, a_log, b, c, *, d_skip=None, interpret: bool = False):
+    """Materialized S x S algorithm (XLA path; huge workspace)."""
+    return ssd_ref(x, a_log, b, c, d_skip=d_skip)
+
+
+SSD_ALGORITHMS = {
+    "chunked": ssd_chunked,
+    "quadratic": ssd_quadratic,
+}
+
+
+def ssd_workspace_bytes(algorithm: str, bsz, s, h, n, p, chunk=128) -> int:
+    if algorithm == "quadratic":
+        return bsz * s * s * h * 4
+    nc = -(-s // chunk)
+    return bsz * nc * h * n * p * 4

@@ -1,0 +1,222 @@
+"""Step functions + ShapeDtypeStruct input specs for every shape cell.
+
+``input_specs(cfg, shape, mesh)`` returns (fn, args, in_shardings,
+out_shardings, donate) ready for ``jax.jit(...).lower(*args)`` — the
+shannon/kernels pattern: weak-type-correct stand-ins, no allocation.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeConfig, TrainConfig
+from repro.models import transformer as T
+from repro.optim import AdamW
+from repro.sharding import specs as SH
+
+
+def _sds(tree):
+    return jax.tree.map(
+        lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), tree)
+
+
+def _replicated(mesh, tree):
+    return jax.tree.map(lambda x: NamedSharding(mesh, P()), tree)
+
+
+def train_config_for(cfg: ModelConfig) -> TrainConfig:
+    """Per-arch training knobs; bf16 moments for the 398B config (C4
+    tradeoff — see DESIGN.md §8)."""
+    opt_dtype = "bfloat16" if cfg.param_count() > 100e9 else "float32"
+    return TrainConfig(opt_state_dtype=opt_dtype)
+
+
+def make_optimizer(cfg: ModelConfig, tc: TrainConfig | None = None) -> AdamW:
+    tc = tc or train_config_for(cfg)
+    return AdamW(lr=tc.lr, b1=tc.b1, b2=tc.b2,
+                 weight_decay=tc.weight_decay, warmup=tc.warmup_steps,
+                 total=tc.total_steps, clip_norm=tc.clip_norm,
+                 state_dtype=tc.opt_state_dtype)
+
+
+def make_train_step(cfg: ModelConfig, optimizer: AdamW, *, impl="xla",
+                    remat=True, moe_aux_weight=0.01):
+    def train_step(params, opt_state, batch):
+        (loss, parts), grads = jax.value_and_grad(
+            T.loss_fn, has_aux=True)(params, cfg, batch, impl=impl,
+                                     remat=remat,
+                                     moe_aux_weight=moe_aux_weight)
+        new_params, new_opt, info = optimizer.update(grads, opt_state, params)
+        return new_params, new_opt, {"loss": loss, **parts, **info}
+    return train_step
+
+
+def make_prefill_step(cfg: ModelConfig, *, impl="xla"):
+    def prefill_step(params, tokens, cache, extra_embeds=None):
+        return T.prefill(params, cfg, tokens, cache,
+                         extra_embeds=extra_embeds, impl=impl)
+    return prefill_step
+
+
+def make_decode_step(cfg: ModelConfig, *, impl="xla"):
+    def decode_step(params, cache, tokens, pos, context=None):
+        return T.decode_step(params, cfg, cache, tokens, pos,
+                             context=context, impl=impl)
+    return decode_step
+
+
+# ---------------------------------------------------------------------------
+# shardings
+# ---------------------------------------------------------------------------
+
+def batch_shardings(cfg: ModelConfig, mesh, batch_tree):
+    dp = SH.logical_axes(mesh, "dp")
+    dp_size = 1
+    for a in (dp if isinstance(dp, tuple) else (dp,) if dp else ()):
+        dp_size *= mesh.shape[a]
+
+    def spec(x):
+        if x.ndim == 0:
+            return NamedSharding(mesh, P())
+        lead = dp if x.shape[0] % max(dp_size, 1) == 0 else None
+        return NamedSharding(mesh, P(lead, *([None] * (x.ndim - 1))))
+
+    return jax.tree.map(spec, batch_tree)
+
+
+def cache_shardings(cfg: ModelConfig, mesh, cache_tree, batch: int):
+    """KV cache: batch over dp when divisible, else sequence over data
+    (long_500k B=1); heads/state dims over model."""
+    dp = SH.logical_axes(mesh, "dp")
+    tp = SH.logical_axes(mesh, "tp")
+    dp_size = 1
+    for a in (dp if isinstance(dp, tuple) else (dp,) if dp else ()):
+        dp_size *= mesh.shape[a]
+    batch_ok = batch % max(dp_size, 1) == 0
+    tp_size = mesh.shape[tp] if tp else 1
+
+    def spec(x):
+        nd = x.ndim
+        if nd == 6:    # kv: (n_super, 2, B, S, Hkv, hd)
+            s = [None] * 6
+            if batch_ok:
+                s[2] = dp
+            else:
+                s[3] = "data"
+            if SH.perf_option("cache_seq_shard") and s[3] is None \
+                    and x.shape[3] % max(tp_size, 1) == 0:
+                # flash-decode style: shard the cache SEQUENCE over the
+                # model axis (kv heads < tp would otherwise replicate the
+                # whole cache per chip); attention joins with one psum.
+                s[3] = tp
+            elif x.shape[4] % tp_size == 0:
+                s[4] = tp
+            return NamedSharding(mesh, P(*s))
+        if nd == 5:    # ssm: (n_super, B, H, N, P)
+            s = [None] * 5
+            if batch_ok:
+                s[1] = dp
+            if x.shape[2] % tp_size == 0:
+                s[2] = tp
+            return NamedSharding(mesh, P(*s))
+        if nd == 4:    # conv: (n_super, B, W-1, C)
+            s = [None] * 4
+            if batch_ok:
+                s[1] = dp
+            if x.shape[3] % tp_size == 0:
+                s[3] = tp
+            return NamedSharding(mesh, P(*s))
+        return NamedSharding(mesh, P(*([None] * nd)))
+
+    return jax.tree.map(spec, cache_tree)
+
+
+# ---------------------------------------------------------------------------
+# input specs per shape cell
+# ---------------------------------------------------------------------------
+
+def _batch_struct(cfg: ModelConfig, b: int, s: int, dtype=jnp.bfloat16):
+    batch = {"tokens": jax.ShapeDtypeStruct((b, s), jnp.int32),
+             "labels": jax.ShapeDtypeStruct((b, s), jnp.int32)}
+    if cfg.frontend == "patch":
+        # patches are part of the assigned backbone seq_len
+        batch["tokens"] = jax.ShapeDtypeStruct((b, s - cfg.frontend_len),
+                                               jnp.int32)
+        batch["labels"] = jax.ShapeDtypeStruct((b, s - cfg.frontend_len),
+                                               jnp.int32)
+        batch["extra_embeds"] = jax.ShapeDtypeStruct(
+            (b, cfg.frontend_len, cfg.d_model), dtype)
+    elif cfg.frontend == "frame":
+        batch["extra_embeds"] = jax.ShapeDtypeStruct(
+            (b, cfg.enc_context_len, cfg.d_model), dtype)
+    return batch
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig, mesh, *,
+                param_dtype=jnp.bfloat16, impl="xla"):
+    """Build (fn, args, in_shardings, out_shardings) for one cell.
+
+    Call under ``SH.activations_on(mesh, **perf)`` — perf options
+    (dp_over_model etc.) change the specs this builds."""
+    params_sds = jax.eval_shape(
+        functools.partial(T.init_params, cfg, dtype=param_dtype),
+        jax.random.PRNGKey(0))
+    # dp_over_model: params replicated (model axis becomes data parallelism)
+    fsdp = not (SH.perf_option("dp_over_model") or SH.perf_option("no_fsdp"))
+    pspecs = SH.param_specs(params_sds, mesh, fsdp=fsdp)
+    b, s = shape.global_batch, shape.seq_len
+
+    if shape.kind == "train":
+        tc = train_config_for(cfg)
+        opt = make_optimizer(cfg, tc)
+        opt_sds = jax.eval_shape(opt.init, params_sds)
+        ospecs = {"step": NamedSharding(mesh, P()),
+                  "m": pspecs, "v": pspecs}
+        batch = _batch_struct(cfg, b, s)
+        bspecs = batch_shardings(cfg, mesh, batch)
+        fn = make_train_step(cfg, opt, impl=impl, remat=True)
+        args = (params_sds, opt_sds, batch)
+        in_sh = (pspecs, ospecs, bspecs)
+        out_sh = (pspecs, ospecs,
+                  jax.tree.map(lambda _: NamedSharding(mesh, P()),
+                               {"loss": 0, "ce": 0, "moe_aux": 0, "lr": 0,
+                                "grad_norm": 0}))
+        return fn, args, in_sh, out_sh, (0, 1)
+
+    cache_sds = jax.eval_shape(
+        functools.partial(T.init_cache, cfg, b, s, dtype=jnp.bfloat16))
+    cspecs = cache_shardings(cfg, mesh, cache_sds, b)
+
+    if shape.kind == "prefill":
+        batch = _batch_struct(cfg, b, s)
+        fn = make_prefill_step(cfg, impl=impl)
+        toks = batch["tokens"]
+        tspec = batch_shardings(cfg, mesh, {"t": toks})["t"]
+        args = [params_sds, toks, cache_sds]
+        in_sh = [pspecs, tspec, cspecs]
+        out_sh = (NamedSharding(mesh, P()), cspecs)
+        if "extra_embeds" in batch:
+            args.append(batch["extra_embeds"])
+            in_sh.append(batch_shardings(
+                cfg, mesh, {"e": batch["extra_embeds"]})["e"])
+        return fn, tuple(args), tuple(in_sh), out_sh, (2,)
+
+    if shape.kind == "decode":
+        toks = jax.ShapeDtypeStruct((b, 1), jnp.int32)
+        tspec = batch_shardings(cfg, mesh, {"t": toks})["t"]
+        pos = jax.ShapeDtypeStruct((), jnp.int32)
+        fn = make_decode_step(cfg, impl=impl)
+        args = [params_sds, cache_sds, toks, pos]
+        in_sh = [pspecs, cspecs, tspec, NamedSharding(mesh, P())]
+        out_sh = (NamedSharding(mesh, P()), cspecs)
+        if cfg.enc_dec:
+            ctx = jax.ShapeDtypeStruct(
+                (b, cfg.enc_context_len, cfg.d_model), jnp.bfloat16)
+            args.append(ctx)
+            in_sh.append(batch_shardings(cfg, mesh, {"c": ctx})["c"])
+        return fn, tuple(args), tuple(in_sh), out_sh, (1,)
+
+    raise ValueError(shape.kind)

@@ -1,0 +1,206 @@
+"""GQA attention layer: init/apply + KV cache, XLA and Pallas paths.
+
+impl="xla"    — einsum/scan implementation, fully GSPMD-partitionable: this
+                is what the multi-pod dry-run lowers (clean HLO, exact FLOPs).
+                Long sequences use a kv-chunked online-softmax scan (bounded
+                memory, flash-equivalent math).
+impl="pallas" — the flash kernel from ``kernels/`` (per-device shapes;
+                used on real TPU inside shard_map, and in tests/benchmarks).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import attention as pallas_attention
+from repro.models import layers as L
+from repro.sharding import constrain
+
+_NEG_INF = -1e30
+
+
+def attn_init(key, d: int, hq: int, hkv: int, hd: int, dtype=jnp.float32,
+              qkv_bias: bool = False):
+    ks = jax.random.split(key, 4)
+    std = d ** -0.5
+    p = {
+        "wq": L.normal_init(ks[0], (d, hq * hd), std, dtype),
+        "wk": L.normal_init(ks[1], (d, hkv * hd), std, dtype),
+        "wv": L.normal_init(ks[2], (d, hkv * hd), std, dtype),
+        "wo": L.normal_init(ks[3], (hq * hd, d), (hq * hd) ** -0.5, dtype),
+    }
+    if qkv_bias:
+        p["bq"] = jnp.zeros((hq * hd,), dtype)
+        p["bk"] = jnp.zeros((hkv * hd,), dtype)
+        p["bv"] = jnp.zeros((hkv * hd,), dtype)
+    return p
+
+
+def _sdpa_xla(q, k, v, *, causal, window, softcap, scale, qpos_base=None,
+              chunk_kv: int = 1024, chunk_q: int = 1024):
+    """Online-softmax chunked attention in pure jnp (flash-equivalent).
+
+    qpos_base: position of q[0] among the keys (default skv - sq: suffix
+    alignment for decode; 0 for prefill-into-cache)."""
+    b, sq, hq, d = q.shape
+    _, skv, hkv, _ = k.shape
+    if qpos_base is None:
+        qpos_base = skv - sq
+    # Materialized scores only when the f32 score matrix is small (or decode):
+    # at 4k+ train shapes the (Sq, Skv) f32 scores dominate HBM traffic.
+    if sq * skv <= 1024 * 1024 or sq == 1:
+        return _sdpa_materialized(q, k, v, causal=causal, window=window,
+                                  softcap=softcap, scale=scale,
+                                  qpos_base=qpos_base)
+    g = hq // hkv
+    nq = -(-sq // chunk_q)
+    sq_p = nq * chunk_q
+    qp = jnp.pad(q, ((0, 0), (0, sq_p - sq), (0, 0), (0, 0)))
+    qp = qp.reshape(b, nq, chunk_q, hq, d)
+
+    nk = -(-skv // chunk_kv)
+    skv_p = nk * chunk_kv
+    kp = jnp.pad(k, ((0, 0), (0, skv_p - skv), (0, 0), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (0, skv_p - skv), (0, 0), (0, 0)))
+    kc = kp.reshape(b, nk, chunk_kv, hkv, d)
+    vc = vp.reshape(b, nk, chunk_kv, hkv, d)
+
+    def q_block(qi_and_idx, nk_used=None):
+        qi, iq = qi_and_idx            # (B, cq, Hq, D), scalar
+        qi = qi.astype(jnp.float32).reshape(b, chunk_q, hkv, g, d)
+
+        def kv_step(carry, inp):
+            acc, m, l = carry
+            kj, vj, jk = inp
+            s = jnp.einsum("bqhgd,bkhd->bhgqk", qi,
+                           kj.astype(jnp.float32)) * scale
+            if softcap is not None:
+                s = softcap * jnp.tanh(s / softcap)
+            qpos = iq * chunk_q + jnp.arange(chunk_q) + qpos_base
+            kpos = jk * chunk_kv + jnp.arange(chunk_kv)
+            mask = kpos[None, :] < skv
+            if causal:
+                mask &= kpos[None, :] <= qpos[:, None]
+            if window is not None:
+                mask &= kpos[None, :] > qpos[:, None] - window
+            s = jnp.where(mask[None, None, None], s, _NEG_INF)
+            m_new = jnp.maximum(m, s.max(-1))
+            alpha = jnp.exp(m - m_new)
+            p = jnp.exp(s - m_new[..., None])
+            l_new = l * alpha + p.sum(-1)
+            acc_new = acc * alpha[..., None] + jnp.einsum(
+                "bhgqk,bkhd->bhgqd", p, vj.astype(jnp.float32))
+            return (acc_new, m_new, l_new), None
+
+        acc0 = jnp.zeros((b, hkv, g, chunk_q, d), jnp.float32)
+        m0 = jnp.full((b, hkv, g, chunk_q), _NEG_INF, jnp.float32)
+        l0 = jnp.zeros((b, hkv, g, chunk_q), jnp.float32)
+        used = nk if nk_used is None else nk_used
+        (acc, m, l), _ = jax.lax.scan(
+            kv_step, (acc0, m0, l0),
+            (kc[:, :used].transpose(1, 0, 2, 3, 4),
+             vc[:, :used].transpose(1, 0, 2, 3, 4),
+             jnp.arange(used)))
+        l = jnp.where(l == 0.0, 1.0, l)
+        out = (acc / l[..., None]).transpose(0, 3, 1, 2, 4)  # (B, cq, hkv, g, D)
+        return out.reshape(b, chunk_q, hq, d)
+
+    from repro.sharding.specs import perf_option
+    if causal and isinstance(qpos_base, int) and qpos_base == skv - sq \
+            and perf_option("causal_skip"):
+        # §Perf lever: triangular schedule — q block i only visits kv chunks
+        # [0, ceil((i+1)*cq/ckv)]; fully-masked chunks are never computed.
+        # Unrolled over q blocks (static per-block kv lengths); ~2x FLOP
+        # saving at sq == skv.
+        outs = []
+        for i in range(nq):
+            hi = min(-(-((i + 1) * chunk_q) // chunk_kv), nk)
+            outs.append(q_block((qp[:, i], jnp.int32(i)), nk_used=hi))
+        out = jnp.stack(outs, axis=1).reshape(b, sq_p, hq, d)[:, :sq]
+        return out.astype(q.dtype)
+
+    outs = jax.lax.map(q_block, (qp.transpose(1, 0, 2, 3, 4), jnp.arange(nq)))
+    out = outs.transpose(1, 0, 2, 3, 4).reshape(b, sq_p, hq, d)[:, :sq]
+    return out.astype(q.dtype)
+
+
+def _sdpa_materialized(q, k, v, *, causal, window, softcap, scale,
+                       qpos_base=None):
+    b, sq, hq, d = q.shape
+    _, skv, hkv, _ = k.shape
+    g = hq // hkv
+    if qpos_base is None:
+        qpos_base = skv - sq
+    qf = q.astype(jnp.float32).reshape(b, sq, hkv, g, d)
+    s = jnp.einsum("bqhgd,bkhd->bhgqk", qf, k.astype(jnp.float32)) * scale
+    if softcap is not None:
+        s = softcap * jnp.tanh(s / softcap)
+    qpos = jnp.arange(sq) + qpos_base
+    kpos = jnp.arange(skv)
+    mask = jnp.ones((sq, skv), bool)
+    if causal:
+        mask &= kpos[None, :] <= qpos[:, None]
+    if window is not None:
+        mask &= kpos[None, :] > qpos[:, None] - window
+    s = jnp.where(mask[None, None, None], s, _NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhgqk,bkhd->bqhgd", p, v.astype(jnp.float32))
+    return out.reshape(b, sq, hq, d).astype(q.dtype)
+
+
+def attn_apply(params, x, *, hq: int, hkv: int, hd: int,
+               positions=None, kv_cache=None, cache_pos=None,
+               causal: bool = True, window: int | None = None,
+               softcap: float | None = None, rope_theta: float | None = 10000.0,
+               query_scale: float | None = None,
+               impl: str = "xla", context=None):
+    """Self-attention with optional KV cache.
+
+    x: (B, S, D).  kv_cache: (2, B, Smax, Hkv, hd) or None.
+    cache_pos: int32 scalar — write position of x's first token in the cache.
+    context: (B, Sctx, D) for cross-attention (k/v from context, no cache,
+    no causal mask).
+    Returns (out, new_kv_cache).
+    """
+    b, s, _ = x.shape
+    src = context if context is not None else x
+    q = jnp.einsum("bsd,dh->bsh", x, params["wq"])
+    k = jnp.einsum("bsd,dh->bsh", src, params["wk"])
+    v = jnp.einsum("bsd,dh->bsh", src, params["wv"])
+    if "bq" in params:
+        q, k, v = q + params["bq"], k + params["bk"], v + params["bv"]
+    q = constrain(q.reshape(b, s, hq, hd), "dp", None, "tp", None)
+    k = constrain(k.reshape(b, src.shape[1], hkv, hd), "dp", None, "tp", None)
+    v = constrain(v.reshape(b, src.shape[1], hkv, hd), "dp", None, "tp", None)
+
+    if rope_theta is not None and context is None:
+        if positions is None:
+            base = 0 if cache_pos is None else cache_pos
+            positions = base + jnp.arange(s)[None, :]
+        q = L.rope(q, positions, rope_theta)
+        k = L.rope(k, positions, rope_theta)
+
+    if kv_cache is not None:
+        # Write new k/v at cache_pos, attend over the whole cache.
+        kc = jax.lax.dynamic_update_slice(
+            kv_cache[0], k.astype(kv_cache.dtype), (0, cache_pos, 0, 0))
+        vc = jax.lax.dynamic_update_slice(
+            kv_cache[1], v.astype(kv_cache.dtype), (0, cache_pos, 0, 0))
+        new_cache = jnp.stack([kc, vc])
+        k, v = kc.astype(x.dtype), vc.astype(x.dtype)
+    else:
+        new_cache = None
+
+    scale = query_scale if query_scale is not None else hd ** -0.5
+    # qpos_base: with a cache, q[0] sits at cache_pos (prefill writes from 0,
+    # decode writes one slot) — masks out not-yet-written cache slots.
+    # Without a cache (training), suffix alignment (skv - sq) applies.
+    qpos_base = cache_pos if kv_cache is not None else None
+    kw = dict(causal=causal and context is None, window=window,
+              softcap=softcap, scale=scale)
+    if impl == "pallas" and qpos_base is None:
+        out = pallas_attention(q, k, v, algorithm="flash", **kw)
+    else:
+        out = _sdpa_xla(q, k, v, qpos_base=qpos_base, **kw)
+    out = jnp.einsum("bsh,hd->bsd", out.reshape(b, s, hq * hd), params["wo"])
+    return out, new_cache

@@ -1,0 +1,198 @@
+"""Inception-style CNN — the paper's native subject (GoogleNet, Fig. 1).
+
+Every conv routes through the kernel algorithm zoo (``kernels.conv2d``),
+with per-op algorithms chosen by the core scheduler/selector; Inception
+modules are ``core.Branches`` fork/joins, executable in any branch-parallel
+mode (xla / spatial).  ``build_graph`` exports the op-level DAG the paper
+reasons about — the benchmark harness runs the Table-1/Table-2 analogues
+and the 27-case complementary-pair sweep on it.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.graph import Op, OpGraph
+# import from the conv2d module file directly (the package re-exports the
+# ops.conv2d *function* under the same name, shadowing the submodule)
+from repro.kernels.conv2d import CONV2D_ALGORITHMS as _CONV_ALGS
+from repro.kernels import ref as k_ref
+from repro.models import layers as L
+
+
+@dataclasses.dataclass(frozen=True)
+class InceptionSpec:
+    n1: int      # 1x1 branch
+    r3: int      # 3x3 reduce
+    n3: int      # 3x3 branch
+    r5: int      # 5x5 reduce
+    n5: int      # 5x5 branch
+    pp: int      # pool-proj branch
+
+    @property
+    def out(self) -> int:
+        return self.n1 + self.n3 + self.n5 + self.pp
+
+
+@dataclasses.dataclass(frozen=True)
+class CNNConfig:
+    name: str
+    img: tuple[int, int, int]            # (H, W, C)
+    stem: tuple[tuple[int, int, int], ...]  # (k, out_ch, stride) convs
+    modules: tuple[InceptionSpec, ...]
+    pool_between: tuple[int, ...]        # module idxs preceded by 2x2 maxpool
+    num_classes: int = 1000
+    family: str = "cnn"
+
+
+def conv(x, w, b, *, stride=1, algorithm="xla", interpret=None):
+    if algorithm == "xla":
+        y = k_ref.conv2d_ref(x, w, stride=stride, padding="SAME")
+    else:
+        y = _CONV_ALGS[algorithm](
+            x, w, stride=stride, padding="SAME",
+            interpret=True if interpret is None else interpret)
+    return jax.nn.relu(y + b)
+
+
+def maxpool(x, k=3, stride=2):
+    return jax.lax.reduce_window(
+        x, -jnp.inf, jax.lax.max, (1, k, k, 1), (1, stride, stride, 1),
+        "SAME")
+
+
+def _conv_init(key, kh, cin, cout, dtype):
+    w = L.normal_init(key, (kh, kh, cin, cout), (kh * kh * cin) ** -0.5,
+                      dtype)
+    return {"w": w, "b": jnp.zeros((cout,), dtype)}
+
+
+def init_params(cfg: CNNConfig, key, dtype=jnp.float32):
+    ks = iter(jax.random.split(key, 8 + 8 * len(cfg.modules)))
+    params: dict = {"stem": []}
+    c = cfg.img[2]
+    for (k, out, s) in cfg.stem:
+        params["stem"].append(_conv_init(next(ks), k, c, out, dtype))
+        c = out
+    params["modules"] = []
+    for m in cfg.modules:
+        p = {
+            "b1": _conv_init(next(ks), 1, c, m.n1, dtype),
+            "r3": _conv_init(next(ks), 1, c, m.r3, dtype),
+            "b3": _conv_init(next(ks), 3, m.r3, m.n3, dtype),
+            "r5": _conv_init(next(ks), 1, c, m.r5, dtype),
+            "b5": _conv_init(next(ks), 5, m.r5, m.n5, dtype),
+            "pp": _conv_init(next(ks), 1, c, m.pp, dtype),
+        }
+        params["modules"].append(p)
+        c = m.out
+    params["head"] = {
+        "w": L.normal_init(next(ks), (c, cfg.num_classes), c ** -0.5, dtype),
+        "b": jnp.zeros((cfg.num_classes,), dtype)}
+    return params
+
+
+def inception_module(p, x, spec: InceptionSpec, alg, interpret=None):
+    """alg: dict branch-name -> algorithm (from the scheduler) or str."""
+    a = (lambda n: alg.get(n, "xla")) if isinstance(alg, dict) else (lambda n: alg)
+    b1 = conv(x, p["b1"]["w"], p["b1"]["b"], algorithm=a("1x1"),
+              interpret=interpret)
+    r3 = conv(x, p["r3"]["w"], p["r3"]["b"], algorithm=a("r3"),
+              interpret=interpret)
+    b3 = conv(r3, p["b3"]["w"], p["b3"]["b"], algorithm=a("3x3"),
+              interpret=interpret)
+    r5 = conv(x, p["r5"]["w"], p["r5"]["b"], algorithm=a("r5"),
+              interpret=interpret)
+    b5 = conv(r5, p["b5"]["w"], p["b5"]["b"], algorithm=a("5x5"),
+              interpret=interpret)
+    pp = conv(maxpool(x, 3, 1), p["pp"]["w"], p["pp"]["b"],
+              algorithm=a("pp"), interpret=interpret)
+    return jnp.concatenate([b1, b3, b5, pp], axis=-1)
+
+
+def forward(params, cfg: CNNConfig, images, *, algorithms=None,
+            interpret=None):
+    """images (B, H, W, C) -> logits (B, classes).
+
+    algorithms: None (XLA), a str, or {module_idx: {branch: alg}} from the
+    scheduler (`schedule_cnn`).
+    """
+    x = images
+    for i, (p, (k, out, s)) in enumerate(zip(params["stem"], cfg.stem)):
+        alg = "xla" if algorithms is None else (
+            algorithms if isinstance(algorithms, str)
+            else algorithms.get(f"stem{i}", "xla"))
+        x = conv(x, p["w"], p["b"], stride=s, algorithm=alg,
+                 interpret=interpret)
+    for i, (p, m) in enumerate(zip(params["modules"], cfg.modules)):
+        if i in cfg.pool_between:
+            x = maxpool(x, 3, 2)
+        alg = "xla" if algorithms is None else (
+            algorithms if isinstance(algorithms, str)
+            else algorithms.get(i, {}))
+        x = inception_module(p, x, m, alg, interpret=interpret)
+    x = x.mean(axis=(1, 2))
+    return x @ params["head"]["w"] + params["head"]["b"]
+
+
+def loss_fn(params, cfg: CNNConfig, batch, **kw):
+    logits = forward(params, cfg, batch["images"], **kw)
+    return L.cross_entropy(logits, batch["labels"]), {}
+
+
+# ---------------------------------------------------------------------------
+# op-graph export (for the scheduler / paper benchmarks)
+# ---------------------------------------------------------------------------
+
+def build_graph(cfg: CNNConfig, batch: int) -> OpGraph:
+    g = OpGraph()
+    h, w, c = cfg.img
+    g.add(Op.make("input", "pointwise", elements=batch * h * w * c))
+    dep = "input"
+    for i, (k, out, s) in enumerate(cfg.stem):
+        g.add(Op.make(f"stem{i}", "conv2d", n=batch, h=h, w=w, c=c, kh=k,
+                      kw=k, k=out, stride=s), [dep])
+        dep = f"stem{i}"
+        h, w, c = -(-h // s), -(-w // s), out
+    for i, m in enumerate(cfg.modules):
+        if i in cfg.pool_between:
+            h, w = -(-h // 2), -(-w // 2)
+        nm = f"inc{i}"
+        g.add(Op.make(f"{nm}/1x1", "conv2d", n=batch, h=h, w=w, c=c, kh=1,
+                      kw=1, k=m.n1, stride=1), [dep])
+        g.add(Op.make(f"{nm}/r3", "conv2d", n=batch, h=h, w=w, c=c, kh=1,
+                      kw=1, k=m.r3, stride=1), [dep])
+        g.add(Op.make(f"{nm}/3x3", "conv2d", n=batch, h=h, w=w, c=m.r3,
+                      kh=3, kw=3, k=m.n3, stride=1), [f"{nm}/r3"])
+        g.add(Op.make(f"{nm}/r5", "conv2d", n=batch, h=h, w=w, c=c, kh=1,
+                      kw=1, k=m.r5, stride=1), [dep])
+        g.add(Op.make(f"{nm}/5x5", "conv2d", n=batch, h=h, w=w, c=m.r5,
+                      kh=5, kw=5, k=m.n5, stride=1), [f"{nm}/r5"])
+        g.add(Op.make(f"{nm}/pp", "conv2d", n=batch, h=h, w=w, c=c, kh=1,
+                      kw=1, k=m.pp, stride=1), [dep])
+        g.add(Op.make(f"{nm}/join", "pointwise",
+                      elements=batch * h * w * m.out),
+              [f"{nm}/1x1", f"{nm}/3x3", f"{nm}/5x5", f"{nm}/pp"])
+        dep = f"{nm}/join"
+        c = m.out
+    return g
+
+
+def schedule_algorithms(cfg: CNNConfig, batch: int, concurrent=True):
+    """Run the core scheduler on the CNN graph -> per-module algorithm map
+    usable by ``forward(algorithms=...)``."""
+    from repro.core import scheduler as S
+    g = build_graph(cfg, batch)
+    sch = S.schedule(g, concurrent=concurrent)
+    algs = sch.algorithms
+    out: dict = {}
+    for name, alg in algs.items():
+        if name.startswith("stem"):
+            out[name] = alg
+        elif name.startswith("inc"):
+            mod, branch = name.split("/")
+            out.setdefault(int(mod[3:]), {})[branch] = alg
+    return out, sch

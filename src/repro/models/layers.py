@@ -1,0 +1,111 @@
+"""Shared neural-net layers (pure JAX, pytree params, no framework deps)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def uniform_init(key, shape, scale, dtype):
+    return jax.random.uniform(key, shape, dtype, -scale, scale)
+
+
+def normal_init(key, shape, std, dtype):
+    return jax.random.normal(key, shape, dtype) * jnp.asarray(std, dtype)
+
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+
+def rmsnorm_init(d: int, dtype=jnp.float32):
+    return {"scale": jnp.zeros((d,), dtype)}  # gemma-style (1 + scale)
+
+
+def rmsnorm(params, x, eps: float = 1e-6):
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    return (y * (1.0 + params["scale"].astype(jnp.float32))).astype(x.dtype)
+
+
+def layernorm_init(d: int, dtype=jnp.float32):
+    return {"scale": jnp.ones((d,), dtype), "bias": jnp.zeros((d,), dtype)}
+
+
+def layernorm(params, x, eps: float = 1e-5):
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    y = y * params["scale"].astype(jnp.float32) + params["bias"].astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# rotary position embeddings
+# ---------------------------------------------------------------------------
+
+def rope(x, positions, theta: float = 10000.0):
+    """x: (..., S, H, D); positions: (..., S) int32."""
+    d = x.shape[-1]
+    half = d // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions[..., None].astype(jnp.float32) * freqs  # (..., S, half)
+    cos, sin = jnp.cos(ang)[..., None, :], jnp.sin(ang)[..., None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# MLP (dense / gated)
+# ---------------------------------------------------------------------------
+
+def mlp_init(key, d: int, f: int, gated: bool = True, dtype=jnp.float32):
+    k1, k2, k3 = jax.random.split(key, 3)
+    std = d ** -0.5
+    p = {"w_in": normal_init(k1, (d, f), std, dtype),
+         "w_out": normal_init(k2, (f, d), f ** -0.5, dtype)}
+    if gated:
+        p["w_gate"] = normal_init(k3, (d, f), std, dtype)
+    return p
+
+
+def mlp(params, x, activation: str = "silu"):
+    act = {"silu": jax.nn.silu, "gelu": jax.nn.gelu,
+           "relu": jax.nn.relu}[activation]
+    h = jnp.einsum("...d,df->...f", x, params["w_in"])
+    if "w_gate" in params:
+        h = act(jnp.einsum("...d,df->...f", x, params["w_gate"])) * h
+    else:
+        h = act(h)
+    return jnp.einsum("...f,fd->...d", h, params["w_out"])
+
+
+# ---------------------------------------------------------------------------
+# embeddings / head
+# ---------------------------------------------------------------------------
+
+def embed_init(key, vocab: int, d: int, dtype=jnp.float32):
+    return {"table": normal_init(key, (vocab, d), d ** -0.5, dtype)}
+
+
+def embed(params, tokens):
+    return jnp.take(params["table"], tokens, axis=0)
+
+
+def unembed(params, x, softcap: float | None = None):
+    logits = jnp.einsum("...d,vd->...v", x, params["table"])
+    if softcap is not None:
+        logits = softcap * jnp.tanh(logits / softcap)
+    return logits
+
+
+def cross_entropy(logits, labels, ignore: int = -1):
+    """Mean token NLL; logits (..., V) any dtype, fp32 reduction."""
+    lf = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(lf, axis=-1)
+    ll = jnp.take_along_axis(lf, labels[..., None].clip(0), axis=-1)[..., 0]
+    nll = lse - ll
+    mask = (labels != ignore).astype(jnp.float32)
+    return (nll * mask).sum() / jnp.maximum(mask.sum(), 1.0)

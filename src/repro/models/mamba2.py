@@ -1,0 +1,166 @@
+"""Mamba-2 (SSD) mixer block: init/apply, train + single-step decode.
+
+impl="xla"    — chunked SSD in pure jnp with a lax.scan over chunks
+                (bounded memory, GSPMD-partitionable; heads shard over the
+                ``model`` axis so the per-chunk (L, L, H_local) decay tensor
+                stays small).  This is what the dry-run lowers.
+impl="pallas" — the ``kernels/ssd.py`` chunked kernel (per-device shapes).
+
+Decode threads a recurrent state (B, H, N, P) plus a causal-conv tail
+(B, W-1, C_conv) — O(1) per token, the reason long_500k is runnable for
+SSM/hybrid archs.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ssd as pallas_ssd
+from repro.models import layers as L
+
+
+def mamba_init(key, d: int, *, d_inner: int, n_heads: int, head_dim: int,
+               d_state: int, n_groups: int, conv_width: int = 4,
+               dtype=jnp.float32):
+    assert d_inner == n_heads * head_dim
+    ks = jax.random.split(key, 4)
+    d_xbc = d_inner + 2 * n_groups * d_state
+    d_proj = d_inner + d_xbc + n_heads          # z, xBC, dt
+    p = {
+        "w_in": L.normal_init(ks[0], (d, d_proj), d ** -0.5, dtype),
+        "conv_w": L.normal_init(ks[1], (conv_width, d_xbc), 0.1, dtype),
+        "conv_b": jnp.zeros((d_xbc,), dtype),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, n_heads)).astype(dtype),
+        "D": jnp.ones((n_heads,), dtype),
+        "dt_bias": jnp.zeros((n_heads,), dtype),
+        "norm": L.rmsnorm_init(d_inner, dtype),
+        "w_out": L.normal_init(ks[2], (d_inner, d), d_inner ** -0.5, dtype),
+    }
+    return p
+
+
+def _split_proj(proj, d_inner, n_groups, d_state, n_heads):
+    d_xbc = d_inner + 2 * n_groups * d_state
+    z = proj[..., :d_inner]
+    xbc = proj[..., d_inner:d_inner + d_xbc]
+    dt = proj[..., d_inner + d_xbc:]
+    return z, xbc, dt
+
+
+def _causal_conv(xbc, conv_w, conv_b, conv_state=None):
+    """Depthwise causal conv, width W.  xbc: (B, S, C).
+    conv_state: (B, W-1, C) tail of previous tokens (decode)."""
+    w = conv_w.shape[0]
+    if conv_state is None:
+        pad = jnp.zeros((xbc.shape[0], w - 1, xbc.shape[2]), xbc.dtype)
+    else:
+        pad = conv_state.astype(xbc.dtype)
+    xp = jnp.concatenate([pad, xbc], axis=1)          # (B, S+W-1, C)
+    out = sum(xp[:, i:i + xbc.shape[1]] * conv_w[i] for i in range(w))
+    new_state = xp[:, -(w - 1):]
+    return jax.nn.silu(out + conv_b), new_state
+
+
+def _ssd_xla_chunked(x, a_log, b, c, *, chunk: int = 128, init_state=None):
+    """Pure-jnp chunked SSD (same math as kernels/ssd.py) with scan over
+    chunks — the partitionable dry-run path."""
+    bsz, s, h, p = x.shape
+    g, n = b.shape[2], b.shape[3]
+    l = min(chunk, s)
+    s_p = -(-s // l) * l
+    pad = s_p - s
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        a_log = jnp.pad(a_log, ((0, 0), (0, pad), (0, 0)))
+        b = jnp.pad(b, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        c = jnp.pad(c, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    nc = s_p // l
+    rep = h // g
+    xc = x.reshape(bsz, nc, l, h, p).astype(jnp.float32)
+    ac = a_log.reshape(bsz, nc, l, h).astype(jnp.float32)
+    bc = b.reshape(bsz, nc, l, g, n).astype(jnp.float32)
+    cc = c.reshape(bsz, nc, l, g, n).astype(jnp.float32)
+    ts = jnp.arange(l)
+    causal = ts[:, None] >= ts[None, :]
+
+    def chunk_step(state, inp):
+        xk, ak, bk, ck = inp                      # (B,L,H,P) (B,L,H) ...
+        cum = jnp.cumsum(ak, axis=1)              # (B, L, H)
+        # mask INSIDE the exp: exp of +large for s>t would overflow and
+        # poison the backward pass (0 * inf = NaN)
+        diff = jnp.where(causal[None, :, :, None],
+                         cum[:, :, None, :] - cum[:, None, :, :], -1e30)
+        decay = jnp.exp(diff)
+        cb = jnp.einsum("btgn,bsgn->btsg", ck, bk)
+        cb = jnp.repeat(cb, rep, axis=3)          # (B, L, L, H)
+        y_diag = jnp.einsum("btsh,bshp->bthp", cb * decay, xk)
+        # off-diagonal from carried state
+        ch = jnp.repeat(ck, rep, axis=2)          # (B, L, H, N)
+        y_off = jnp.einsum("blhn,bhnp,blh->blhp", ch, state, jnp.exp(cum))
+        # state update
+        sdecay = jnp.exp(cum[:, -1:, :] - cum)    # (B, L, H)
+        bh = jnp.repeat(bk, rep, axis=2)          # (B, L, H, N)
+        st_new = jnp.einsum("blhn,blh,blhp->bhnp", bh, sdecay, xk)
+        state = state * jnp.exp(cum[:, -1, :])[:, :, None, None] + st_new
+        return state, y_diag + y_off
+
+    init = (jnp.zeros((bsz, h, n, p), jnp.float32) if init_state is None
+            else init_state.astype(jnp.float32))
+    final_state, ys = jax.lax.scan(
+        chunk_step, init,
+        (xc.transpose(1, 0, 2, 3, 4), ac.transpose(1, 0, 2, 3),
+         bc.transpose(1, 0, 2, 3, 4), cc.transpose(1, 0, 2, 3, 4)))
+    y = ys.transpose(1, 0, 2, 3, 4).reshape(bsz, s_p, h, p)[:, :s]
+    return y, final_state
+
+
+def mamba_apply(params, x, *, d_inner: int, n_heads: int, head_dim: int,
+                d_state: int, n_groups: int, chunk: int = 128,
+                ssm_state=None, conv_state=None, impl: str = "xla"):
+    """x: (B, S, D) -> (out, (new_ssm_state, new_conv_state)).
+
+    Training: pass ssm_state=None.  Decode: S==1 with states from init_cache.
+    """
+    b, s, d = x.shape
+    proj = jnp.einsum("bsd,dp->bsp", x, params["w_in"])
+    z, xbc, dt = _split_proj(proj, d_inner, n_groups, d_state, n_heads)
+    xbc, new_conv = _causal_conv(xbc, params["conv_w"], params["conv_b"],
+                                 conv_state)
+    xs = xbc[..., :d_inner].reshape(b, s, n_heads, head_dim)
+    bmat = xbc[..., d_inner:d_inner + n_groups * d_state] \
+        .reshape(b, s, n_groups, d_state)
+    cmat = xbc[..., d_inner + n_groups * d_state:] \
+        .reshape(b, s, n_groups, d_state)
+    dt = jax.nn.softplus(dt.astype(jnp.float32)
+                         + params["dt_bias"].astype(jnp.float32))  # (B,S,H)
+    a = -jnp.exp(params["A_log"].astype(jnp.float32))              # (H,)
+    a_log = a[None, None, :] * dt                                  # (B,S,H) <0
+    xdt = xs.astype(jnp.float32) * dt[..., None]
+
+    if s > 1:
+        if impl == "pallas":
+            y, new_ssm = pallas_ssd.ssd_chunked(
+                xdt, a_log, bmat, cmat, chunk=chunk, d_skip=None,
+                init_state=ssm_state, return_final_state=True)
+            y = y.astype(jnp.float32)
+        else:
+            y, new_ssm = _ssd_xla_chunked(xdt, a_log, bmat, cmat, chunk=chunk,
+                                          init_state=ssm_state)
+    else:
+        # single-step recurrence (decode)
+        state = ssm_state if ssm_state is not None else \
+            jnp.zeros((b, n_heads, d_state, head_dim), jnp.float32)
+        rep = n_heads // n_groups
+        bh = jnp.repeat(bmat[:, 0], rep, axis=1).astype(jnp.float32)  # (B,H,N)
+        ch = jnp.repeat(cmat[:, 0], rep, axis=1).astype(jnp.float32)
+        state = state * jnp.exp(a_log[:, 0])[:, :, None, None] + \
+            jnp.einsum("bhn,bhp->bhnp", bh, xdt[:, 0])
+        y = jnp.einsum("bhn,bhnp->bhp", ch, state)[:, None]           # (B,1,H,P)
+        new_ssm = state
+
+    y = y + params["D"].astype(jnp.float32)[None, None, :, None] * \
+        xs.astype(jnp.float32)
+    y = y.reshape(b, s, d_inner).astype(x.dtype)
+    y = L.rmsnorm(params["norm"], y * jax.nn.silu(z))
+    out = jnp.einsum("bsi,id->bsd", y, params["w_out"])
+    return out, (new_ssm, new_conv[:, -(params["conv_w"].shape[0] - 1):])

@@ -1,0 +1,2 @@
+from repro.optim.adamw import AdamW, cosine_schedule, clip_by_global_norm  # noqa: F401
+from repro.optim.compression import compress_int8, decompress_int8, ErrorFeedback  # noqa: F401

@@ -1,0 +1,81 @@
+"""AdamW (pure pytree), cosine schedule, global-norm clipping.
+
+Moment dtype is configurable: ``bfloat16`` moments are the C4 tradeoff that
+lets the 398B config fit a 256-chip pod (DESIGN.md §8).  States inherit the
+param sharding (ZeRO comes from the param specs, not from this module).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+
+def cosine_schedule(step, *, lr: float, warmup: int, total: int,
+                    min_frac: float = 0.1):
+    warm = jnp.minimum(step / jnp.maximum(warmup, 1), 1.0)
+    prog = jnp.clip((step - warmup) / jnp.maximum(total - warmup, 1), 0.0, 1.0)
+    cos = min_frac + (1 - min_frac) * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+    return lr * warm * cos
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    leaves = jax.tree.leaves(grads)
+    gn = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                      for g in leaves))
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(gn, 1e-9))
+    return jax.tree.map(lambda g: (g * scale).astype(g.dtype), grads), gn
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamW:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    warmup: int = 100
+    total: int = 1000
+    clip_norm: float = 1.0
+    state_dtype: str = "float32"
+
+    def init(self, params):
+        dt = jnp.dtype(self.state_dtype)
+        zeros = lambda p: jnp.zeros(p.shape, dt)
+        return {
+            "step": jnp.zeros((), jnp.int32),
+            "m": jax.tree.map(zeros, params),
+            "v": jax.tree.map(zeros, params),
+        }
+
+    def update(self, grads, state, params):
+        step = state["step"] + 1
+        lr = cosine_schedule(step, lr=self.lr, warmup=self.warmup,
+                             total=self.total)
+        grads, gnorm = clip_by_global_norm(grads, self.clip_norm)
+        b1, b2 = self.b1, self.b2
+        bc1 = 1 - b1 ** step.astype(jnp.float32)
+        bc2 = 1 - b2 ** step.astype(jnp.float32)
+
+        def upd(p, g, m, v):
+            gf = g.astype(jnp.float32)
+            m_new = b1 * m.astype(jnp.float32) + (1 - b1) * gf
+            v_new = b2 * v.astype(jnp.float32) + (1 - b2) * gf * gf
+            mhat = m_new / bc1
+            vhat = v_new / bc2
+            delta = mhat / (jnp.sqrt(vhat) + self.eps) \
+                + self.weight_decay * p.astype(jnp.float32)
+            p_new = p.astype(jnp.float32) - lr * delta
+            return (p_new.astype(p.dtype), m_new.astype(m.dtype),
+                    v_new.astype(v.dtype))
+
+        out = jax.tree.map(upd, params, grads, state["m"], state["v"])
+        new_params = jax.tree.map(lambda t: t[0], out,
+                                  is_leaf=lambda t: isinstance(t, tuple))
+        new_m = jax.tree.map(lambda t: t[1], out,
+                             is_leaf=lambda t: isinstance(t, tuple))
+        new_v = jax.tree.map(lambda t: t[2], out,
+                             is_leaf=lambda t: isinstance(t, tuple))
+        return new_params, {"step": step, "m": new_m, "v": new_v}, \
+            {"lr": lr, "grad_norm": gnorm}

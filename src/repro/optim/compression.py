@@ -1,0 +1,58 @@
+"""Int8 error-feedback gradient compression (cross-pod DP all-reduce).
+
+At 2-pod scale the DCN gradient all-reduce is the slowest collective; int8
+block quantization cuts its bytes 4x (fp32) / 2x (bf16).  Error feedback
+(residual carried to the next step) keeps convergence — standard 1-bit
+Adam / PowerSGD-family practice.  Applied only on the ``pod`` axis; intra-
+pod reductions stay full precision.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+BLOCK = 256
+
+
+def compress_int8(x: jax.Array):
+    """Per-block symmetric int8 quantization: returns (q, scales)."""
+    flat = x.astype(jnp.float32).reshape(-1)
+    pad = (-flat.size) % BLOCK
+    flat = jnp.pad(flat, (0, pad))
+    blocks = flat.reshape(-1, BLOCK)
+    scale = jnp.max(jnp.abs(blocks), axis=1, keepdims=True) / 127.0
+    scale = jnp.maximum(scale, 1e-12)
+    q = jnp.clip(jnp.round(blocks / scale), -127, 127).astype(jnp.int8)
+    return q, scale.astype(jnp.float32)
+
+
+def decompress_int8(q, scale, shape, dtype):
+    flat = (q.astype(jnp.float32) * scale).reshape(-1)
+    n = 1
+    for s in shape:
+        n *= s
+    return flat[:n].reshape(shape).astype(dtype)
+
+
+class ErrorFeedback:
+    """Stateless helpers; the residual rides in the optimizer state."""
+
+    @staticmethod
+    def init(params):
+        return jax.tree.map(
+            lambda p: jnp.zeros(p.shape, jnp.bfloat16), params)
+
+    @staticmethod
+    def apply(grads, residual):
+        """Returns (quantize-roundtripped grads, new residual)."""
+        def one(g, r):
+            gf = g.astype(jnp.float32) + r.astype(jnp.float32)
+            q, s = compress_int8(gf)
+            deq = decompress_int8(q, s, g.shape, jnp.float32)
+            return deq.astype(g.dtype), (gf - deq).astype(jnp.bfloat16)
+        out = jax.tree.map(one, grads, residual)
+        new_g = jax.tree.map(lambda t: t[0], out,
+                             is_leaf=lambda t: isinstance(t, tuple))
+        new_r = jax.tree.map(lambda t: t[1], out,
+                             is_leaf=lambda t: isinstance(t, tuple))
+        return new_g, new_r

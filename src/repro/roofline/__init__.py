@@ -1,0 +1,1 @@
+from repro.roofline.analyze import analyze_hlo, roofline_terms, HloCost  # noqa: F401

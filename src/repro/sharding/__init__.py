@@ -1,0 +1,3 @@
+from repro.sharding.specs import (  # noqa: F401
+    activations_on, constrain, param_specs, data_spec, logical_axes,
+)

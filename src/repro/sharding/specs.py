@@ -1,0 +1,193 @@
+"""Sharding rules: DP / FSDP(ZeRO) / TP / EP specs for params + activations.
+
+Logical axes:
+  dp  — batch:   all of ("pod", "data") present in the mesh.
+  fsdp— params:  the "data" axis only (params replicate across pods; the pod
+                 axis carries gradient all-reduce over DCN — one collective
+                 per step instead of per-layer all-gathers across pods).
+  tp  — model:   the "model" axis (heads / ffn / experts / vocab).
+
+Every rule applies an axis only when the dim is divisible by the axis size
+for *param* specs (in_shardings must match exactly); activation constraints
+are always applied (GSPMD pads unevenly-sharded dims transparently).
+"""
+from __future__ import annotations
+
+import threading
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+_CTX = threading.local()
+
+
+class activations_on:
+    """Context manager activating activation sharding constraints.
+
+    perf options (the §Perf hillclimb levers, all default-off = baseline):
+      seq_shard     — sequence-parallel residuals: constrain (B, S, D)
+                      activations P(dp, tp, None) so TP boundary collectives
+                      become reduce-scatter/all-gather pairs.
+      dp_over_model — treat the model axis as extra data parallelism
+                      (params replicated, batch sharded over data x model):
+                      the right scheme for small models on a big pod.
+      causal_skip   — triangular chunked attention (skip fully-masked kv
+                      chunks): ~2x attention FLOP reduction for causal train.
+    """
+
+    def __init__(self, mesh: Mesh | None, **perf):
+        self.mesh = mesh
+        self.perf = perf
+
+    def __enter__(self):
+        self.prev = getattr(_CTX, "mesh", None)
+        self.prev_perf = getattr(_CTX, "perf", {})
+        _CTX.mesh = self.mesh
+        _CTX.perf = self.perf
+        return self.mesh
+
+    def __exit__(self, *exc):
+        _CTX.mesh = self.prev
+        _CTX.perf = self.prev_perf
+        return False
+
+
+def perf_option(name: str, default=False):
+    return getattr(_CTX, "perf", {}).get(name, default)
+
+
+def logical_axes(mesh: Mesh, logical: str):
+    names = mesh.axis_names
+    # dp_over_model: params replicated, model axis = extra data parallelism.
+    # zero3: same batch layout but params/opt fully sharded over
+    # (data, model) with per-layer all-gather (ZeRO-3 / pure-FSDP).
+    flat_dp = perf_option("dp_over_model") or perf_option("zero3")
+    if logical == "dp":
+        order = ("pod", "data", "model") if flat_dp else ("pod", "data")
+        axes = tuple(a for a in order if a in names)
+        return axes if axes else None
+    if logical == "fsdp":
+        if perf_option("zero3"):
+            axes = tuple(a for a in ("data", "model") if a in names)
+            return axes if axes else None
+        if perf_option("dp_over_model") or perf_option("no_fsdp"):
+            return None   # no_fsdp: serving keeps params TP-only (no
+            # per-layer all-gathers on the decode path)
+        return "data" if "data" in names else None
+    if logical == "tp":
+        if flat_dp:
+            return None
+        return "model" if "model" in names else None
+    if logical == "sp":       # sequence-parallel residual axis
+        if flat_dp or not perf_option("seq_shard"):
+            return None
+        return "model" if "model" in names else None
+    return None
+
+
+def constrain(x, *dims: str | None):
+    """with_sharding_constraint by logical axis names; no-op without mesh.
+    Axes are applied only when the dim divides evenly (e.g. 8 kv heads on a
+    16-way model axis stay replicated rather than padded)."""
+    mesh = getattr(_CTX, "mesh", None)
+    if mesh is None:
+        return x
+    assert len(dims) == x.ndim, (dims, x.shape)
+    spec = []
+    for d, size in zip(dims, x.shape):
+        ax = logical_axes(mesh, d) if d else None
+        if ax is not None:
+            n = 1
+            for a in (ax if isinstance(ax, tuple) else (ax,)):
+                n *= mesh.shape[a]
+            if size % n != 0:
+                ax = None
+        spec.append(ax)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, P(*spec)))
+
+
+def data_spec(mesh: Mesh, ndim: int) -> NamedSharding:
+    """Batch-leading arrays: shard dim0 over dp."""
+    return NamedSharding(mesh, P(logical_axes(mesh, "dp"),
+                                 *([None] * (ndim - 1))))
+
+
+# ---------------------------------------------------------------------------
+# parameter specs by leaf name
+# ---------------------------------------------------------------------------
+
+def _div(shape, i, mesh, ax):
+    if ax is None:
+        return None
+    axes = (ax,) if isinstance(ax, str) else tuple(ax)
+    size = 1
+    for a in axes:
+        size *= mesh.shape[a]
+    return ax if shape[i] % size == 0 else None
+
+
+def _leaf_spec(path: tuple[str, ...], shape, mesh: Mesh, fsdp: bool):
+    tp = logical_axes(mesh, "tp")
+    fa = logical_axes(mesh, "fsdp") if fsdp else None
+    name = path[-1]
+    stacked = 1 if "blocks" in path else 0      # leading n_super dim
+    nd = len(shape)
+    spec = [None] * nd
+    moe = "moe" in path and "shared" not in path
+
+    def setd(i, ax):
+        spec[i] = _div(shape, i, mesh, ax)
+
+    if name in ("scale", "bias", "A_log", "D", "dt_bias", "conv_b",
+                "bq", "bk", "bv") or nd - stacked <= 1:
+        pass
+    elif name == "table":
+        setd(0, tp)
+    elif name == "router":
+        setd(nd - 2, fa)
+    elif name == "conv_w":
+        setd(nd - 1, tp)
+    elif name in ("wq", "wk", "wv", "w_in", "w_gate"):
+        if moe and nd - stacked == 3:           # (E, D, F)
+            if tp and shape[stacked] % mesh.shape[tp] == 0:
+                setd(stacked, tp)               # EP
+                setd(nd - 2, fa)
+            else:
+                setd(nd - 2, fa)
+                setd(nd - 1, tp)                # TP inside expert
+        else:
+            setd(nd - 2, fa)
+            setd(nd - 1, tp)
+    elif name in ("wo", "w_out"):
+        if moe and nd - stacked == 3:           # (E, F, D)
+            if tp and shape[stacked] % mesh.shape[tp] == 0:
+                setd(stacked, tp)
+                setd(nd - 1, fa)
+            else:
+                setd(nd - 2, tp)
+                setd(nd - 1, fa)
+        else:
+            setd(nd - 2, tp)
+            setd(nd - 1, fa)
+    else:                                       # unknown 2D+: fsdp last dim
+        setd(nd - 1, fa)
+    return P(*spec)
+
+
+def param_specs(params, mesh: Mesh, fsdp: bool = True):
+    """Pytree of NamedSharding mirroring ``params``."""
+
+    def walk(path, node):
+        if isinstance(node, dict):
+            return {k: walk(path + (k,), v) for k, v in node.items()}
+        if isinstance(node, (list, tuple)):
+            out = [walk(path + (str(i),), v) for i, v in enumerate(node)]
+            return type(node)(out)
+        return NamedSharding(mesh, _leaf_spec(path, node.shape, mesh, fsdp))
+
+    return walk((), params)
+
+
+def named(mesh: Mesh, *axes) -> NamedSharding:
+    return NamedSharding(mesh, P(*axes))

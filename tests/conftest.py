@@ -1,0 +1,17 @@
+"""Shared fixtures.  NOTE: XLA_FLAGS / 512-device forcing is deliberately
+NOT set here — smoke tests and benches see the real (1-device) host; only
+launch/dryrun.py forces placeholder devices (per the assignment)."""
+import jax
+import numpy as np
+import pytest
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0)
+
+
+def tol_for(dtype):
+    import jax.numpy as jnp
+    return {"float32": dict(rtol=2e-3, atol=2e-3),
+            "bfloat16": dict(rtol=5e-2, atol=5e-2)}[jnp.dtype(dtype).name]

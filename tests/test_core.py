@@ -1,0 +1,125 @@
+"""The paper's contribution: graph / cost model / selector / scheduler."""
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (Op, OpGraph, best_algorithm, co_execution_time,
+                        compare_policies, profile, schedule, select_fastest,
+                        select_for_group, serial_time, spatial_time,
+                        supported_algorithms)
+from repro.core import cost_model as cm
+
+
+def _inception(g, name, cin, n1, r3, n3, r5, n5, pp, hw=28, bs=32, dep="in"):
+    for nm, kh, k, c in [("1x1", 1, n1, cin), ("r3", 1, r3, cin),
+                         ("r5", 1, r5, cin), ("pp", 1, pp, cin)]:
+        g.add(Op.make(f"{name}/{nm}", "conv2d", n=bs, h=hw, w=hw, c=c,
+                      kh=kh, kw=kh, k=k, stride=1), [dep])
+    g.add(Op.make(f"{name}/3x3", "conv2d", n=bs, h=hw, w=hw, c=r3, kh=3,
+                  kw=3, k=n3, stride=1), [f"{name}/r3"])
+    g.add(Op.make(f"{name}/5x5", "conv2d", n=bs, h=hw, w=hw, c=r5, kh=5,
+                  kw=5, k=n5, stride=1), [f"{name}/r5"])
+    g.add(Op.make(f"{name}/join", "pointwise",
+                  elements=bs * hw * hw * (n1 + n3 + n5 + pp)),
+          [f"{name}/1x1", f"{name}/3x3", f"{name}/5x5", f"{name}/pp"])
+    return f"{name}/join"
+
+
+@pytest.fixture
+def googlenet_head():
+    g = OpGraph()
+    g.add(Op.make("in", "pointwise", elements=1))
+    d = _inception(g, "3a", 192, 64, 96, 128, 16, 32, 32)
+    _inception(g, "3b", 256, 128, 128, 192, 32, 96, 64, dep=d)
+    return g
+
+
+def test_graph_topology(googlenet_head):
+    g = googlenet_head
+    levels = g.levels()
+    assert levels[0] == ["in"]
+    assert set(levels[1]) == {"3a/1x1", "3a/r3", "3a/r5", "3a/pp"}
+    assert g.independent("3a/1x1", "3a/3x3")         # C1: cross-layer ILP
+    assert not g.independent("3a/r3", "3a/3x3")
+    assert len(g.independent_sets()) >= 2
+
+
+def test_profiles_are_complementary(googlenet_head):
+    """Table-1 analogue: algorithms for one op differ in boundedness."""
+    op = googlenet_head.ops["3b/5x5"]
+    profs = {a: profile(op, a) for a in supported_algorithms(op)}
+    bounds = {p.bound for p in profs.values()}
+    assert len(profs) >= 2
+    # workspace differs by orders of magnitude across algorithms (C4)
+    ws = sorted(p.workspace_bytes for p in profs.values())
+    assert ws[0] == 0 and ws[-1] > 1e6
+
+
+def test_workspace_time_not_correlated():
+    """Table 2: the fastest algorithm may need far MORE workspace.  The
+    inception 5x5 reduce branch (c=16) is MXU-misaligned, so im2col (big
+    patch workspace, aligned GEMM) beats zero-workspace direct."""
+    op = Op.make("c", "conv2d", n=32, h=28, w=28, c=16, kh=5, kw=5, k=96,
+                 stride=1)
+    profs = {a: profile(op, a) for a in supported_algorithms(op)}
+    assert profs["im2col_gemm"].time < profs["direct"].time
+    assert profs["im2col_gemm"].workspace_bytes \
+        > profs["direct"].workspace_bytes
+    # rankings by time and by workspace disagree (non-correlation)
+    by_time = sorted(profs.values(), key=lambda p: p.time)
+    by_ws = sorted(profs.values(), key=lambda p: p.workspace_bytes)
+    assert [p.algorithm for p in by_time] != [p.algorithm for p in by_ws]
+
+
+def test_co_execution_beats_serial_for_complementary_pair():
+    """C3: compute-bound + memory-bound co-execute faster than serial."""
+    big = Op.make("big", "conv2d", n=32, h=28, w=28, c=256, kh=5, kw=5,
+                  k=128, stride=1)
+    small = Op.make("small", "conv2d", n=32, h=28, w=28, c=256, kh=1, kw=1,
+                    k=64, stride=1)
+    sel, t_group = select_for_group([big, small])
+    t_serial = best_algorithm(big)[1] + best_algorithm(small)[1]
+    assert t_group < t_serial
+
+
+def test_workspace_budget_forces_serialization():
+    """C2: when no algorithm combination fits, the group serializes."""
+    ops = [Op.make(f"o{i}", "conv2d", n=64, h=56, w=56, c=256, kh=3, kw=3,
+                   k=256, stride=1) for i in range(2)]
+    # impossible budgets: no algorithm pair fits (HBM nor VMEM)
+    sel, t = select_for_group(ops, hbm_budget=1.0, vmem_budget=1.0)
+    t_serial = sum(best_algorithm(o)[1] for o in ops)
+    assert t == pytest.approx(t_serial)
+
+
+def test_scheduler_finds_concurrent_win(googlenet_head):
+    res = compare_policies(googlenet_head)
+    assert res["speedup"] > 1.02
+    multi = [g for g in res["concurrent"].groups if len(g.ops) > 1]
+    assert multi, "scheduler found no co-execution groups"
+    # fastest-per-op selection differs from concurrency-aware (C3)
+    fastest = select_fastest(googlenet_head).algorithms
+    conc = res["concurrent"].algorithms
+    assert any(fastest[n] != conc[n] for n in fastest)
+
+
+def test_spatial_partitioning_scales():
+    ops = [Op.make(f"b{i}", "matmul", m=4096, k=4096, n=4096)
+           for i in range(4)]
+    profs = [profile(o, "mxu128") for o in ops]
+    t1 = spatial_time(profs, chips=4)
+    t2 = spatial_time(profs, chips=16)
+    assert t2 < t1 < serial_time(profs)
+
+
+@settings(max_examples=30, deadline=None)
+@given(m=st.integers(64, 4096), k=st.integers(64, 4096),
+       n=st.integers(64, 4096))
+def test_cost_model_properties(m, k, n):
+    """Properties: times positive; co-exec never slower than modeled sum;
+    group makespan monotone in membership."""
+    a = Op.make("a", "matmul", m=m, k=k, n=n)
+    b = Op.make("b", "matmul", m=n, k=m, n=k)
+    pa, pb = profile(a, "mxu128"), profile(b, "mxu128")
+    assert pa.time > 0 and pa.flops > 0 and pa.hbm_bytes > 0
+    assert co_execution_time([pa, pb]) <= serial_time([pa, pb]) + 1e-12
+    assert co_execution_time([pa]) >= min(pa.compute_time, pa.memory_time)

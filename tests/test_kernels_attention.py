@@ -1,0 +1,74 @@
+"""Flash attention kernel vs oracle: GQA / causal / window / softcap."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro import kernels as K
+from repro.kernels import ref
+
+CASES = [
+    # (b, sq, skv, hq, hkv, d, causal, window, softcap)
+    (2, 128, 128, 4, 2, 64, True, None, None),
+    (1, 100, 100, 8, 8, 64, True, None, None),
+    (1, 1, 256, 4, 1, 64, True, None, None),          # decode
+    (2, 128, 128, 4, 4, 64, True, 32, None),          # sliding window
+    (1, 96, 96, 2, 2, 64, True, None, 30.0),          # softcap (gemma2)
+    (1, 64, 64, 2, 2, 64, False, None, None),         # encoder
+    (1, 1, 300, 8, 2, 128, True, 64, 50.0),
+    (2, 256, 256, 8, 2, 128, True, None, None),
+]
+
+
+@pytest.mark.parametrize("alg", K.ATTENTION_ALGORITHMS)
+@pytest.mark.parametrize("case", CASES)
+def test_attention_algorithms(alg, case):
+    b, sq, skv, hq, hkv, d, causal, window, softcap = case
+    ks = jax.random.split(jax.random.PRNGKey(abs(hash(case)) % 2**31), 3)
+    q = jax.random.normal(ks[0], (b, sq, hq, d), jnp.float32)
+    k = jax.random.normal(ks[1], (b, skv, hkv, d), jnp.float32)
+    v = jax.random.normal(ks[2], (b, skv, hkv, d), jnp.float32)
+    got = K.attention(q, k, v, causal=causal, window=window, softcap=softcap,
+                      algorithm=alg, block_q=64, block_k=64)
+    want = ref.attention_ref(q, k, v, causal=causal, window=window,
+                             softcap=softcap)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-3, atol=2e-3)
+
+
+def test_flash_equals_materialized():
+    """The two algorithms are numerically interchangeable (paper C3: the
+    choice is a resource decision, not a semantics decision)."""
+    ks = jax.random.split(jax.random.PRNGKey(7), 3)
+    q = jax.random.normal(ks[0], (2, 64, 4, 64))
+    k = jax.random.normal(ks[1], (2, 64, 2, 64))
+    v = jax.random.normal(ks[2], (2, 64, 2, 64))
+    a = K.attention(q, k, v, algorithm="flash", block_q=32, block_k=32)
+    b = K.attention(q, k, v, algorithm="materialized")
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                               rtol=2e-3, atol=2e-3)
+
+
+def test_workspace_materialized_scales_with_skv():
+    w1 = K.attention_workspace_bytes("materialized", 1, 128, 1024, 8)
+    w2 = K.attention_workspace_bytes("materialized", 1, 128, 2048, 8)
+    assert w2 == 2 * w1 and K.attention_workspace_bytes("flash", 1, 128, 2048, 8) == 0
+
+
+@settings(max_examples=15, deadline=None)
+@given(sq=st.integers(1, 96), skv=st.integers(8, 160),
+       hkv=st.sampled_from([1, 2]), g=st.sampled_from([1, 2, 4]),
+       window=st.sampled_from([None, 16, 64]))
+def test_attention_property(sq, skv, hkv, g, window):
+    """Property: flash == oracle for arbitrary (sq, skv, gqa, window)."""
+    if sq > skv:
+        sq = skv
+    ks = jax.random.split(jax.random.PRNGKey(sq * 1000 + skv), 3)
+    q = jax.random.normal(ks[0], (1, sq, hkv * g, 32))
+    k = jax.random.normal(ks[1], (1, skv, hkv, 32))
+    v = jax.random.normal(ks[2], (1, skv, hkv, 32))
+    got = K.attention(q, k, v, window=window, block_q=32, block_k=32)
+    want = ref.attention_ref(q, k, v, window=window)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=3e-3, atol=3e-3)

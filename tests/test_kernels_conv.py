@@ -1,0 +1,59 @@
+"""Conv2D algorithm zoo vs lax.conv oracle (the paper's core op)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import kernels as K
+from repro.kernels import ref
+from conftest import tol_for
+
+CASES = [
+    # (n, h, w, c, kh, kw, k, stride, padding)
+    (2, 16, 16, 32, 3, 3, 64, 1, "SAME"),
+    (2, 15, 15, 16, 3, 3, 24, 1, "SAME"),
+    (1, 16, 16, 8, 5, 5, 16, 1, "SAME"),
+    (2, 16, 16, 8, 3, 3, 16, 2, "SAME"),
+    (1, 14, 14, 8, 1, 1, 16, 1, "VALID"),
+    (1, 16, 16, 8, 3, 3, 16, 1, "VALID"),
+    (1, 28, 28, 192, 1, 1, 64, 1, "SAME"),      # inception 3a 1x1
+    (1, 8, 8, 4, 7, 7, 8, 2, "SAME"),           # stem-style
+]
+
+
+@pytest.mark.parametrize("alg", K.CONV2D_ALGORITHMS)
+@pytest.mark.parametrize("case", CASES)
+def test_conv2d_algorithms(alg, case):
+    n, h, w, c, kh, kw, k, s, pad = case
+    if not K.conv2d_supported(alg, kh, kw, s):
+        pytest.skip(f"{alg} unsupported for this input (cuDNN Table-2 "
+                    "footnote analogue)")
+    kx, kw_ = jax.random.split(jax.random.PRNGKey(hash(case) % 2**31))
+    x = jax.random.normal(kx, (n, h, w, c), jnp.float32)
+    wgt = jax.random.normal(kw_, (kh, kw, c, k), jnp.float32) * 0.1
+    got = K.conv2d(x, wgt, stride=s, padding=pad, algorithm=alg)
+    want = ref.conv2d_ref(x, wgt, stride=s, padding=pad)
+    tol = dict(rtol=5e-3, atol=5e-3) if alg == "winograd3x3" \
+        else tol_for(jnp.float32)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), **tol)
+
+
+def test_conv2d_bf16():
+    x = jax.random.normal(jax.random.PRNGKey(0), (2, 16, 16, 16), jnp.bfloat16)
+    w = jax.random.normal(jax.random.PRNGKey(1), (3, 3, 16, 32), jnp.bfloat16) * 0.1
+    for alg in K.CONV2D_ALGORITHMS:
+        got = K.conv2d(x, w, algorithm=alg)
+        want = ref.conv2d_ref(x, w)
+        np.testing.assert_allclose(np.asarray(got, np.float32),
+                                   np.asarray(want, np.float32),
+                                   **tol_for(jnp.bfloat16))
+
+
+def test_workspace_ordering_matches_paper_table2():
+    """im2col (PRECOMP_GEMM analogue) >> winograd > direct == 0 workspace."""
+    xs, ws = (32, 28, 28, 256), (3, 3, 256, 128)
+    im2col = K.conv2d_workspace_bytes("im2col_gemm", xs, ws)
+    wino = K.conv2d_workspace_bytes("winograd3x3", xs, ws)
+    direct = K.conv2d_workspace_bytes("direct", xs, ws)
+    assert im2col > 0 and wino > 0 and direct == 0
+    assert im2col > wino  # 9x patch duplication vs 16/4 tile transform

@@ -1,0 +1,84 @@
+"""Mamba-2 SSD kernel vs quadratic oracle."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro import kernels as K
+from repro.kernels import ref
+from repro.kernels.ssd import ssd_chunked
+
+CASES = [
+    # (b, s, h, p, g, n, chunk)
+    (2, 256, 4, 16, 2, 32, 64),
+    (1, 100, 2, 8, 1, 16, 32),     # non-divisible seq
+    (1, 64, 8, 32, 8, 64, 64),     # single chunk
+    (2, 96, 4, 64, 1, 128, 32),    # mamba2-370m-like dims
+]
+
+
+def _inputs(case, key=0):
+    b, s, h, p, g, n, chunk = case
+    ks = jax.random.split(jax.random.PRNGKey(key), 5)
+    x = jax.random.normal(ks[0], (b, s, h, p)) * 0.5
+    a = -jnp.abs(jax.random.normal(ks[1], (b, s, h))) * 0.3
+    bb = jax.random.normal(ks[2], (b, s, g, n)) * (n ** -0.5)
+    cc = jax.random.normal(ks[3], (b, s, g, n)) * (n ** -0.5)
+    d = jax.random.normal(ks[4], (h,))
+    return x, a, bb, cc, d
+
+
+@pytest.mark.parametrize("alg", K.SSD_ALGORITHMS)
+@pytest.mark.parametrize("case", CASES)
+def test_ssd_algorithms(alg, case):
+    x, a, bb, cc, d = _inputs(case)
+    got = K.ssd(x, a, bb, cc, chunk=case[-1], d_skip=d, algorithm=alg)
+    want = ref.ssd_ref(x, a, bb, cc, d_skip=d)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-3, atol=2e-3)
+
+
+def test_ssd_chunk_invariance():
+    """Chunk size is an algorithm knob, not a semantics knob (paper C3)."""
+    case = (1, 128, 4, 16, 2, 32, 0)
+    x, a, bb, cc, d = _inputs(case)
+    outs = [ssd_chunked(x, a, bb, cc, chunk=c, interpret=True)
+            for c in (16, 32, 64, 128)]
+    for o in outs[1:]:
+        np.testing.assert_allclose(np.asarray(outs[0]), np.asarray(o),
+                                   rtol=2e-3, atol=2e-3)
+
+
+def test_ssd_init_state_continuation():
+    """Processing [first half] then [second half from state] == full pass."""
+    case = (1, 128, 2, 16, 1, 32, 32)
+    x, a, bb, cc, _ = _inputs(case)
+    full = ssd_chunked(x, a, bb, cc, chunk=32, interpret=True)
+    y1, st = ssd_chunked(x[:, :64], a[:, :64], bb[:, :64], cc[:, :64],
+                         chunk=32, return_final_state=True, interpret=True)
+    y2 = ssd_chunked(x[:, 64:], a[:, 64:], bb[:, 64:], cc[:, 64:],
+                     chunk=32, init_state=st, interpret=True)
+    got = jnp.concatenate([y1, y2], axis=1)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(full),
+                               rtol=2e-3, atol=2e-3)
+
+
+def test_ssd_workspace_quadratic_blowup():
+    """The materialized algorithm's workspace is the paper's C4 hazard."""
+    wq = K.ssd_workspace_bytes("quadratic", 1, 32768, 8, 128, 64)
+    wc = K.ssd_workspace_bytes("chunked", 1, 32768, 8, 128, 64)
+    # ratio = S*chunk/(N*P) = 512x at 32k tokens; grows linearly with S
+    assert wq / wc > 100
+    assert K.ssd_workspace_bytes("quadratic", 1, 2 * 32768, 8, 128, 64) \
+        == 4 * wq
+
+
+@settings(max_examples=10, deadline=None)
+@given(s=st.integers(4, 80), chunk=st.sampled_from([8, 16, 32]))
+def test_ssd_property_seq_len(s, chunk):
+    x, a, bb, cc, _ = _inputs((1, s, 2, 8, 1, 16, chunk), key=s)
+    got = ssd_chunked(x, a, bb, cc, chunk=chunk, interpret=True)
+    want = ref.ssd_ref(x, a, bb, cc)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=3e-3, atol=3e-3)

@@ -1,0 +1,145 @@
+"""Hypothesis property tests on system invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import Op, OpGraph, schedule
+from repro.data import SyntheticLM
+from repro.models import layers as L
+from repro.roofline.analyze import HloModule
+
+
+# ---------------------------------------------------------------------------
+# graph invariants
+# ---------------------------------------------------------------------------
+
+def _random_dag(n_ops: int, seed: int) -> OpGraph:
+    rng = np.random.default_rng(seed)
+    g = OpGraph()
+    for i in range(n_ops):
+        deps = [f"op{j}" for j in range(i) if rng.random() < 0.3]
+        g.add(Op.make(f"op{i}", "matmul", m=int(rng.integers(64, 512)),
+                      k=256, n=256), deps)
+    return g
+
+
+@settings(max_examples=20, deadline=None)
+@given(n=st.integers(2, 12), seed=st.integers(0, 1000))
+def test_graph_levels_partition_and_schedule_covers(n, seed):
+    g = _random_dag(n, seed)
+    levels = g.levels()
+    flat = [x for lvl in levels for x in lvl]
+    assert sorted(flat) == sorted(g.ops)           # levels partition the DAG
+    # independence is symmetric and anti-reflexive on dependent pairs
+    for lvl in levels:
+        for a in lvl:
+            for b in lvl:
+                if a != b:
+                    assert g.independent(a, b) == g.independent(b, a)
+    # every schedule covers every op exactly once
+    sch = schedule(g)
+    seen = [o for grp in sch.groups for o in grp.ops]
+    assert sorted(seen) == sorted(g.ops)
+    # co-execution groups contain only mutually independent ops
+    for grp in sch.groups:
+        for a in grp.ops:
+            for b in grp.ops:
+                if a != b:
+                    assert g.independent(a, b), (a, b)
+
+
+@settings(max_examples=20, deadline=None)
+@given(n=st.integers(2, 10), seed=st.integers(0, 1000))
+def test_concurrent_never_slower_than_serial(n, seed):
+    g = _random_dag(n, seed)
+    serial = schedule(g, concurrent=False).makespan
+    conc = schedule(g, concurrent=True).makespan
+    assert conc <= serial * 1.001
+
+
+# ---------------------------------------------------------------------------
+# data pipeline
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=10, deadline=None)
+@given(hosts=st.sampled_from([1, 2, 4]), step=st.integers(0, 50))
+def test_pipeline_host_decomposition(hosts, step):
+    """Any host count yields the same per-host-shard determinism and the
+    full batch is recoverable (shapes compose)."""
+    src = SyntheticLM(vocab=101, seq_len=8, global_batch=8)
+    shards = [src.batch_at(step, host_index=h, host_count=hosts)
+              for h in range(hosts)]
+    total = sum(s["tokens"].shape[0] for s in shards)
+    assert total == 8
+    again = [src.batch_at(step, host_index=h, host_count=hosts)
+             for h in range(hosts)]
+    for a, b in zip(shards, again):
+        np.testing.assert_array_equal(a["tokens"], b["tokens"])
+
+
+# ---------------------------------------------------------------------------
+# layers
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=15, deadline=None)
+@given(d=st.sampled_from([8, 32, 128]), scale=st.floats(0.1, 10.0))
+def test_rmsnorm_scale_invariance(d, scale):
+    """RMSNorm(x) == RMSNorm(c*x) — the defining invariant."""
+    p = L.rmsnorm_init(d)
+    x = jax.random.normal(jax.random.PRNGKey(d), (2, 5, d))
+    a = L.rmsnorm(p, x)
+    b = L.rmsnorm(p, x * scale)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-3,
+                               atol=1e-4)
+
+
+@settings(max_examples=15, deadline=None)
+@given(s=st.integers(1, 16), theta=st.sampled_from([1e4, 5e5]))
+def test_rope_preserves_norm_and_relativity(s, theta):
+    d = 32
+    x = jax.random.normal(jax.random.PRNGKey(s), (1, s, 2, d))
+    pos = jnp.arange(s)[None]
+    y = L.rope(x, pos, theta)
+    # rotation preserves per-head norms
+    np.testing.assert_allclose(np.asarray(jnp.linalg.norm(y, axis=-1)),
+                               np.asarray(jnp.linalg.norm(x, axis=-1)),
+                               rtol=1e-4, atol=1e-4)
+    # dot products depend only on relative offset
+    q = L.rope(x, pos, theta)
+    k = L.rope(x, pos + 7, theta)
+    d1 = jnp.einsum("bshd,bshd->bsh", q, k)
+    q2 = L.rope(x, pos + 3, theta)
+    k2 = L.rope(x, pos + 10, theta)
+    d2 = jnp.einsum("bshd,bshd->bsh", q2, k2)
+    np.testing.assert_allclose(np.asarray(d1), np.asarray(d2), rtol=1e-3,
+                               atol=1e-3)
+
+
+def test_cross_entropy_matches_manual():
+    logits = jax.random.normal(jax.random.PRNGKey(0), (4, 7, 13))
+    labels = jax.random.randint(jax.random.PRNGKey(1), (4, 7), 0, 13)
+    got = L.cross_entropy(logits, labels)
+    p = jax.nn.log_softmax(logits, -1)
+    want = -jnp.take_along_axis(p, labels[..., None], -1).mean()
+    np.testing.assert_allclose(float(got), float(want), rtol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# roofline analyzer ring formulas
+# ---------------------------------------------------------------------------
+
+def test_collective_ring_models():
+    hlo = """
+HloModule test
+ENTRY %main.1 (p0: f32[64,128]) -> f32[64,128] {
+  %p0 = f32[64,128]{1,0} parameter(0)
+  %ag = f32[64,128]{1,0} all-gather(%p0), replica_groups={{0,1,2,3}}
+  %ar = f32[64,128]{1,0} all-reduce(%ag), replica_groups={{0,1,2,3}}, to_apply=%add
+  ROOT %cp = f32[64,128]{1,0} collective-permute(%ar), source_target_pairs={{0,1}}
+}
+"""
+    cost = HloModule(hlo).cost()
+    b = 64 * 128 * 4
+    want = b * 3 / 4 + b * 2 * 3 / 4 + b   # AG + AR + permute
+    assert abs(cost.wire_bytes - want) / want < 1e-6

@@ -1,0 +1,145 @@
+"""Sharding specs + spatial branch-parallelism + ring collectives.
+
+Multi-device cases run in a subprocess with 8 forced host devices so the
+main pytest process keeps the real (1-device) topology.
+"""
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax
+import pytest
+
+from repro.configs import get_config
+from repro.launch.steps import input_specs  # noqa: F401 (import check)
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _run_in_subprocess(code: str):
+    env = dict(os.environ,
+               XLA_FLAGS="--xla_force_host_platform_device_count=8",
+               PYTHONPATH=os.path.join(REPO, "src"))
+    res = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
+                         capture_output=True, text=True, env=env,
+                         timeout=600)
+    assert res.returncode == 0, f"\nSTDOUT:{res.stdout}\nSTDERR:{res.stderr}"
+    return res.stdout
+
+
+def test_param_specs_divisibility_rules():
+    """Non-divisible dims must stay unsharded in param specs."""
+    code = """
+    import jax, jax.numpy as jnp
+    from jax.sharding import PartitionSpec as P
+    from repro.configs import get_config
+    from repro.models import transformer as T
+    from repro.sharding import param_specs
+    mesh = jax.make_mesh((4, 2), ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,)*2)
+    for arch in ("internvl2_1b", "qwen2_moe_a2_7b", "llama3_8b"):
+        cfg = get_config(arch)
+        sds = jax.eval_shape(lambda k: T.init_params(cfg, k, jnp.bfloat16),
+                             jax.random.PRNGKey(0))
+        specs = param_specs(sds, mesh)
+        for (leaf, spec) in zip(jax.tree.leaves(sds), jax.tree.leaves(
+                specs, is_leaf=lambda x: hasattr(x, "spec"))):
+            for dim, ax in zip(leaf.shape, spec.spec):
+                if ax is None: continue
+                axes = ax if isinstance(ax, tuple) else (ax,)
+                n = 1
+                for a in axes: n *= mesh.shape[a]
+                assert dim % n == 0, (arch, leaf.shape, spec.spec)
+    print("param specs ok")
+    """
+    assert "param specs ok" in _run_in_subprocess(code)
+
+
+def test_spatial_branch_parallel_matches_serial():
+    """Inter-chip spatial partitioning (the paper's inter-SM analogue)
+    computes exactly what serial branch execution computes."""
+    code = """
+    import jax, jax.numpy as jnp, numpy as np
+    from repro.core import Branches, run_spatial, run_xla
+    mesh = jax.make_mesh((8,), ("model",),
+                         axis_types=(jax.sharding.AxisType.Auto,))
+    fns = [lambda x, i=i: jnp.tanh(x * (i + 1)) for i in range(4)]
+    br = Branches(fns, combine="concat")
+    x = jax.random.normal(jax.random.PRNGKey(0), (16, 12))
+    want = run_xla(br, x)
+    got = jax.jit(lambda x: run_spatial(br, x, mesh))(x)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+    # sum combine too (MoE-style join)
+    br2 = Branches(fns, combine="sum")
+    np.testing.assert_allclose(
+        np.asarray(jax.jit(lambda x: run_spatial(br2, x, mesh))(x)),
+        np.asarray(run_xla(br2, x)), rtol=1e-5, atol=1e-5)
+    print("spatial ok")
+    """
+    assert "spatial ok" in _run_in_subprocess(code)
+
+
+def test_ring_collective_matmuls():
+    code = """
+    import jax, jax.numpy as jnp, numpy as np
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    from repro.sharding.collectives import (matmul_allgather_x,
+                                            matmul_reducescatter)
+    mesh = jax.make_mesh((8,), ("model",),
+                         axis_types=(jax.sharding.AxisType.Auto,))
+    k1, k2 = jax.random.split(jax.random.PRNGKey(0))
+    x = jax.random.normal(k1, (64, 32)); w = jax.random.normal(k2, (32, 48))
+    xs = jax.device_put(x, NamedSharding(mesh, P("model", None)))
+    ws = jax.device_put(w, NamedSharding(mesh, P(None, "model")))
+    y = jax.jit(lambda a, b: matmul_allgather_x(a, b, mesh))(xs, ws)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(x @ w), rtol=1e-4,
+                               atol=1e-4)
+    x2 = jax.random.normal(k1, (64, 128)); w2 = jax.random.normal(k2, (128, 40))
+    xs2 = jax.device_put(x2, NamedSharding(mesh, P(None, "model")))
+    ws2 = jax.device_put(w2, NamedSharding(mesh, P("model", None)))
+    y2 = jax.jit(lambda a, b: matmul_reducescatter(a, b, mesh))(xs2, ws2)
+    np.testing.assert_allclose(np.asarray(y2), np.asarray(x2 @ w2),
+                               rtol=1e-4, atol=1e-4)
+    print("rings ok")
+    """
+    assert "rings ok" in _run_in_subprocess(code)
+
+
+def test_sharded_train_step_matches_single_device():
+    """DP+TP sharded train step == single-device train step (same math)."""
+    code = """
+    import jax, jax.numpy as jnp, numpy as np
+    from repro.configs import get_reduced, SHAPES
+    from repro.launch import steps as ST
+    from repro.models import transformer as T
+    from repro.sharding import specs as SH, param_specs, data_spec
+    cfg = get_reduced("llama3_8b")
+    params = T.init_params(cfg, jax.random.PRNGKey(0))
+    opt = ST.make_optimizer(cfg)
+    state = opt.init(params)
+    batch = {"tokens": jax.random.randint(jax.random.PRNGKey(1), (8, 32), 0,
+                                          cfg.vocab)}
+    batch["labels"] = batch["tokens"]
+    fn = ST.make_train_step(cfg, opt, remat=False)
+    p1, s1, m1 = jax.jit(fn)(params, state, batch)
+
+    mesh = jax.make_mesh((4, 2), ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,)*2)
+    ps = param_specs(params, mesh)
+    params_sh = jax.device_put(params, ps)
+    state_sh = {"step": jax.device_put(state["step"]),
+                "m": jax.device_put(state["m"], ps),
+                "v": jax.device_put(state["v"], ps)}
+    batch_sh = jax.device_put(batch, ST.batch_shardings(cfg, mesh, batch))
+    with SH.activations_on(mesh):
+        p2, s2, m2 = jax.jit(fn)(params_sh, state_sh, batch_sh)
+    assert abs(float(m1["loss"]) - float(m2["loss"])) < 1e-3, \
+        (float(m1["loss"]), float(m2["loss"]))
+    for a, b in zip(jax.tree.leaves(p1), jax.tree.leaves(p2)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=2e-3,
+                                   atol=2e-3)
+    print("sharded step ok")
+    """
+    assert "sharded step ok" in _run_in_subprocess(code)
