@@ -1,0 +1,7 @@
+.PHONY: test bench
+
+test:
+	./scripts/ci.sh
+
+bench:
+	python benchmarks/run.py

@@ -65,6 +65,64 @@ def stacked_branch_gemm_bench(g: int = 4, m: int = 256, k: int = 512,
     }]
 
 
+def modeled_vs_executed_table(batch: int = 4, reps: int = 3):
+    """Modeled vs executed makespan per execution mode — the cost-model
+    validation loop the plan layer closes.
+
+    Lowers googlenet-reduced twice (serial baseline vs concurrent plan),
+    executes each plan eagerly with per-mode wall timing, and times the
+    jitted end-to-end forward.  Modeled columns are TPU-v5e analytic
+    seconds; executed columns are XLA-CPU wall time on this host — absolute
+    scales differ, the serial/planned RATIO is the comparable quantity.
+    """
+    from repro.configs import get_reduced
+    from repro.models import cnn as CNN
+
+    cfg = get_reduced("googlenet")
+    params = CNN.init_params(cfg, jax.random.PRNGKey(0))
+    x = jax.random.normal(jax.random.PRNGKey(1), (batch, *cfg.img),
+                          jnp.float32)
+    rows, totals = [], {}
+    for policy, concurrent in (("serial", False), ("planned", True)):
+        plan, _ = CNN.plan_cnn(cfg, batch, concurrent=concurrent)
+        CNN.forward_plan(params, cfg, x, plan)            # warm caches
+        timings: dict = {}
+        for _ in range(reps):
+            CNN.forward_plan(params, cfg, x, plan, timings=timings)
+        modeled: dict = {}
+        for g in plan.groups:
+            modeled[g.mode] = modeled.get(g.mode, 0.0) + g.modeled_time
+        for mode in sorted(set(modeled) | set(timings)):
+            rows.append({
+                "table": "plan_makespan", "policy": policy, "mode": mode,
+                "groups": sum(1 for g in plan.groups if g.mode == mode),
+                "modeled_us": round(modeled.get(mode, 0.0) * 1e6, 3),
+                "executed_us": round(timings.get(mode, 0.0) / reps * 1e6, 1),
+            })
+        fwd = jax.jit(lambda p, x: CNN.forward_plan(p, cfg, x, plan))
+        jax.block_until_ready(fwd(params, x))
+        t0 = time.time()
+        for _ in range(reps):
+            jax.block_until_ready(fwd(params, x))
+        wall = (time.time() - t0) / reps
+        totals[policy] = (plan.makespan, wall)
+        rows.append({
+            "table": "plan_makespan", "policy": policy, "mode": "TOTAL(jit)",
+            "groups": len(plan.groups),
+            "modeled_us": round(plan.makespan * 1e6, 3),
+            "executed_us": round(wall * 1e6, 1),
+        })
+    rows.append({
+        "table": "plan_makespan", "policy": "speedup", "mode": "-",
+        "groups": "-",
+        "modeled_us": round(totals["serial"][0]
+                            / max(totals["planned"][0], 1e-12), 3),
+        "executed_us": round(totals["serial"][1]
+                             / max(totals["planned"][1], 1e-12), 3),
+    })
+    return rows
+
+
 def fused_complementary_bench(m=2048, k=2048, n=2048, r=65536, c=128):
     """The intra-SM analogue made literal: one kernel co-executing an
     MXU-bound GEMM with an HBM-bound reduction.  Reports the modeled TPU

@@ -9,6 +9,9 @@ Prints ``name,us_per_call,derived`` CSV rows:
   makespan  — serial vs concurrency-aware scheduling on GoogleNet (the
               paper's proposal, modeled TPU makespan) + the 27-cases count.
   stacked   — intra-chip stacked branch GEMM vs per-branch GEMMs.
+  plan_makespan — modeled vs executed makespan per execution mode for the
+              lowered plan (core/plan.py), serial vs planned — the
+              cost-model validation table.
   roofline  — summary of the dry-run roofline table (if generated).
 
 Wall times are XLA-CPU (this host); modeled columns are TPU-v5e analytic.
@@ -20,6 +23,7 @@ import os
 import sys
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
 
 
 def _emit(rows):
@@ -35,7 +39,8 @@ def main() -> None:
                                          table1_resource_profiles,
                                          table2_workspace_vs_time)
     from benchmarks.branch_parallel_bench import (
-        fused_complementary_bench, makespan_table, stacked_branch_gemm_bench)
+        fused_complementary_bench, makespan_table, modeled_vs_executed_table,
+        stacked_branch_gemm_bench)
 
     print("name,us_per_call,derived")
     _emit(table1_resource_profiles())
@@ -44,6 +49,7 @@ def main() -> None:
     _emit(makespan_table())
     _emit(stacked_branch_gemm_bench())
     _emit(fused_complementary_bench())
+    _emit(modeled_vs_executed_table())
 
     # roofline summary (from results/roofline.json if the dry-run ran)
     rl = os.path.join(os.path.dirname(__file__), "..", "results",

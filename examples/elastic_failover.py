@@ -53,8 +53,8 @@ def main():
                            "total": 20})
         state = opt.init(params)
         mgr = CheckpointManager("%s")
-        mesh = jax.make_mesh((4, 2), ("data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,)*2)
+        from repro.launch.mesh import make_mesh
+        mesh = make_mesh((4, 2), ("data", "model"))
         ps = param_specs(params, mesh)
         sh = {"params": ps,
               "opt": {"step": None, "m": ps, "v": ps},

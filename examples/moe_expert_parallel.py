@@ -40,8 +40,8 @@ def main():
     print(f"[1] single-device loss = {float(m_ref['loss']):.5f}")
 
     # expert-parallel mesh
-    mesh = jax.make_mesh((4, 2), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    from repro.launch.mesh import make_mesh
+    mesh = make_mesh((4, 2), ("data", "model"))
     with SH.activations_on(mesh):
         ps = param_specs(params, mesh)
         spec = jax.tree.leaves(

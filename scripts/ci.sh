@@ -1,0 +1,6 @@
+#!/usr/bin/env bash
+# Tier-1 verification, exactly as ROADMAP.md specifies.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+exec python -m pytest -x -q "$@"

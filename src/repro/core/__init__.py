@@ -16,3 +16,6 @@ from repro.core.scheduler import CoGroup, Schedule, schedule, compare_policies  
 from repro.core.branch_parallel import (                       # noqa: F401
     Branches, run, run_xla, run_spatial, run_stacked_matmul,
 )
+from repro.core.plan import (                                  # noqa: F401
+    ExecGroup, OpImpl, Plan, execute_plan, lower, run_plan, MODES,
+)

@@ -1,0 +1,351 @@
+"""Executable plan IR — the lowering layer between Schedule and kernels.
+
+``core/scheduler.py`` decides WHAT co-executes (CoGroups + per-op
+algorithms); this module decides HOW: ``lower()`` turns each CoGroup into an
+``ExecGroup`` with a concrete execution mode and ``run_plan`` /
+``execute_plan`` actually run it.  This is the piece the paper says
+frameworks are missing — they model inter-op parallelism but launch
+kernels serially — and the piece Opara-style systems add: an operator
+execution plan compiled from the DAG.
+
+Modes (mirroring ``core/branch_parallel.py``):
+
+  stacked — same-GEMM-shape branches (1x1 convs / matmuls reading inputs of
+            one shape) fuse into ONE Pallas kernel with a branch grid axis
+            (``kernels/branch_matmul.py``); heterogeneous output widths are
+            padded to a common N and sliced back.
+  fused   — a compute-bound GEMM paired with a memory-bound streamed
+            reduction co-execute in one grid (``kernels/fused_branches.py``)
+            so the reduction's HBM bytes ride under the GEMM's MXU work.
+  spatial — branches run on disjoint chips of a mesh's ``model`` axis via
+            ``core.branch_parallel.run_spatial`` (needs a mesh, branch
+            count dividing the axis, and identical output shapes).
+  serial  — one op after another with the scheduler-chosen per-op
+            algorithms (the algorithms-dict path ``models/cnn.py::forward``
+            has always had); also the fallback when budgets are infeasible.
+  xla     — emit the ops together inside one jit and trust XLA to
+            interleave them (the framework baseline the paper critiques).
+
+``lower`` re-checks the workspace/VMEM budgets (paper C2): a group whose
+combined footprint no longer fits is demoted to ``serial``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax.numpy as jnp
+
+from repro.core import cost_model as cm
+from repro.core.graph import OpGraph
+from repro.core.scheduler import Schedule
+
+MODES = ("stacked", "fused", "spatial", "serial", "xla")
+
+
+@dataclasses.dataclass(frozen=True)
+class ExecGroup:
+    """One schedulable unit of the executable plan."""
+    mode: str                      # one of MODES
+    ops: tuple[str, ...]
+    algorithms: dict[str, str]     # op -> algorithm (serial fallback path)
+    modeled_time: float            # cost-model makespan under ``mode``
+    reason: str = ""               # why ``mode`` was chosen (debugging)
+
+    def __post_init__(self):
+        if self.mode not in MODES:
+            raise ValueError(f"unknown mode {self.mode}")
+
+
+@dataclasses.dataclass
+class Plan:
+    """Ordered ExecGroups + the context needed to execute them."""
+    groups: list[ExecGroup]
+    context: dict = dataclasses.field(default_factory=dict)
+
+    @property
+    def makespan(self) -> float:
+        return sum(g.modeled_time for g in self.groups)
+
+    @property
+    def algorithms(self) -> dict[str, str]:
+        out: dict[str, str] = {}
+        for g in self.groups:
+            out.update(g.algorithms)
+        return out
+
+    def mode_counts(self) -> dict[str, int]:
+        out: dict[str, int] = {}
+        for g in self.groups:
+            out[g.mode] = out.get(g.mode, 0) + 1
+        return out
+
+    def groups_of_mode(self, mode: str) -> list[ExecGroup]:
+        return [g for g in self.groups if g.mode == mode]
+
+
+# ---------------------------------------------------------------------------
+# lowering
+# ---------------------------------------------------------------------------
+
+def _gemm_shape(op) -> tuple[int, int, int] | None:
+    """(M, K, N) if the op is expressible as one GEMM, else None.
+
+    1x1 stride-1 convs are channel matmuls (M = n*h*w, K = c, N = k);
+    matmul ops are themselves.
+    """
+    p = op.p
+    if op.kind == "matmul":
+        return p["m"], p["k"], p["n"]
+    if op.kind == "conv2d" and (p["kh"], p["kw"]) == (1, 1) \
+            and p.get("stride", 1) == 1:
+        return p["n"] * p["h"] * p["w"], p["c"], p["k"]
+    return None
+
+
+def _stackable(ops) -> bool:
+    """Same-shape GEMM branches (N may differ — padded to a common width)."""
+    shapes = [_gemm_shape(op) for op in ops]
+    if any(s is None for s in shapes):
+        return False
+    m0, k0, _ = shapes[0]
+    return all(m == m0 and k == k0 for m, k, _ in shapes)
+
+
+def _fusable_pair(ops, profiles) -> bool:
+    """One compute-bound GEMM + one memory-bound pointwise stream — the
+    shape ``kernels/fused_branches.py`` executes."""
+    if len(ops) != 2:
+        return False
+    gemm = [op for op in ops if _gemm_shape(op) is not None]
+    stream = [op for op in ops if op.kind == "pointwise"]
+    if len(gemm) != 1 or len(stream) != 1:
+        return False
+    bound = {op.name: pr.bound for op, pr in zip(ops, profiles)}
+    return bound[gemm[0].name] == "compute" and bound[stream[0].name] == "memory"
+
+
+def _spatial_ok(graph: OpGraph, ops, mesh) -> bool:
+    """Branches with one shared producer and identical output element
+    counts, dividing the mesh's model axis."""
+    if mesh is None or "model" not in getattr(mesh, "axis_names", ()):
+        return False
+    if mesh.shape["model"] % len(ops) != 0 or mesh.shape["model"] < len(ops):
+        return False
+    preds = [graph.pred[op.name] for op in ops]
+    if any(len(p) != 1 for p in preds) or len({tuple(sorted(p))
+                                               for p in preds}) != 1:
+        return False
+    outs = set()
+    for op in ops:
+        p = op.p
+        if op.kind == "conv2d":
+            s = p.get("stride", 1)
+            outs.add((p["n"], -(-p["h"] // s), -(-p["w"] // s), p["k"]))
+        elif op.kind == "matmul":
+            outs.add((p["m"], p["n"]))
+        else:
+            return False
+    return len(outs) == 1
+
+
+def lower(graph: OpGraph, schedule: Schedule, *, mesh=None,
+          hbm_budget: float = cm.HBM_BYTES * 0.25,
+          vmem_budget: float = cm.VMEM_BYTES) -> Plan:
+    """Lower a Schedule to an executable Plan.
+
+    Mode choice per CoGroup, in priority order: budget-infeasible or
+    singleton -> serial; same-shape GEMM branches -> stacked;
+    compute+memory complementary (GEMM, pointwise) pair -> fused;
+    mesh-divisible same-output branches -> spatial; anything else that
+    still co-executes -> xla.
+    """
+    groups: list[ExecGroup] = []
+    for cg in schedule.groups:
+        ops = [graph.ops[n] for n in cg.ops]
+        profs = [cm.profile(op, cg.algorithms[op.name]) for op in ops]
+        feasible = (sum(p.workspace_bytes for p in profs) <= hbm_budget
+                    and sum(p.vmem_bytes for p in profs) <= vmem_budget)
+        if len(ops) == 1:
+            mode, reason = "serial", "singleton"
+        elif cg.serialized or not feasible:
+            mode, reason = "serial", "budget-infeasible (C2 fallback)"
+        elif _stackable(ops):
+            mode, reason = "stacked", "same-shape GEMM branches"
+        elif _fusable_pair(ops, profs):
+            mode, reason = "fused", "compute+memory complementary pair"
+        elif _spatial_ok(graph, ops, mesh):
+            mode, reason = "spatial", "branches fit the mesh model axis"
+        else:
+            mode, reason = "xla", "heterogeneous group -> XLA interleave"
+        if mode == "serial":
+            t = cm.serial_time(profs)
+        elif mode == "spatial":
+            t = cm.spatial_time(profs, mesh.shape["model"])
+        else:
+            t = cm.co_execution_time(profs)
+        groups.append(ExecGroup(mode, tuple(cg.ops), dict(cg.algorithms),
+                                t, reason))
+    return Plan(groups, context={"mesh": mesh})
+
+
+# ---------------------------------------------------------------------------
+# execution
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class OpImpl:
+    """Executable binding of one graph op (built by the model layer).
+
+    ``fn(*dep_arrays, algorithm=...)`` is the universal path (serial / xla
+    groups).  The optional views unlock the co-execution kernels:
+
+      gemm_x/gemm_w/gemm_post — the op as ``post(x2d @ w)`` with
+          x2d (M, K) from the deps and w (K, N): stacked + fused modes.
+      stream_z/stream_post — the op as ``post(silu(z).sum(0))`` with
+          z (R, C) from the deps: the streamed branch of fused mode.
+    """
+    deps: tuple[str, ...]
+    fn: Callable[..., Any]
+    gemm_x: Callable[..., Any] | None = None
+    gemm_w: Any = None
+    gemm_post: Callable[..., Any] | None = None
+    stream_z: Callable[..., Any] | None = None
+    stream_post: Callable[..., Any] | None = None
+
+
+def _dep_args(impl: OpImpl, env: dict):
+    return [env[d] for d in impl.deps]
+
+
+def _has_gemm_views(impl: OpImpl) -> bool:
+    return (impl.gemm_x is not None and impl.gemm_w is not None
+            and impl.gemm_post is not None)
+
+
+def _has_stream_views(impl: OpImpl) -> bool:
+    return impl.stream_z is not None and impl.stream_post is not None
+
+
+def _stacked_runnable(group: ExecGroup, impls, pending) -> bool:
+    """All ops unseeded and every impl carries the GEMM views the stacked
+    kernel needs — ``lower`` decides modes from the graph alone, so fn-only
+    ``OpImpl`` bindings (the model-agnostic path) must fall back here."""
+    return (len(pending) == len(group.ops)
+            and all(_has_gemm_views(impls[n]) for n in group.ops))
+
+
+def _fused_runnable(group: ExecGroup, impls, pending) -> bool:
+    if len(pending) != len(group.ops):
+        return False
+    gemm = [n for n in group.ops if _has_gemm_views(impls[n])]
+    stream = [n for n in group.ops if _has_stream_views(impls[n])]
+    return len(gemm) == 1 and len(stream) == 1 and gemm[0] != stream[0]
+
+
+def _run_stacked(group: ExecGroup, impls: dict[str, OpImpl], env: dict,
+                 interpret):
+    from repro.kernels import branch_matmul  # padded (G,M,K)x(G,K,N) wrapper
+    xs, ws, ns = [], [], []
+    for name in group.ops:
+        impl = impls[name]
+        xs.append(impl.gemm_x(*_dep_args(impl, env)))
+        ws.append(impl.gemm_w)
+        ns.append(impl.gemm_w.shape[1])
+    n_max = max(ns)
+    ws = [jnp.pad(w, ((0, 0), (0, n_max - w.shape[1]))) for w in ws]
+    ys = branch_matmul(jnp.stack(xs), jnp.stack(ws), interpret=interpret)
+    for i, name in enumerate(group.ops):
+        impl = impls[name]
+        env[name] = impl.gemm_post(ys[i][:, :ns[i]])
+
+
+def _run_fused(group: ExecGroup, impls: dict[str, OpImpl], env: dict,
+               interpret):
+    from repro.kernels.ops import fused_gemm_reduce  # padded wrapper
+    gemm = [n for n in group.ops if _has_gemm_views(impls[n])]
+    stream = [n for n in group.ops if _has_stream_views(impls[n])]
+    assert len(gemm) == 1 and len(stream) == 1, group.ops
+    gi, si = impls[gemm[0]], impls[stream[0]]
+    x2d = gi.gemm_x(*_dep_args(gi, env))
+    z = si.stream_z(*_dep_args(si, env))
+    c, r = fused_gemm_reduce(x2d, gi.gemm_w, z, interpret=interpret)
+    env[gemm[0]] = gi.gemm_post(c)
+    env[stream[0]] = si.stream_post(r)
+
+
+def _run_spatial_group(group: ExecGroup, impls: dict[str, OpImpl], env: dict,
+                       mesh):
+    from repro.core import branch_parallel as bp
+    dep = impls[group.ops[0]].deps[0]
+    fns = [impls[n].fn for n in group.ops]
+    br = bp.Branches(fns, combine="stack")
+    ys = bp.run_spatial(br, env[dep], mesh)          # (G, B, ...)
+    for i, name in enumerate(group.ops):
+        env[name] = ys[i]
+
+
+def run_plan(impls: dict[str, OpImpl], env: dict, plan: Plan, *,
+             mesh=None, interpret=None, timings: dict | None = None) -> dict:
+    """Execute a lowered plan over ``impls``; returns the op->value env.
+
+    ``env`` seeds graph sources (ops with no deps / externally computed
+    values); seeded ops are never recomputed in any mode.  A co-execution
+    group (stacked / fused) whose impls lack the gemm/stream views — or
+    that is partially seeded — degrades to the per-op xla path rather than
+    failing: ``lower`` picks modes from the graph alone and cannot see the
+    bindings.  ``timings``, when a dict, collects eager per-mode wall time
+    {mode: seconds} — only meaningful outside jit; degraded groups are
+    keyed ``"<mode>->xla"`` so they never masquerade as the co-execution
+    kernel they skipped.
+    """
+    import time as _time
+    import jax as _jax
+
+    mesh = mesh if mesh is not None else plan.context.get("mesh")
+    for group in plan.groups:
+        t0 = _time.perf_counter() if timings is not None else 0.0
+        pending = [n for n in group.ops if n not in env]
+        if not pending:
+            continue
+        executed = group.mode
+        if group.mode == "stacked" and _stacked_runnable(group, impls,
+                                                         pending):
+            _run_stacked(group, impls, env, interpret)
+        elif group.mode == "fused" and _fused_runnable(group, impls,
+                                                       pending):
+            _run_fused(group, impls, env, interpret)
+        elif group.mode == "spatial" and len(pending) == len(group.ops):
+            _run_spatial_group(group, impls, env, mesh)
+        else:
+            # serial: scheduler-chosen per-op algorithm kernels.
+            # xla: native ops emitted together; XLA interleaves.  Also the
+            # degraded path for co-execution groups (see docstring).
+            if group.mode not in ("serial", "xla"):
+                executed = f"{group.mode}->xla"
+            for name in pending:
+                impl = impls[name]
+                alg = group.algorithms.get(name) if group.mode == "serial" \
+                    else "xla"
+                env[name] = impl.fn(*_dep_args(impl, env), algorithm=alg)
+        if timings is not None:
+            _jax.block_until_ready([env[n] for n in group.ops if n in env])
+            timings[executed] = timings.get(executed, 0.0) \
+                + (_time.perf_counter() - t0)
+    return env
+
+
+def execute_plan(params, x, plan: Plan, *, mesh=None, interpret=None):
+    """Entry point for the repo's native subject: run a plan produced by
+    ``models.cnn.plan_cnn`` on images ``x`` with CNN ``params``.
+
+    Model-agnostic execution (custom graphs) goes through ``run_plan`` with
+    explicit ``OpImpl`` bindings instead.
+    """
+    cfg = plan.context.get("cfg")
+    if cfg is None:
+        raise ValueError("plan has no cfg context — produce it with "
+                         "models.cnn.plan_cnn, or use run_plan directly")
+    from repro.models import cnn
+    return cnn.forward_plan(params, cfg, x, plan, mesh=mesh,
+                            interpret=interpret)

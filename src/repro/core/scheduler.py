@@ -8,6 +8,11 @@ packing ready ops into co-execution groups when (a) combined workspace and
 VMEM fit the budgets and (b) the modeled co-execution makespan beats serial
 execution.  Algorithm choice inside each group delegates to the
 concurrency-aware selector.
+
+A ``Schedule`` is a *decision*, not an execution: ``core/plan.py::lower``
+turns it into an executable Plan (stacked / fused / spatial / serial / xla
+per group) — without that lowering the co-execution choices never reach a
+kernel, which is precisely the framework flaw the paper documents.
 """
 from __future__ import annotations
 

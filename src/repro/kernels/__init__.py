@@ -1,10 +1,9 @@
 """Pallas TPU kernels: the per-op algorithm zoo (paper C3/C4) + oracles."""
 from repro.kernels.ops import (  # noqa: F401
-    attention, branch_matmul, conv2d, conv2d_supported, matmul, ssd,
+    attention, branch_matmul, conv2d, conv2d_supported, fused_gemm_reduce,
+    matmul, ssd,
     ATTENTION_ALGORITHMS, CONV2D_ALGORITHMS, MATMUL_ALGORITHMS, SSD_ALGORITHMS,
     attention_workspace_bytes, conv2d_workspace_bytes, matmul_workspace_bytes,
     matmul_vmem_bytes, ssd_workspace_bytes, default_interpret,
 )
-from repro.kernels.fused_branches import (  # noqa: F401
-    fused_gemm_reduce, fused_gemm_reduce_ref,
-)
+from repro.kernels.fused_branches import fused_gemm_reduce_ref  # noqa: F401

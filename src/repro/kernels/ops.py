@@ -17,6 +17,7 @@ from repro.kernels import conv2d as _conv
 from repro.kernels import flash_attention as _attn
 from repro.kernels import ssd as _ssd
 from repro.kernels import branch_matmul as _bmm
+from repro.kernels import fused_branches as _fused
 
 
 @functools.cache
@@ -123,8 +124,16 @@ SSD_ALGORITHMS = tuple(_ssd.SSD_ALGORITHMS)
 # ---------------------------------------------------------------------------
 
 def branch_matmul(x, y, *, interpret: bool | None = None):
-    """(G, M, K) @ (G, K, N) -> (G, M, N), padded per-branch."""
+    """(G, M, K) @ (G, K, N) -> (G, M, N), padded per-branch.
+
+    Differentiable: the custom VJP computes dx/dy with the SAME stacked
+    kernel (the backward GEMMs of G independent branches are themselves G
+    independent same-shape GEMMs)."""
     interpret = default_interpret() if interpret is None else interpret
+    return _branch_matmul_vjp(x, y, interpret)
+
+
+def _branch_matmul_padded(x, y, interpret: bool):
     g, m, k = x.shape
     _, _, n = y.shape
     bm = bn = bk = 128
@@ -133,3 +142,74 @@ def branch_matmul(x, y, *, interpret: bool | None = None):
     yp = jnp.pad(y, ((0, 0), (0, kp - k), (0, np_ - n)))
     out = _bmm.branch_matmul(xp, yp, interpret=interpret)
     return out[:, :m, :n]
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2,))
+def _branch_matmul_vjp(x, y, interpret):
+    return _branch_matmul_padded(x, y, interpret)
+
+
+def _branch_matmul_fwd(x, y, interpret):
+    return _branch_matmul_padded(x, y, interpret), (x, y)
+
+
+def _branch_matmul_bwd(interpret, res, g):
+    x, y = res
+    g = g.astype(x.dtype)
+    dx = _branch_matmul_padded(g, y.transpose(0, 2, 1), interpret)
+    dy = _branch_matmul_padded(x.transpose(0, 2, 1), g, interpret)
+    return dx, dy
+
+
+_branch_matmul_vjp.defvjp(_branch_matmul_fwd, _branch_matmul_bwd)
+
+
+# ---------------------------------------------------------------------------
+# fused complementary pair (GEMM + streamed reduction)
+# ---------------------------------------------------------------------------
+
+def fused_gemm_reduce(x, y, z, *, bm: int = 128, bn: int = 128,
+                      bk: int = 128, interpret: bool | None = None):
+    """(M, K) @ (K, N) co-executed with silu(z).sum(0) in one grid.
+
+    Pads x/y to the kernel's block shapes and slices the GEMM result back
+    (z row-padding is handled inside the kernel wrapper).  Differentiable:
+    like ``_conv_alg`` and ``branch_matmul``, the co-execution knob
+    concerns the forward kernel only — the custom VJP computes the GEMM
+    cotangents as plain GEMMs and pulls the reduction back through XLA's
+    silu, so plans with fused groups stay trainable."""
+    interpret = default_interpret() if interpret is None else interpret
+    return _fused_vjp(x, y, z, bm, bn, bk, interpret)
+
+
+def _fused_padded(x, y, z, bm, bn, bk, interpret):
+    m, k = x.shape
+    _, n = y.shape
+    mp, kp, np_ = _round_up(m, bm), _round_up(k, bk), _round_up(n, bn)
+    xp = jnp.pad(x, ((0, mp - m), (0, kp - k)))
+    yp = jnp.pad(y, ((0, kp - k), (0, np_ - n)))
+    c, r = _fused.fused_gemm_reduce(xp, yp, z, bm=bm, bn=bn, bk=bk,
+                                    interpret=interpret)
+    return c[:m, :n], r
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6))
+def _fused_vjp(x, y, z, bm, bn, bk, interpret):
+    return _fused_padded(x, y, z, bm, bn, bk, interpret)
+
+
+def _fused_fwd(x, y, z, bm, bn, bk, interpret):
+    return _fused_padded(x, y, z, bm, bn, bk, interpret), (x, y, z)
+
+
+def _fused_bwd(bm, bn, bk, interpret, res, g):
+    x, y, z = res
+    dc, dr = g
+    dc = dc.astype(x.dtype)
+    _, red_vjp = jax.vjp(
+        lambda zz: jax.nn.silu(zz.astype(jnp.float32)).sum(0).astype(
+            zz.dtype), z)
+    return dc @ y.T, x.T @ dc, red_vjp(dr.astype(z.dtype))[0]
+
+
+_fused_vjp.defvjp(_fused_fwd, _fused_bwd)

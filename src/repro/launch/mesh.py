@@ -5,8 +5,23 @@ from __future__ import annotations
 import jax
 
 
-def _auto(n):
-    return (jax.sharding.AxisType.Auto,) * n
+def make_mesh(shape, names):
+    """``jax.make_mesh`` across jax versions.
+
+    Newer jax wants explicit ``axis_types=(AxisType.Auto, ...)`` to keep the
+    mesh out of explicit-sharding mode; older releases (< 0.5) have neither
+    the kwarg nor ``jax.sharding.AxisType``.  Every mesh in this repo (and in
+    the test subprocesses) goes through here so version skew lives in one
+    place.
+    """
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    if axis_type is not None:
+        try:
+            return jax.make_mesh(shape, names,
+                                 axis_types=(axis_type.Auto,) * len(names))
+        except TypeError:
+            pass
+    return jax.make_mesh(shape, names)
 
 
 def make_production_mesh(*, multi_pod: bool = False):
@@ -14,10 +29,10 @@ def make_production_mesh(*, multi_pod: bool = False):
     Multi-pod: (pod=2, data=16, model=16) = 512 chips."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes, axis_types=_auto(len(axes)))
+    return make_mesh(shape, axes)
 
 
 def make_local_mesh():
     """Whatever this host has (tests / CPU examples)."""
     n = len(jax.devices())
-    return jax.make_mesh((n, 1), ("data", "model"), axis_types=_auto(2))
+    return make_mesh((n, 1), ("data", "model"))

@@ -54,6 +54,30 @@ def make_train_step(cfg: ModelConfig, optimizer: AdamW, *, impl="xla",
     return train_step
 
 
+def make_cnn_train_step(cfg, optimizer: AdamW, *, plan=None, algorithms=None,
+                        interpret=None):
+    """Train step for the CNN family (the paper's native subject).
+
+    ``plan`` is a ``core.plan.Plan`` from ``models.cnn.plan_cnn`` — branch
+    groups execute in their lowered co-execution mode; ``plan=None`` falls
+    back to the algorithms-dict serial path (``algorithms``), the knob
+    ``forward`` has always had.
+    """
+    from repro.models import cnn as CNN
+
+    kw: dict = {"plan": plan} if plan is not None \
+        else {"algorithms": algorithms}
+    if interpret is not None:
+        kw["interpret"] = interpret
+
+    def train_step(params, opt_state, batch):
+        (loss, parts), grads = jax.value_and_grad(
+            CNN.loss_fn, has_aux=True)(params, cfg, batch, **kw)
+        new_params, new_opt, info = optimizer.update(grads, opt_state, params)
+        return new_params, new_opt, {"loss": loss, **parts, **info}
+    return train_step
+
+
 def make_prefill_step(cfg: ModelConfig, *, impl="xla"):
     def prefill_step(params, tokens, cache, extra_embeds=None):
         return T.prefill(params, cfg, tokens, cache,

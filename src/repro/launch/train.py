@@ -6,6 +6,16 @@ the full configs on a production mesh (the dry-run proves those compile).
   PYTHONPATH=src python -m repro.launch.train --arch llama3-8b --reduced \
       --steps 200 --batch 8 --seq 128 --ckpt-dir /tmp/ckpt --ckpt-every 50
 
+The CNN family (googlenet) trains through the execution-plan path:
+``--plan concurrent`` lowers the scheduler's co-execution groups to a
+``core/plan.py`` Plan (stacked branch kernels etc.), ``--plan serial``
+re-plans with concurrency off (singleton groups, per-op-fastest
+algorithms — the paper's serial baseline), ``--plan none`` is the plain
+XLA forward:
+
+  PYTHONPATH=src python -m repro.launch.train --arch googlenet --reduced \
+      --steps 20 --batch 4 --plan concurrent
+
 Fault tolerance (DESIGN.md §6): atomic checkpoints every N steps including
 the data-iterator state; ``--resume`` restarts exactly where a previous run
 (or a preempted pod) stopped; SIGTERM triggers a final checkpoint before
@@ -24,9 +34,10 @@ import numpy as np
 
 from repro.checkpoint import CheckpointManager
 from repro.configs import get_config, get_reduced
-from repro.data import Pipeline, SyntheticLM
+from repro.data import Pipeline, SyntheticImages, SyntheticLM
 from repro.launch import steps as ST
 from repro.launch.mesh import make_local_mesh
+from repro.models import cnn as CNN
 from repro.models import transformer as T
 from repro.sharding import specs as SH
 
@@ -46,6 +57,11 @@ def main(argv=None):
     ap.add_argument("--log-every", type=int, default=10)
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--impl", default="xla", choices=["xla", "pallas"])
+    ap.add_argument("--plan", default="none",
+                    choices=["none", "serial", "concurrent"],
+                    help="CNN-family execution plan: lower the schedule to "
+                         "core/plan.py ExecGroups (concurrent), keep it "
+                         "serial, or bypass planning (none)")
     args = ap.parse_args(argv)
 
     cfg = get_reduced(args.arch) if args.reduced else get_config(args.arch)
@@ -53,15 +69,20 @@ def main(argv=None):
     print(f"[train] {cfg.name}: N={cfg.param_count()/1e6:.2f}M params, "
           f"mesh={dict(zip(mesh.axis_names, mesh.devices.shape))}")
 
+    is_cnn = getattr(cfg, "family", "lm") == "cnn"
     key = jax.random.PRNGKey(args.seed)
-    params = T.init_params(cfg, key)
+    params = CNN.init_params(cfg, key) if is_cnn else T.init_params(cfg, key)
     tc = ST.train_config_for(cfg)
     opt = ST.make_optimizer(cfg, tc)
     opt = type(opt)(**{**opt.__dict__, "lr": args.lr,
                        "total": args.steps, "warmup": max(args.steps // 20, 1)})
     opt_state = opt.init(params)
 
-    source = SyntheticLM(cfg.vocab, args.seq, args.batch, seed=args.seed)
+    if is_cnn:
+        source = SyntheticImages(cfg.img, cfg.num_classes, args.batch,
+                                 seed=args.seed)
+    else:
+        source = SyntheticLM(cfg.vocab, args.seq, args.batch, seed=args.seed)
     pipe = Pipeline(source)
     mgr = CheckpointManager(args.ckpt_dir) if args.ckpt_dir else None
     start = 0
@@ -74,7 +95,21 @@ def main(argv=None):
         start = manifest["step"]
         print(f"[train] resumed from step {start}")
 
-    step_fn = ST.make_train_step(cfg, opt, impl=args.impl, remat=False)
+    if is_cnn:
+        if args.impl != "xla":
+            print(f"[train] --impl {args.impl} ignored for CNN arch "
+                  "(kernel choice comes from the plan)")
+        plan = None
+        if args.plan != "none":
+            plan, _ = CNN.plan_cnn(cfg, args.batch,
+                                   concurrent=args.plan == "concurrent")
+            print(f"[train] plan: modes={plan.mode_counts()} "
+                  f"modeled_makespan={plan.makespan * 1e3:.3f} ms")
+        step_fn = ST.make_cnn_train_step(cfg, opt, plan=plan)
+    else:
+        if args.plan != "none":
+            print(f"[train] --plan {args.plan} ignored for non-CNN arch")
+        step_fn = ST.make_train_step(cfg, opt, impl=args.impl, remat=False)
     jitted = jax.jit(step_fn, donate_argnums=(0, 1))
 
     stop = {"now": False}

@@ -6,10 +6,17 @@ modules are ``core.Branches`` fork/joins, executable in any branch-parallel
 mode (xla / spatial).  ``build_graph`` exports the op-level DAG the paper
 reasons about — the benchmark harness runs the Table-1/Table-2 analogues
 and the 27-case complementary-pair sweep on it.
+
+Execution is plan-driven: ``plan_cnn`` lowers the scheduler's CoGroups to a
+``core.plan.Plan`` (stacked / fused / spatial / serial / xla per group) and
+``forward_plan`` executes it — same-shape 1x1 branches actually run in ONE
+stacked Pallas kernel instead of four serial convs.  The algorithms-dict
+path (``forward(algorithms=...)``) remains as the serial fallback.
 """
 from __future__ import annotations
 
 import dataclasses
+import functools
 from typing import Optional
 
 import jax
@@ -47,15 +54,53 @@ class CNNConfig:
     num_classes: int = 1000
     family: str = "cnn"
 
+    def param_count(self) -> int:
+        n, c = 0, self.img[2]
+        for (k, out, _s) in self.stem:
+            n += k * k * c * out + out
+            c = out
+        for m in self.modules:
+            n += c * m.n1 + m.n1
+            n += c * m.r3 + m.r3 + 9 * m.r3 * m.n3 + m.n3
+            n += c * m.r5 + m.r5 + 25 * m.r5 * m.n5 + m.n5
+            n += c * m.pp + m.pp
+            c = m.out
+        return n + c * self.num_classes + self.num_classes
+
 
 def conv(x, w, b, *, stride=1, algorithm="xla", interpret=None):
     if algorithm == "xla":
         y = k_ref.conv2d_ref(x, w, stride=stride, padding="SAME")
     else:
-        y = _CONV_ALGS[algorithm](
-            x, w, stride=stride, padding="SAME",
-            interpret=True if interpret is None else interpret)
+        y = _conv_alg(x, w, stride, algorithm,
+                      True if interpret is None else interpret)
     return jax.nn.relu(y + b)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3, 4))
+def _conv_alg(x, w, stride, algorithm, interpret):
+    """Algorithm-zoo conv with a reference-conv VJP: the paper's algorithm
+    knob concerns the FORWARD kernel; the gradient of the mathematical op
+    is algorithm-independent, so the backward pass routes through XLA's
+    conv transpose (Pallas kernels have no JVP rule to differentiate
+    through)."""
+    return _CONV_ALGS[algorithm](x, w, stride=stride, padding="SAME",
+                                 interpret=interpret)
+
+
+def _conv_alg_fwd(x, w, stride, algorithm, interpret):
+    return _conv_alg(x, w, stride, algorithm, interpret), (x, w)
+
+
+def _conv_alg_bwd(stride, algorithm, interpret, res, g):
+    x, w = res
+    _, vjp = jax.vjp(
+        lambda xx, ww: k_ref.conv2d_ref(xx, ww, stride=stride,
+                                        padding="SAME"), x, w)
+    return vjp(g.astype(x.dtype))
+
+
+_conv_alg.defvjp(_conv_alg_fwd, _conv_alg_bwd)
 
 
 def maxpool(x, k=3, stride=2):
@@ -138,9 +183,139 @@ def forward(params, cfg: CNNConfig, images, *, algorithms=None,
     return x @ params["head"]["w"] + params["head"]["b"]
 
 
-def loss_fn(params, cfg: CNNConfig, batch, **kw):
-    logits = forward(params, cfg, batch["images"], **kw)
+def loss_fn(params, cfg: CNNConfig, batch, *, plan=None, **kw):
+    if plan is not None:
+        logits = forward_plan(params, cfg, batch["images"], plan, **kw)
+    else:
+        logits = forward(params, cfg, batch["images"], **kw)
     return L.cross_entropy(logits, batch["labels"]), {}
+
+
+# ---------------------------------------------------------------------------
+# plan-driven execution (core/plan.py lowering of the schedule)
+# ---------------------------------------------------------------------------
+
+def _plan_impls(params, cfg: CNNConfig, interpret=None):
+    """``core.plan.OpImpl`` binding for every ``build_graph`` op.
+
+    Mirrors the shape walk of ``build_graph``; the inter-module maxpools
+    (which the op graph folds into its shape bookkeeping) are closed over
+    the consuming branches, memoized so each runs once per forward even
+    in eager execution.  Returns (impls, name of the final join op).
+    """
+    from repro.core.plan import OpImpl
+
+    def identity(x):
+        return x
+
+    impls: dict = {}
+    h, w = cfg.img[:2]
+    dep = "input"
+    for i, (pb, (k, out, s)) in enumerate(zip(params["stem"], cfg.stem)):
+        impls[f"stem{i}"] = OpImpl(
+            deps=(dep,),
+            fn=lambda x, algorithm="xla", pb=pb, s=s: conv(
+                x, pb["w"], pb["b"], stride=s, algorithm=algorithm,
+                interpret=interpret))
+        dep = f"stem{i}"
+        h, w = -(-h // s), -(-w // s)
+
+    def conv1x1_impl(pb, in_t, dep, oh, ow):
+        wmat = pb["w"].reshape(pb["w"].shape[2], pb["w"].shape[3])  # (C, K)
+
+        def gemm_post(y2d, pb=pb, oh=oh, ow=ow):
+            y = y2d.reshape(-1, oh, ow, y2d.shape[-1])
+            return jax.nn.relu(y + pb["b"])
+
+        return OpImpl(
+            deps=(dep,),
+            fn=lambda x, algorithm="xla", pb=pb, in_t=in_t: conv(
+                in_t(x), pb["w"], pb["b"], algorithm=algorithm,
+                interpret=interpret),
+            gemm_x=lambda x, in_t=in_t, cin=wmat.shape[0]: in_t(x).reshape(
+                -1, cin),
+            gemm_w=wmat,
+            gemm_post=gemm_post)
+
+    def memo1(fn):
+        """Share one computed value across the four branch impls that
+        close over it: within a forward every branch applies ``pre`` to
+        the same module input, so the inter-module maxpool runs once —
+        not once per branch — even in eager (un-CSE'd) execution."""
+        cell: list = []
+
+        def wrapped(x):
+            if not cell:
+                cell.append(fn(x))
+            return cell[0]
+        return wrapped
+
+    for i, p in enumerate(params["modules"]):
+        pooled = i in cfg.pool_between
+        if pooled:
+            h, w = -(-h // 2), -(-w // 2)
+        pre = memo1(lambda x: maxpool(x, 3, 2)) if pooled else identity
+        nm = f"inc{i}"
+        impls[f"{nm}/1x1"] = conv1x1_impl(p["b1"], pre, dep, h, w)
+        impls[f"{nm}/r3"] = conv1x1_impl(p["r3"], pre, dep, h, w)
+        impls[f"{nm}/r5"] = conv1x1_impl(p["r5"], pre, dep, h, w)
+        impls[f"{nm}/pp"] = conv1x1_impl(
+            p["pp"], lambda x, pre=pre: maxpool(pre(x), 3, 1), dep, h, w)
+        impls[f"{nm}/3x3"] = OpImpl(
+            deps=(f"{nm}/r3",),
+            fn=lambda x, algorithm="xla", pb=p["b3"]: conv(
+                x, pb["w"], pb["b"], algorithm=algorithm,
+                interpret=interpret))
+        impls[f"{nm}/5x5"] = OpImpl(
+            deps=(f"{nm}/r5",),
+            fn=lambda x, algorithm="xla", pb=p["b5"]: conv(
+                x, pb["w"], pb["b"], algorithm=algorithm,
+                interpret=interpret))
+        impls[f"{nm}/join"] = OpImpl(
+            deps=(f"{nm}/1x1", f"{nm}/3x3", f"{nm}/5x5", f"{nm}/pp"),
+            fn=lambda *ys, algorithm=None: jnp.concatenate(ys, axis=-1))
+        dep = f"{nm}/join"
+    return impls, dep
+
+
+def forward_plan(params, cfg: CNNConfig, images, plan, *, mesh=None,
+                 interpret=None, timings=None):
+    """Plan-driven forward: images (B, H, W, C) -> logits (B, classes).
+
+    ``plan`` comes from ``plan_cnn``; stacked groups run in one branch
+    kernel, serial groups use the scheduler algorithms, xla groups trust
+    XLA — see ``core/plan.py``.
+    """
+    from repro.core import plan as planlib
+    impls, out_name = _plan_impls(params, cfg, interpret=interpret)
+    env = {"input": images}
+    planlib.run_plan(impls, env, plan, mesh=mesh, interpret=interpret,
+                     timings=timings)
+    x = env[out_name].mean(axis=(1, 2))
+    return x @ params["head"]["w"] + params["head"]["b"]
+
+
+def plan_cnn(cfg: CNNConfig, batch: int, *, mesh=None, concurrent=True,
+             max_group: int = 4, hbm_budget: float | None = None,
+             vmem_budget: float | None = None):
+    """graph -> schedule -> executable plan for this CNN.
+
+    Returns (Plan, Schedule).  This supersedes ``schedule_algorithms``: the
+    plan carries the same per-op algorithm choices AND the per-group
+    execution mode that makes the co-execution decisions real.
+    """
+    from repro.core import plan as planlib
+    from repro.core import scheduler as S
+    kw = {}
+    if hbm_budget is not None:
+        kw["hbm_budget"] = hbm_budget
+    if vmem_budget is not None:
+        kw["vmem_budget"] = vmem_budget
+    g = build_graph(cfg, batch)
+    sch = S.schedule(g, concurrent=concurrent, max_group=max_group, **kw)
+    plan = planlib.lower(g, sch, mesh=mesh, **kw)
+    plan.context.update({"cfg": cfg, "batch": batch})
+    return plan, sch
 
 
 # ---------------------------------------------------------------------------
@@ -183,7 +358,12 @@ def build_graph(cfg: CNNConfig, batch: int) -> OpGraph:
 
 def schedule_algorithms(cfg: CNNConfig, batch: int, concurrent=True):
     """Run the core scheduler on the CNN graph -> per-module algorithm map
-    usable by ``forward(algorithms=...)``."""
+    usable by ``forward(algorithms=...)``.
+
+    Superseded by ``plan_cnn`` + ``forward_plan`` (the ``core/plan.py``
+    execution-plan IR): this path keeps only the algorithm choices and runs
+    every branch serially — the exact framework behaviour the paper
+    critiques.  It remains as the plan's ``serial`` fallback."""
     from repro.core import scheduler as S
     g = build_graph(cfg, batch)
     sch = S.schedule(g, concurrent=concurrent)

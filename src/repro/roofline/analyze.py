@@ -80,6 +80,31 @@ class Instr:
     op: str
     line: str
 
+    def operand_names(self) -> list[str]:
+        """Operand instruction names, tolerant of both HLO spellings:
+        bare (``dot(%a, %b)``) and inline-typed
+        (``dot(f32[64,128]{1,0} %a, ...)``, older jax dumps).  Scans from
+        the op's own paren (so tuple-typed results don't shadow the operand
+        list) to the matching close paren (types may nest parens and embed
+        commas)."""
+        idx = self.line.find(self.op + "(")
+        if idx < 0:
+            return []
+        rest = self.line[idx + len(self.op) + 1:]
+        depth, end = 0, len(rest)
+        for j, ch in enumerate(rest):
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                if depth == 0:
+                    end = j
+                    break
+                depth -= 1
+        seg = rest[:end]
+        if "%" in seg:
+            return re.findall(r"%([\w.\-]+)", seg)
+        return [o.strip().split()[-1] for o in seg.split(",") if o.strip()]
+
 
 @dataclasses.dataclass
 class HloCost:
@@ -149,26 +174,21 @@ class HloModule:
         for d in _shape_dims(instr.type_str):
             out_elems *= d
         # contraction size from lhs operand shape + contracting dims
-        ops = re.search(r"\(([^)]*)\)", instr.line)
+        names = instr.operand_names()
         lhs_k = 1
-        if ops:
-            names = [o.strip().lstrip("%") for o in ops.group(1).split(",")]
-            cd = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", instr.line)
-            if names and cd and names[0] in types:
-                dims = _shape_dims(types[names[0]])
-                for ax in cd.group(1).split(","):
-                    if ax and int(ax) < len(dims):
-                        lhs_k *= dims[int(ax)]
+        cd = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", instr.line)
+        if names and cd and names[0] in types:
+            dims = _shape_dims(types[names[0]])
+            for ax in cd.group(1).split(","):
+                if ax and int(ax) < len(dims):
+                    lhs_k *= dims[int(ax)]
         return 2.0 * out_elems * lhs_k
 
     def _operand_bytes(self, instr: Instr, types: dict[str, str]) -> int:
-        ops = re.search(r"\(([^)]*)\)", instr.line)
         total = 0
-        if ops:
-            for o in ops.group(1).split(","):
-                o = o.strip().lstrip("%")
-                if o in types:
-                    total += _type_bytes(types[o])
+        for o in instr.operand_names():
+            if o in types:
+                total += _type_bytes(types[o])
         return total
 
     def _collective(self, instr: Instr) -> tuple[str, float]:
@@ -234,12 +254,9 @@ class HloModule:
         instrs = self.comps.get(comp, [])
         root_name = instrs[-1].name if instrs else None
         for instr in instrs:
-            ops_m = re.search(r"\(([^)]*)\)", instr.line)
-            if ops_m:
-                for o in ops_m.group(1).split(","):
-                    o = o.strip().lstrip("%")
-                    if o in types:
-                        uses[o] = uses.get(o, 0) + 1
+            for o in instr.operand_names():
+                if o in types:
+                    uses[o] = uses.get(o, 0) + 1
 
         def _fused_bytes(instr):
             return 2.0 * _type_bytes(instr.type_str)
@@ -327,6 +344,19 @@ class HloModule:
 
 def analyze_hlo(text: str) -> HloCost:
     return HloModule(text).cost()
+
+
+def xla_cost_analysis(compiled) -> dict:
+    """``compiled.cost_analysis()`` across jax versions.
+
+    Older jax returns a one-element list of per-device-program dicts; newer
+    jax returns the dict directly.  Comparisons against the while-corrected
+    analyzer go through here.
+    """
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0]
+    return ca
 
 
 def roofline_terms(cost: HloCost, *, chips_note: str = "per-chip") -> dict:

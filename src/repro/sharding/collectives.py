@@ -22,10 +22,11 @@ import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 
-def _ring_allgather_matmul_local(x_local, w_local, *, axis: str):
+def _ring_allgather_matmul_local(x_local, w_local, *, axis: str, p: int):
     """Per-device body: x_local (m, K), w_local (K, n_local).
-    Computes allgather(x) @ w_local => (M, n_local), overlapped."""
-    p = jax.lax.axis_size(axis)
+    Computes allgather(x) @ w_local => (M, n_local), overlapped.
+    ``p`` is the static ring size (mesh.shape[axis] — jax.lax.axis_size is
+    not available on older jax, and the perm lists need a Python int)."""
     idx = jax.lax.axis_index(axis)
     m = x_local.shape[0]
 
@@ -50,17 +51,18 @@ def matmul_allgather_x(x, w, mesh, axis: str = "model"):
     Returns (M, N) sharded on N (replicated on M)."""
     from jax.experimental.shard_map import shard_map
     fn = shard_map(
-        functools.partial(_ring_allgather_matmul_local, axis=axis),
+        functools.partial(_ring_allgather_matmul_local, axis=axis,
+                          p=mesh.shape[axis]),
         mesh=mesh,
         in_specs=(P(axis, None), P(None, axis)),
         out_specs=P(None, axis), check_rep=False)
     return fn(x, w)
 
 
-def _ring_reducescatter_matmul_local(x_local, w_local, *, axis: str):
+def _ring_reducescatter_matmul_local(x_local, w_local, *, axis: str,
+                                     p: int):
     """Per-device body: x_local (M, k_local) k-sharded, w_local (k_local, N).
     y = reduce-scatter_M( sum_k x_k @ w_k ): returns (M/p, N) shard."""
-    p = jax.lax.axis_size(axis)
     idx = jax.lax.axis_index(axis)
     m = x_local.shape[0]
     ms = m // p
@@ -89,7 +91,8 @@ def matmul_reducescatter(x, w, mesh, axis: str = "model"):
     Returns y = x @ w reduce-scattered over M: (M, N) with M sharded."""
     from jax.experimental.shard_map import shard_map
     fn = shard_map(
-        functools.partial(_ring_reducescatter_matmul_local, axis=axis),
+        functools.partial(_ring_reducescatter_matmul_local, axis=axis,
+                          p=mesh.shape[axis]),
         mesh=mesh,
         in_specs=(P(None, axis), P(axis, None)),
         out_specs=P(axis, None), check_rep=False)

@@ -1,9 +1,50 @@
 """Shared fixtures.  NOTE: XLA_FLAGS / 512-device forcing is deliberately
 NOT set here — smoke tests and benches see the real (1-device) host; only
-launch/dryrun.py forces placeholder devices (per the assignment)."""
+launch/dryrun.py forces placeholder devices (per the assignment).
+
+Also provides a guarded ``hypothesis`` import: test modules do
+
+    from conftest import given, settings, st
+
+and get the real hypothesis API when it is installed, or skip-stubs when it
+is not — so every module collects (and its non-property tests run) on hosts
+without hypothesis.
+"""
 import jax
 import numpy as np
 import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st  # noqa: F401
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+    def given(*_args, **_kwargs):
+        """Stub @given: replace the property test with a zero-arg skipper
+        (a plain function, so pytest never tries to resolve the strategy
+        parameters as fixtures)."""
+        def deco(fn):
+            def _skipped():
+                pytest.skip("hypothesis not installed")
+            _skipped.__name__ = fn.__name__
+            _skipped.__doc__ = fn.__doc__
+            return _skipped
+        return deco
+
+    def settings(*_args, **_kwargs):
+        def deco(fn):
+            return fn
+        return deco
+
+    class _AnyStrategy:
+        """st.integers(...), st.sampled_from(...), ... — decoration-time
+        placeholders; the wrapped test is skipped before they are drawn."""
+
+        def __getattr__(self, _name):
+            return lambda *a, **k: None
+
+    st = _AnyStrategy()
 
 
 @pytest.fixture(scope="session")

@@ -1,6 +1,6 @@
 """The paper's contribution: graph / cost model / selector / scheduler."""
 import pytest
-from hypothesis import given, settings, strategies as st
+from conftest import given, settings, st  # hypothesis, or skip-stubs
 
 from repro.core import (Op, OpGraph, best_algorithm, co_execution_time,
                         compare_policies, profile, schedule, select_fastest,

@@ -7,7 +7,8 @@ import textwrap
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+import pytest  # noqa: F401
+from conftest import given, settings, st  # hypothesis, or skip-stubs
 
 from repro.models.moe import moe_init, _moe_apply_core
 
@@ -80,8 +81,8 @@ def test_train_perf_options_preserve_loss():
                                           cfg.vocab)}
     batch["labels"] = batch["tokens"]
     fn = ST.make_train_step(cfg, opt, remat=True)
-    mesh = jax.make_mesh((4, 2), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,)*2)
+    from repro.launch.mesh import make_mesh
+    mesh = make_mesh((4, 2), ("data", "model"))
     losses = {}
     for name, perf in [("baseline", {}),
                        ("moe_ep", {"moe_ep": True}),
@@ -123,8 +124,8 @@ def test_decode_cache_seq_shard_preserves_logits():
     tok = jax.random.randint(jax.random.PRNGKey(2), (B, 1), 0, cfg.vocab)
     fn = ST.make_decode_step(cfg)
     ref, _ = jax.jit(fn)(params, cache, tok, jnp.int32(S - 1))
-    mesh = jax.make_mesh((4, 2), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,)*2)
+    from repro.launch.mesh import make_mesh
+    mesh = make_mesh((4, 2), ("data", "model"))
     with SH.activations_on(mesh, no_fsdp=True, cache_seq_shard=True):
         ps = param_specs(params, mesh, fsdp=False)
         cs = ST.cache_shardings(cfg, mesh, cache, B)

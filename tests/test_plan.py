@@ -1,0 +1,272 @@
+"""The execution-plan layer: lowering modes + plan execution correctness."""
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config, get_reduced
+from repro.core import Op, OpGraph, OpImpl, execute_plan, lower, run_plan, \
+    schedule
+from repro.core.scheduler import CoGroup, Schedule
+from repro.models import cnn as CNN
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+# ---------------------------------------------------------------------------
+# lowering: mode per group shape
+# ---------------------------------------------------------------------------
+
+def test_lower_googlenet_mode_mix():
+    """The acceptance shape: every inception module's four 1x1 branches
+    stack into one kernel; the heterogeneous 3x3/5x5 pairs stay on XLA."""
+    plan, _ = CNN.plan_cnn(get_config("googlenet"), batch=32)
+    modes = plan.mode_counts()
+    assert modes.get("stacked", 0) >= 1, modes
+    assert modes.get("xla", 0) >= 1, modes
+    for g in plan.groups_of_mode("stacked"):
+        assert len(g.ops) > 1
+        assert all("join" not in n for n in g.ops)
+    # the schedule's algorithm choices survive lowering
+    assert set(plan.algorithms) == set(
+        CNN.build_graph(get_config("googlenet"), 32).ops)
+
+
+def test_lower_fused_pair_mode():
+    """A compute-bound GEMM + memory-bound pointwise pair lowers to the
+    fused co-execution kernel."""
+    g = OpGraph()
+    g.add(Op.make("gemm", "matmul", m=1024, k=2048, n=1024))
+    g.add(Op.make("red", "pointwise", elements=1 << 22))
+    cg = CoGroup(["gemm", "red"], {"gemm": "mxu128", "red": "vpu"}, 1.0)
+    plan = lower(g, Schedule([cg]))
+    assert plan.groups[0].mode == "fused", plan.groups[0]
+
+
+def test_lower_infeasible_budget_falls_back_to_serial():
+    """Paper C2: a group whose combined footprint exceeds the budget is
+    demoted to serial execution."""
+    cfg = get_reduced("googlenet")
+    g = CNN.build_graph(cfg, 2)
+    sch = schedule(g)
+    assert any(len(cg.ops) > 1 for cg in sch.groups)
+    plan = lower(g, sch, vmem_budget=1.0)
+    assert plan.mode_counts() == {"serial": len(plan.groups)}
+    assert any("C2" in grp.reason for grp in plan.groups
+               if len(grp.ops) > 1)
+    # and end-to-end: planning under a tiny budget never packs at all
+    plan2, _ = CNN.plan_cnn(cfg, 2, hbm_budget=1.0, vmem_budget=1.0)
+    assert set(plan2.mode_counts()) == {"serial"}
+
+
+def test_plan_makespan_and_algorithms_consistency():
+    cfg = get_reduced("googlenet")
+    plan, sch = CNN.plan_cnn(cfg, batch=2)
+    assert plan.makespan > 0
+    assert plan.algorithms == sch.algorithms
+    assert len(plan.groups) == len(sch.groups)
+
+
+# ---------------------------------------------------------------------------
+# execution: plan output == serial XLA forward
+# ---------------------------------------------------------------------------
+
+def test_execute_plan_matches_forward():
+    """2-module GoogleNet slice (googlenet-reduced), fp32 interpret mode:
+    the planned execution path is the same function as the plain forward."""
+    cfg = get_reduced("googlenet")
+    plan, _ = CNN.plan_cnn(cfg, batch=2)
+    assert plan.mode_counts().get("stacked", 0) >= 1
+    params = CNN.init_params(cfg, jax.random.PRNGKey(0))
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, *cfg.img), jnp.float32)
+    want = CNN.forward(params, cfg, x)
+    got = execute_plan(params, x, plan)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-4, atol=1e-4)
+    # jitted too (the path launch/train.py runs)
+    got_jit = jax.jit(lambda p, x: execute_plan(p, x, plan))(params, x)
+    np.testing.assert_allclose(np.asarray(got_jit), np.asarray(want),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_execute_serial_plan_matches_forward():
+    """concurrent=False lowers to all-serial groups whose algorithms match
+    the legacy schedule_algorithms path."""
+    cfg = get_reduced("googlenet")
+    plan, _ = CNN.plan_cnn(cfg, batch=2, concurrent=False)
+    assert set(plan.mode_counts()) == {"serial"}
+    params = CNN.init_params(cfg, jax.random.PRNGKey(0))
+    x = jax.random.normal(jax.random.PRNGKey(2), (2, *cfg.img), jnp.float32)
+    want = CNN.forward(params, cfg, x)
+    got = execute_plan(params, x, plan)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_plan_train_step_grads_match_unplanned():
+    cfg = get_reduced("googlenet")
+    plan, _ = CNN.plan_cnn(cfg, batch=2)
+    params = CNN.init_params(cfg, jax.random.PRNGKey(0))
+    batch = {"images": jax.random.normal(jax.random.PRNGKey(1),
+                                         (2, *cfg.img), jnp.float32),
+             "labels": jax.random.randint(jax.random.PRNGKey(2), (2,), 0,
+                                          cfg.num_classes)}
+    (lp, _), gp = jax.value_and_grad(CNN.loss_fn, has_aux=True)(
+        params, cfg, batch, plan=plan)
+    (l0, _), g0 = jax.value_and_grad(CNN.loss_fn, has_aux=True)(
+        params, cfg, batch)
+    assert abs(float(lp) - float(l0)) < 1e-4
+    for a, b in zip(jax.tree.leaves(g0), jax.tree.leaves(gp)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=2e-3, atol=2e-3)
+
+
+def test_run_plan_fused_group_matches_oracles():
+    g = OpGraph()
+    g.add(Op.make("gemm", "matmul", m=1024, k=2048, n=1024))
+    g.add(Op.make("red", "pointwise", elements=1 << 22))
+    cg = CoGroup(["gemm", "red"], {"gemm": "mxu128", "red": "vpu"}, 1.0)
+    plan = lower(g, Schedule([cg]))
+    assert plan.groups[0].mode == "fused"
+    k1, k2, k3 = jax.random.split(jax.random.PRNGKey(0), 3)
+    x = jax.random.normal(k1, (1024, 2048), jnp.float32) * 0.05
+    w = jax.random.normal(k2, (2048, 1024), jnp.float32) * 0.05
+    z = jax.random.normal(k3, (1 << 14, 256), jnp.float32)
+    impls = {
+        "gemm": OpImpl(deps=("xin",), fn=lambda x, algorithm=None: x @ w,
+                       gemm_x=lambda x: x, gemm_w=w,
+                       gemm_post=lambda y: y),
+        "red": OpImpl(deps=("zin",),
+                      fn=lambda z, algorithm=None: jax.nn.silu(z).sum(0),
+                      stream_z=lambda z: z, stream_post=lambda r: r),
+    }
+    env = run_plan(impls, {"xin": x, "zin": z}, plan)
+    np.testing.assert_allclose(np.asarray(env["gemm"]), np.asarray(x @ w),
+                               rtol=1e-4, atol=1e-3)
+    np.testing.assert_allclose(np.asarray(env["red"]),
+                               np.asarray(jax.nn.silu(z).sum(0)),
+                               rtol=1e-4, atol=1e-3)
+
+
+def test_run_plan_fused_group_trainable():
+    """Plans with fused groups differentiate: the fused kernel's custom
+    VJP routes the backward pass through XLA (like stacked/conv)."""
+    g = OpGraph()
+    g.add(Op.make("gemm", "matmul", m=1024, k=2048, n=1024))
+    g.add(Op.make("red", "pointwise", elements=1 << 22))
+    cg = CoGroup(["gemm", "red"], {"gemm": "mxu128", "red": "vpu"}, 1.0)
+    plan = lower(g, Schedule([cg]))
+    assert plan.groups[0].mode == "fused"
+    k1, k2, k3 = jax.random.split(jax.random.PRNGKey(0), 3)
+    x = jax.random.normal(k1, (256, 256), jnp.float32) * 0.1
+    w = jax.random.normal(k2, (256, 256), jnp.float32) * 0.1
+    z = jax.random.normal(k3, (512, 128), jnp.float32)
+    impls = {
+        "gemm": OpImpl(deps=("xin",), fn=lambda x, algorithm=None: x @ w,
+                       gemm_x=lambda x: x, gemm_w=w,
+                       gemm_post=lambda y: y),
+        "red": OpImpl(deps=("zin",),
+                      fn=lambda z, algorithm=None: jax.nn.silu(z).sum(0),
+                      stream_z=lambda z: z, stream_post=lambda r: r),
+    }
+
+    def loss(x, z):
+        env = run_plan(impls, {"xin": x, "zin": z}, plan)
+        return env["gemm"].sum() + env["red"].sum()
+
+    def loss_ref(x, z):
+        return (x @ w).sum() + jax.nn.silu(z).sum()
+
+    lp, (gx, gz) = jax.value_and_grad(loss, argnums=(0, 1))(x, z)
+    l0, (gx0, gz0) = jax.value_and_grad(loss_ref, argnums=(0, 1))(x, z)
+    np.testing.assert_allclose(float(lp), float(l0), rtol=1e-4)
+    np.testing.assert_allclose(np.asarray(gx), np.asarray(gx0),
+                               rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(gz), np.asarray(gz0),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_run_plan_falls_back_without_gemm_views():
+    """lower() picks modes from the graph alone, so fn-only OpImpl
+    bindings (the model-agnostic run_plan path) must degrade a stacked
+    group to the per-op path — and pre-seeded env values must survive."""
+    g = OpGraph()
+    g.add(Op.make("m0", "matmul", m=256, k=256, n=256))
+    g.add(Op.make("m1", "matmul", m=256, k=256, n=256))
+    cg = CoGroup(["m0", "m1"], {"m0": "mxu128", "m1": "mxu128"}, 1.0)
+    plan = lower(g, Schedule([cg]))
+    assert plan.groups[0].mode == "stacked"
+    k1, k2, k3 = jax.random.split(jax.random.PRNGKey(0), 3)
+    x = jax.random.normal(k1, (256, 256), jnp.float32) * 0.1
+    w0 = jax.random.normal(k2, (256, 256), jnp.float32) * 0.1
+    w1 = jax.random.normal(k3, (256, 256), jnp.float32) * 0.1
+    impls = {
+        "m0": OpImpl(deps=("xin",), fn=lambda x, algorithm=None: x @ w0),
+        "m1": OpImpl(deps=("xin",), fn=lambda x, algorithm=None: x @ w1),
+    }
+    env = run_plan(impls, {"xin": x}, plan)
+    np.testing.assert_allclose(np.asarray(env["m0"]), np.asarray(x @ w0),
+                               rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(env["m1"]), np.asarray(x @ w1),
+                               rtol=1e-5, atol=1e-5)
+    sentinel = jnp.zeros((256, 256), jnp.float32)
+    env2 = run_plan(impls, {"xin": x, "m0": sentinel}, plan)
+    np.testing.assert_array_equal(np.asarray(env2["m0"]),
+                                  np.asarray(sentinel))
+    np.testing.assert_allclose(np.asarray(env2["m1"]), np.asarray(x @ w1),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_run_plan_spatial_group_multichip():
+    """Spatial lowering + execution on a forced 8-device host (subprocess,
+    like tests/test_sharding.py)."""
+    code = """
+    import jax, jax.numpy as jnp, numpy as np
+    from repro.core import Op, OpGraph, OpImpl, lower, run_plan
+    from repro.core.scheduler import CoGroup, Schedule
+    from repro.launch.mesh import make_mesh
+    mesh = make_mesh((8,), ("model",))
+    g = OpGraph()
+    g.add(Op.make("src", "pointwise", elements=16 * 130 * 3))
+    # 3x3 convs with identical output shapes but DIFFERENT weights: not
+    # stackable (kh != 1), same-output -> spatial
+    for i in range(4):
+        g.add(Op.make(f"b{i}", "conv2d", n=16, h=8, w=8, c=3, kh=3, kw=3,
+                      k=8, stride=1), ["src"])
+    cg = CoGroup([f"b{i}" for i in range(4)],
+                 {f"b{i}": "im2col_gemm" for i in range(4)}, 1.0)
+    plan = lower(g, Schedule([CoGroup(["src"], {"src": "vpu"}, 0.0), cg]),
+                 mesh=mesh)
+    assert [gr.mode for gr in plan.groups] == ["serial", "spatial"], plan
+    x = jax.random.normal(jax.random.PRNGKey(0), (16, 8, 8, 3))
+    ws = [jax.random.normal(jax.random.PRNGKey(i + 1), (3, 3, 3, 8)) * 0.2
+          for i in range(4)]
+    from repro.kernels import ref as k_ref
+    impls = {"src": OpImpl(deps=("x0",),
+                           fn=lambda x, algorithm=None: jnp.tanh(x))}
+    for i in range(4):
+        impls[f"b{i}"] = OpImpl(
+            deps=("src",),
+            fn=lambda x, algorithm=None, w=ws[i]: k_ref.conv2d_ref(
+                x, w, stride=1, padding="SAME"))
+    env = run_plan(impls, {"x0": x}, plan, mesh=mesh)
+    for i in range(4):
+        want = k_ref.conv2d_ref(jnp.tanh(x), ws[i], stride=1,
+                                padding="SAME")
+        np.testing.assert_allclose(np.asarray(env[f"b{i}"]),
+                                   np.asarray(want), rtol=1e-5, atol=1e-5)
+    print("spatial plan ok")
+    """
+    env = dict(os.environ,
+               XLA_FLAGS="--xla_force_host_platform_device_count=8",
+               PYTHONPATH=os.path.join(REPO, "src"))
+    res = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
+                         capture_output=True, text=True, env=env,
+                         timeout=600)
+    assert res.returncode == 0, f"\nSTDOUT:{res.stdout}\nSTDERR:{res.stderr}"
+    assert "spatial plan ok" in res.stdout

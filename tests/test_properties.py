@@ -2,7 +2,8 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+import pytest  # noqa: F401
+from conftest import given, settings, st  # hypothesis, or skip-stubs
 
 from repro.core import Op, OpGraph, schedule
 from repro.data import SyntheticLM

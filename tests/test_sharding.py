@@ -36,8 +36,8 @@ def test_param_specs_divisibility_rules():
     from repro.configs import get_config
     from repro.models import transformer as T
     from repro.sharding import param_specs
-    mesh = jax.make_mesh((4, 2), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,)*2)
+    from repro.launch.mesh import make_mesh
+    mesh = make_mesh((4, 2), ("data", "model"))
     for arch in ("internvl2_1b", "qwen2_moe_a2_7b", "llama3_8b"):
         cfg = get_config(arch)
         sds = jax.eval_shape(lambda k: T.init_params(cfg, k, jnp.bfloat16),
@@ -62,8 +62,8 @@ def test_spatial_branch_parallel_matches_serial():
     code = """
     import jax, jax.numpy as jnp, numpy as np
     from repro.core import Branches, run_spatial, run_xla
-    mesh = jax.make_mesh((8,), ("model",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    from repro.launch.mesh import make_mesh
+    mesh = make_mesh((8,), ("model",))
     fns = [lambda x, i=i: jnp.tanh(x * (i + 1)) for i in range(4)]
     br = Branches(fns, combine="concat")
     x = jax.random.normal(jax.random.PRNGKey(0), (16, 12))
@@ -87,8 +87,8 @@ def test_ring_collective_matmuls():
     from jax.sharding import NamedSharding, PartitionSpec as P
     from repro.sharding.collectives import (matmul_allgather_x,
                                             matmul_reducescatter)
-    mesh = jax.make_mesh((8,), ("model",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    from repro.launch.mesh import make_mesh
+    mesh = make_mesh((8,), ("model",))
     k1, k2 = jax.random.split(jax.random.PRNGKey(0))
     x = jax.random.normal(k1, (64, 32)); w = jax.random.normal(k2, (32, 48))
     xs = jax.device_put(x, NamedSharding(mesh, P("model", None)))
@@ -125,8 +125,8 @@ def test_sharded_train_step_matches_single_device():
     fn = ST.make_train_step(cfg, opt, remat=False)
     p1, s1, m1 = jax.jit(fn)(params, state, batch)
 
-    mesh = jax.make_mesh((4, 2), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,)*2)
+    from repro.launch.mesh import make_mesh
+    mesh = make_mesh((4, 2), ("data", "model"))
     ps = param_specs(params, mesh)
     params_sh = jax.device_put(params, ps)
     state_sh = {"step": jax.device_put(state["step"]),
