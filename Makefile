@@ -1,7 +1,13 @@
-.PHONY: test bench
+.PHONY: test bench bench-smoke
 
 test:
 	./scripts/ci.sh
 
 bench:
 	python benchmarks/run.py
+
+# Seconds-scale benchmark smoke (tiny batch, few reps): keeps the benchmark
+# code paths compiling and running between PRs without the full run's cost.
+# Writes BENCH_plan.smoke.json, never the committed BENCH_plan.json baseline.
+bench-smoke:
+	python benchmarks/run.py --smoke

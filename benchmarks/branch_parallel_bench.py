@@ -123,6 +123,66 @@ def modeled_vs_executed_table(batch: int = 4, reps: int = 3):
     return rows
 
 
+def branch_mode_bench(batch: int = 2, reps: int = 5):
+    """grouped vs stacked vs serial wall time on one ragged Inception
+    module — the branch-GEMM benchmark.
+
+    The SAME CoGroups (the 1x1 quad and the im2col-viewed 3x3/5x5 pair)
+    execute under each forced plan mode: ``serial`` launches the
+    scheduler-chosen algorithm-zoo kernel per branch plus the separate
+    bias+ReLU pass, ``stacked`` pads every branch to the widest (K, N)
+    and runs the branch-grid kernel, ``grouped`` runs the ragged
+    grouped-GEMM kernel with the epilogue fused in-kernel.  Wall times
+    are this host (XLA-CPU, Pallas interpret); modeled columns are the
+    TPU-v5e analytic cost model — the same ordering story at both scales.
+    """
+    import dataclasses as _dc
+
+    from repro.core import (gemm_shape, grouped_time, profile, serial_time,
+                            stacked_time)
+    from repro.core.plan import Plan
+    from repro.models import cnn as CNN
+    from repro.models.cnn import CNNConfig, InceptionSpec
+
+    cfg = CNNConfig(name="bench-module", img=(16, 16, 64), stem=(),
+                    modules=(InceptionSpec(384, 96, 384, 8, 64, 48),),
+                    pool_between=(), num_classes=10)
+    g = CNN.build_graph(cfg, batch)
+    params = CNN.init_params(cfg, jax.random.PRNGKey(0))
+    x = jax.random.normal(jax.random.PRNGKey(1), (batch, *cfg.img),
+                          jnp.float32) * 0.1
+    plan, _ = CNN.plan_cnn(cfg, batch)
+
+    rows, result = [], {}
+    for mode in ("serial", "stacked", "grouped"):
+        forced = Plan([_dc.replace(gr, mode=mode) if len(gr.ops) > 1 else gr
+                       for gr in plan.groups], dict(plan.context))
+        modeled = 0.0
+        for gr in forced.groups:
+            ops = [g.ops[n] for n in gr.ops]
+            profs = [profile(op, gr.algorithms[op.name]) for op in ops]
+            if len(ops) == 1 or mode == "serial":
+                modeled += serial_time(profs)
+            elif mode == "stacked":
+                modeled += stacked_time(profs, [gemm_shape(op) for op in ops])
+            else:
+                modeled += grouped_time(profs)
+        CNN.forward_plan(params, cfg, x, forced)             # warm caches
+        timings: dict = {}
+        for _ in range(reps):
+            CNN.forward_plan(params, cfg, x, forced, timings=timings)
+        wall = sum(timings.values()) / reps
+        result[mode] = {"wall_us": round(wall * 1e6, 1),
+                        "modeled_us": round(modeled * 1e6, 3)}
+        rows.append({
+            "table": "branch_gemm_modes", "mode": mode, "batch": batch,
+            "us_per_call": round(wall * 1e6, 1),
+            "modeled_us": round(modeled * 1e6, 3),
+            "module": "inc(384,96r3,384,8r5,64,48) c64 16x16",
+        })
+    return rows, result
+
+
 def fused_complementary_bench(m=2048, k=2048, n=2048, r=65536, c=128):
     """The intra-SM analogue made literal: one kernel co-executing an
     MXU-bound GEMM with an HBM-bound reduction.  Reports the modeled TPU

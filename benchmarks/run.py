@@ -9,12 +9,20 @@ Prints ``name,us_per_call,derived`` CSV rows:
   makespan  — serial vs concurrency-aware scheduling on GoogleNet (the
               paper's proposal, modeled TPU makespan) + the 27-cases count.
   stacked   — intra-chip stacked branch GEMM vs per-branch GEMMs.
+  branch_gemm_modes — grouped vs stacked vs serial execution of one ragged
+              Inception module's CoGroups (the branch-GEMM benchmark).
   plan_makespan — modeled vs executed makespan per execution mode for the
               lowered plan (core/plan.py), serial vs planned — the
               cost-model validation table.
   roofline  — summary of the dry-run roofline table (if generated).
 
 Wall times are XLA-CPU (this host); modeled columns are TPU-v5e analytic.
+
+Besides the CSV, writes ``BENCH_plan.json`` (machine-readable perf
+baseline: branch-GEMM mode wall/modeled times, googlenet mode counts, the
+plan_makespan rows).  ``--smoke`` runs a seconds-scale subset (tiny batch,
+few reps, no plan_makespan) and writes ``BENCH_plan.smoke.json`` instead
+so a quick CI pass never clobbers the committed baseline.
 """
 from __future__ import annotations
 
@@ -25,6 +33,8 @@ import sys
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
 
+REPO = os.path.join(os.path.dirname(os.path.abspath(__file__)), "..")
+
 
 def _emit(rows):
     for r in rows:
@@ -34,22 +44,55 @@ def _emit(rows):
         print(f"{name},{us},{derived}", flush=True)
 
 
-def main() -> None:
+def main(smoke: bool = False) -> None:
     from benchmarks.paper_tables import (matmul_algorithm_table,
                                          table1_resource_profiles,
                                          table2_workspace_vs_time)
     from benchmarks.branch_parallel_bench import (
-        fused_complementary_bench, makespan_table, modeled_vs_executed_table,
-        stacked_branch_gemm_bench)
+        branch_mode_bench, fused_complementary_bench, makespan_table,
+        modeled_vs_executed_table, stacked_branch_gemm_bench)
+    from repro.configs import get_config
+    from repro.models import cnn as CNN
+
+    bench_json: dict = {"host": "xla-cpu (Pallas interpret)",
+                        "modeled": "TPU-v5e analytic cost model"}
 
     print("name,us_per_call,derived")
-    _emit(table1_resource_profiles())
-    _emit(table2_workspace_vs_time())
-    _emit(matmul_algorithm_table())
+    if not smoke:
+        _emit(table1_resource_profiles())
+        _emit(table2_workspace_vs_time())
+        _emit(matmul_algorithm_table())
     _emit(makespan_table())
-    _emit(stacked_branch_gemm_bench())
-    _emit(fused_complementary_bench())
-    _emit(modeled_vs_executed_table())
+
+    mode_rows, modes = branch_mode_bench(batch=1 if smoke else 2,
+                                         reps=2 if smoke else 5)
+    _emit([dict(r) for r in mode_rows])
+    wall = {m: v["wall_us"] for m, v in modes.items()}
+    bench_json["branch_gemm"] = {
+        "module": mode_rows[0]["module"] if mode_rows else "",
+        "wall_us": wall,
+        "modeled_us": {m: v["modeled_us"] for m, v in modes.items()},
+        "wall_ordering_ok": wall["grouped"] <= wall["stacked"]
+        <= wall["serial"],
+    }
+    plan, _ = CNN.plan_cnn(get_config("googlenet"), batch=32)
+    bench_json["googlenet_mode_counts"] = plan.mode_counts()
+    bench_json["googlenet_xla_fallback_groups"] = len(
+        plan.groups_of_mode("xla"))
+
+    if not smoke:
+        _emit(stacked_branch_gemm_bench())
+        _emit(fused_complementary_bench())
+        pm_rows = modeled_vs_executed_table()
+        _emit([dict(r) for r in pm_rows])
+        bench_json["plan_makespan"] = pm_rows
+
+    out = os.path.join(REPO, "BENCH_plan.smoke.json" if smoke
+                       else "BENCH_plan.json")
+    with open(out, "w") as f:
+        json.dump(bench_json, f, indent=2, sort_keys=True)
+        f.write("\n")
+    print(f"# wrote {os.path.relpath(out, REPO)}", flush=True)
 
     # roofline summary (from results/roofline.json if the dry-run ran)
     rl = os.path.join(os.path.dirname(__file__), "..", "results",
@@ -69,4 +112,4 @@ def main() -> None:
 
 
 if __name__ == "__main__":
-    main()
+    main(smoke="--smoke" in sys.argv[1:])

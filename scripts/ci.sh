@@ -1,6 +1,8 @@
 #!/usr/bin/env bash
-# Tier-1 verification, exactly as ROADMAP.md specifies.
+# Tier-1 verification, exactly as ROADMAP.md specifies, plus the benchmark
+# smoke so the bench code paths can't silently rot between PRs.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
-exec python -m pytest -x -q "$@"
+python -m pytest -x -q "$@"
+make bench-smoke

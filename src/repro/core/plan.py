@@ -10,10 +10,16 @@ execution plan compiled from the DAG.
 
 Modes (mirroring ``core/branch_parallel.py``):
 
-  stacked — same-GEMM-shape branches (1x1 convs / matmuls reading inputs of
-            one shape) fuse into ONE Pallas kernel with a branch grid axis
-            (``kernels/branch_matmul.py``); heterogeneous output widths are
-            padded to a common N and sliced back.
+  grouped — branches expressible as shared-M GEMMs with *per-branch*
+            (K_g, N_g) — ragged 1x1 widths, and K×K convs through their
+            im2col view — run as ONE Pallas kernel over a flattened tile
+            grid with a scalar-prefetched offset table and the bias+ReLU
+            epilogue fused in-kernel (``kernels/grouped_matmul.py``).  No
+            pad-to-max-N waste, no post-kernel HBM round-trip.
+  stacked — same-GEMM-shape branches fuse into ONE Pallas kernel with a
+            branch grid axis (``kernels/branch_matmul.py``); heterogeneous
+            output widths are padded to a common N and sliced back.  Kept
+            for uniform shapes, where the padding-waste term vanishes.
   fused   — a compute-bound GEMM paired with a memory-bound streamed
             reduction co-execute in one grid (``kernels/fused_branches.py``)
             so the reduction's HBM bytes ride under the GEMM's MXU work.
@@ -26,8 +32,11 @@ Modes (mirroring ``core/branch_parallel.py``):
   xla     — emit the ops together inside one jit and trust XLA to
             interleave them (the framework baseline the paper critiques).
 
-``lower`` re-checks the workspace/VMEM budgets (paper C2): a group whose
-combined footprint no longer fits is demoted to ``serial``.
+Mode choice delegates to ``cost_model.group_execution_time`` (the same
+judgement the scheduler packs with); ``lower`` re-checks the
+workspace/VMEM budgets (paper C2) — a group whose combined footprint no
+longer fits is demoted to ``serial`` — and upgrades to ``spatial`` when a
+mesh makes that faster than any single-chip mode.
 """
 from __future__ import annotations
 
@@ -40,7 +49,7 @@ from repro.core import cost_model as cm
 from repro.core.graph import OpGraph
 from repro.core.scheduler import Schedule
 
-MODES = ("stacked", "fused", "spatial", "serial", "xla")
+MODES = ("grouped", "stacked", "fused", "spatial", "serial", "xla")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -88,41 +97,9 @@ class Plan:
 # lowering
 # ---------------------------------------------------------------------------
 
-def _gemm_shape(op) -> tuple[int, int, int] | None:
-    """(M, K, N) if the op is expressible as one GEMM, else None.
-
-    1x1 stride-1 convs are channel matmuls (M = n*h*w, K = c, N = k);
-    matmul ops are themselves.
-    """
-    p = op.p
-    if op.kind == "matmul":
-        return p["m"], p["k"], p["n"]
-    if op.kind == "conv2d" and (p["kh"], p["kw"]) == (1, 1) \
-            and p.get("stride", 1) == 1:
-        return p["n"] * p["h"] * p["w"], p["c"], p["k"]
-    return None
-
-
-def _stackable(ops) -> bool:
-    """Same-shape GEMM branches (N may differ — padded to a common width)."""
-    shapes = [_gemm_shape(op) for op in ops]
-    if any(s is None for s in shapes):
-        return False
-    m0, k0, _ = shapes[0]
-    return all(m == m0 and k == k0 for m, k, _ in shapes)
-
-
-def _fusable_pair(ops, profiles) -> bool:
-    """One compute-bound GEMM + one memory-bound pointwise stream — the
-    shape ``kernels/fused_branches.py`` executes."""
-    if len(ops) != 2:
-        return False
-    gemm = [op for op in ops if _gemm_shape(op) is not None]
-    stream = [op for op in ops if op.kind == "pointwise"]
-    if len(gemm) != 1 or len(stream) != 1:
-        return False
-    bound = {op.name: pr.bound for op, pr in zip(ops, profiles)}
-    return bound[gemm[0].name] == "compute" and bound[stream[0].name] == "memory"
+# (M, K, N) GEMM view of an op — matmuls verbatim, convs via im2col; the
+# shared definition lives next to the times it feeds.
+_gemm_shape = cm.gemm_shape
 
 
 def _spatial_ok(graph: OpGraph, ops, mesh) -> bool:
@@ -154,12 +131,19 @@ def lower(graph: OpGraph, schedule: Schedule, *, mesh=None,
           vmem_budget: float = cm.VMEM_BYTES) -> Plan:
     """Lower a Schedule to an executable Plan.
 
-    Mode choice per CoGroup, in priority order: budget-infeasible or
-    singleton -> serial; same-shape GEMM branches -> stacked;
-    compute+memory complementary (GEMM, pointwise) pair -> fused;
-    mesh-divisible same-output branches -> spatial; anything else that
-    still co-executes -> xla.
+    Mode choice per CoGroup: budget-infeasible or singleton -> serial;
+    otherwise ``cost_model.group_execution_time`` picks the realizable
+    single-chip mode (grouped ragged branch GEMM / stacked uniform-shape /
+    fused complementary pair / xla interleave) at its modeled makespan,
+    and a mesh upgrades same-output branches to ``spatial`` when the
+    chip-split beats every single-chip mode.
     """
+    _REASON = {
+        "grouped": "ragged shared-M GEMM branches -> grouped kernel",
+        "stacked": "same-shape GEMM branches",
+        "fused": "compute+memory complementary pair",
+        "xla": "heterogeneous group -> XLA interleave",
+    }
     groups: list[ExecGroup] = []
     for cg in schedule.groups:
         ops = [graph.ops[n] for n in cg.ops]
@@ -167,23 +151,18 @@ def lower(graph: OpGraph, schedule: Schedule, *, mesh=None,
         feasible = (sum(p.workspace_bytes for p in profs) <= hbm_budget
                     and sum(p.vmem_bytes for p in profs) <= vmem_budget)
         if len(ops) == 1:
-            mode, reason = "serial", "singleton"
+            mode, t, reason = "serial", cm.serial_time(profs), "singleton"
         elif cg.serialized or not feasible:
-            mode, reason = "serial", "budget-infeasible (C2 fallback)"
-        elif _stackable(ops):
-            mode, reason = "stacked", "same-shape GEMM branches"
-        elif _fusable_pair(ops, profs):
-            mode, reason = "fused", "compute+memory complementary pair"
-        elif _spatial_ok(graph, ops, mesh):
-            mode, reason = "spatial", "branches fit the mesh model axis"
+            mode, t = "serial", cm.serial_time(profs)
+            reason = "budget-infeasible (C2 fallback)"
         else:
-            mode, reason = "xla", "heterogeneous group -> XLA interleave"
-        if mode == "serial":
-            t = cm.serial_time(profs)
-        elif mode == "spatial":
-            t = cm.spatial_time(profs, mesh.shape["model"])
-        else:
-            t = cm.co_execution_time(profs)
+            mode, t = cm.group_execution_time(ops, profs)
+            reason = _REASON[mode]
+            if _spatial_ok(graph, ops, mesh):
+                t_sp = cm.spatial_time(profs, mesh.shape["model"])
+                if t_sp < t:
+                    mode, t = "spatial", t_sp
+                    reason = "branches fit the mesh model axis"
         groups.append(ExecGroup(mode, tuple(cg.ops), dict(cg.algorithms),
                                 t, reason))
     return Plan(groups, context={"mesh": mesh})
@@ -201,7 +180,14 @@ class OpImpl:
     groups).  The optional views unlock the co-execution kernels:
 
       gemm_x/gemm_w/gemm_post — the op as ``post(x2d @ w)`` with
-          x2d (M, K) from the deps and w (K, N): stacked + fused modes.
+          x2d (M, K) from the deps and w (K, N): grouped + stacked + fused
+          modes.  For a K×K conv, gemm_x is the im2col patch view.
+      gemm_bias/gemm_relu/gemm_reshape — split epilogue for grouped mode:
+          when every branch provides bias + ReLU + a pure reshape, the
+          grouped kernel fuses bias+ReLU in-kernel (no HBM round-trip)
+          and only ``gemm_reshape`` runs outside.  ``gemm_post`` remains
+          the out-of-kernel epilogue for stacked/fused and the non-fused
+          grouped fallback — providing both must be equivalent.
       stream_z/stream_post — the op as ``post(silu(z).sum(0))`` with
           z (R, C) from the deps: the streamed branch of fused mode.
     """
@@ -210,6 +196,9 @@ class OpImpl:
     gemm_x: Callable[..., Any] | None = None
     gemm_w: Any = None
     gemm_post: Callable[..., Any] | None = None
+    gemm_bias: Any = None
+    gemm_relu: bool = False
+    gemm_reshape: Callable[..., Any] | None = None
     stream_z: Callable[..., Any] | None = None
     stream_post: Callable[..., Any] | None = None
 
@@ -235,6 +224,22 @@ def _stacked_runnable(group: ExecGroup, impls, pending) -> bool:
             and all(_has_gemm_views(impls[n]) for n in group.ops))
 
 
+def _grouped_fusable(impls, names) -> bool:
+    """Every branch carries the split epilogue -> bias+ReLU fuse in-kernel."""
+    return all(impls[n].gemm_bias is not None and impls[n].gemm_relu
+               and impls[n].gemm_reshape is not None for n in names)
+
+
+def _grouped_runnable(group: ExecGroup, impls, pending) -> bool:
+    if len(pending) != len(group.ops):
+        return False
+    if not all(impls[n].gemm_x is not None and impls[n].gemm_w is not None
+               for n in group.ops):
+        return False
+    return _grouped_fusable(impls, group.ops) or all(
+        impls[n].gemm_post is not None for n in group.ops)
+
+
 def _fused_runnable(group: ExecGroup, impls, pending) -> bool:
     if len(pending) != len(group.ops):
         return False
@@ -245,6 +250,9 @@ def _fused_runnable(group: ExecGroup, impls, pending) -> bool:
 
 def _run_stacked(group: ExecGroup, impls: dict[str, OpImpl], env: dict,
                  interpret):
+    """Pad-to-max stacking: every branch is padded to the widest (K, N)
+    so the uniform-shape branch kernel applies — the baseline the grouped
+    mode exists to beat on ragged branches."""
     from repro.kernels import branch_matmul  # padded (G,M,K)x(G,K,N) wrapper
     xs, ws, ns = [], [], []
     for name in group.ops:
@@ -252,12 +260,32 @@ def _run_stacked(group: ExecGroup, impls: dict[str, OpImpl], env: dict,
         xs.append(impl.gemm_x(*_dep_args(impl, env)))
         ws.append(impl.gemm_w)
         ns.append(impl.gemm_w.shape[1])
+    k_max = max(w.shape[0] for w in ws)
     n_max = max(ns)
-    ws = [jnp.pad(w, ((0, 0), (0, n_max - w.shape[1]))) for w in ws]
+    xs = [jnp.pad(x, ((0, 0), (0, k_max - x.shape[1]))) for x in xs]
+    ws = [jnp.pad(w, ((0, k_max - w.shape[0]), (0, n_max - w.shape[1])))
+          for w in ws]
     ys = branch_matmul(jnp.stack(xs), jnp.stack(ws), interpret=interpret)
     for i, name in enumerate(group.ops):
         impl = impls[name]
         env[name] = impl.gemm_post(ys[i][:, :ns[i]])
+
+
+def _run_grouped(group: ExecGroup, impls: dict[str, OpImpl], env: dict,
+                 interpret):
+    from repro.kernels.ops import grouped_matmul  # ragged, fused epilogue
+    names = group.ops
+    xs = [impls[n].gemm_x(*_dep_args(impls[n], env)) for n in names]
+    ws = [impls[n].gemm_w for n in names]
+    if _grouped_fusable(impls, names):
+        ys = grouped_matmul(xs, ws, [impls[n].gemm_bias for n in names],
+                            relu=True, interpret=interpret)
+        for n, y in zip(names, ys):
+            env[n] = impls[n].gemm_reshape(y)
+    else:
+        ys = grouped_matmul(xs, ws, interpret=interpret)
+        for n, y in zip(names, ys):
+            env[n] = impls[n].gemm_post(y)
 
 
 def _run_fused(group: ExecGroup, impls: dict[str, OpImpl], env: dict,
@@ -309,8 +337,11 @@ def run_plan(impls: dict[str, OpImpl], env: dict, plan: Plan, *,
         if not pending:
             continue
         executed = group.mode
-        if group.mode == "stacked" and _stacked_runnable(group, impls,
+        if group.mode == "grouped" and _grouped_runnable(group, impls,
                                                          pending):
+            _run_grouped(group, impls, env, interpret)
+        elif group.mode == "stacked" and _stacked_runnable(group, impls,
+                                                           pending):
             _run_stacked(group, impls, env, interpret)
         elif group.mode == "fused" and _fused_runnable(group, impls,
                                                        pending):

@@ -77,11 +77,16 @@ def schedule(graph: OpGraph, *, max_group: int = 4,
             while i < len(ready) and len(chosen) < max_group:
                 cand = chosen + [ready[i]]
                 ops = [graph.ops[n] for n in cand]
-                algs, t_group = sel.select_for_group(ops, hbm_budget,
-                                                     vmem_budget)
+                algs, _ = sel.select_for_group(ops, hbm_budget, vmem_budget)
                 t_serial = sum(
                     cm.best_algorithm(graph.ops[n])[1] for n in cand)
                 profs = [cm.profile(graph.ops[n], algs[n]) for n in cand]
+                # Judge the candidate at the mode a kernel can actually
+                # realize (grouped/stacked/fused vs XLA interleave), not at
+                # the ideal co-execution overlap: ragged GEMM branches keep
+                # their full win (grouped has no padding-waste term) while
+                # heterogeneous groups stop looking better than they run.
+                _, t_group = cm.group_execution_time(ops, profs)
                 feasible = (sum(p.workspace_bytes for p in profs) <= hbm_budget
                             and sum(p.vmem_bytes for p in profs) <= vmem_budget)
                 if feasible and t_group < t_serial * 0.98:
@@ -90,10 +95,15 @@ def schedule(graph: OpGraph, *, max_group: int = 4,
                 else:
                     i += 1
         ops = [graph.ops[n] for n in chosen]
-        algs, t = sel.select_for_group(ops, hbm_budget, vmem_budget)
+        algs, _ = sel.select_for_group(ops, hbm_budget, vmem_budget)
         profs = [cm.profile(graph.ops[n], algs[n]) for n in chosen]
+        # Record the realizable-mode makespan (lower() re-derives the mode
+        # itself — budgets and the mesh can still override it there).
+        _, t = cm.group_execution_time(ops, profs)
         serialized = (len(chosen) > 1 and not sel._group_feasible(
             profs, hbm_budget, vmem_budget))
+        if serialized:
+            t = cm.serial_time(profs)
         groups.append(CoGroup(chosen, algs, t, serialized))
         # retire
         for n in chosen:

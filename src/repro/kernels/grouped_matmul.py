@@ -1,0 +1,197 @@
+"""Grouped ragged branch GEMM — co-execution without pad-to-max waste.
+
+``branch_matmul`` (the stacked mode) batches G *same-shape* GEMMs on a
+branch grid axis and pads heterogeneous widths to a common (K, N) — on
+ragged Inception branches most of those MXU tiles multiply zeros.  This
+kernel runs G GEMMs with *per-branch* (K_g, N_g) sharing one M (the
+spatial-flattened activation rows every branch of a fork reads):
+
+    y_g = epilogue(x_g @ w_g + b_g)          g = 0..G-1
+    x_g: (M, K_g)   w_g: (K_g, N_g)   y_g: (M, N_g)
+
+The grid is the *flattened union of every branch's tile grid* — one step
+per (branch, row-block, col-block, k-block) — and a scalar-prefetched
+int32 offset table (SMEM) tells each step which slots of the packed
+operands it touches:
+
+    row 0  xt     slot index into the packed X tile stack (T_x, bm, bk)
+    row 1  wt     slot index into the packed W tile stack (T_w, bk, bn)
+    row 2  bj     col-block index into the packed bias (1, sum Np_g)
+    row 3  first  1 on a tile's first k-step (zero the accumulator)
+    row 4  last   1 on a tile's last k-step (epilogue + store)
+    row 5  ot     slot index into the packed output tile stack
+
+k-steps of one output tile are consecutive grid steps, so the fp32
+accumulator lives in VMEM scratch across them.  The bias + optional ReLU
+epilogue is applied in-kernel at the last k-step — branch outputs leave
+the kernel finished, with no post-kernel bias/activation round-trip.
+Per-branch dims pad only to the 128 lane/sublane alignment, never to the
+widest branch: zero pad-to-max-N FLOPs.
+
+Every tensor operand is packed as a (T, block, block) tile stack —
+branch g's X tiles occupy slots [xbase_g, xbase_g + mb * nkb_g), its
+outputs [obase_g, obase_g + mb * npb_g), and so on — so each grid step
+addresses *leading-dim* slots: contiguous for the TPU DMA engine and for
+the interpret-mode emulation this repo tests under (block reads/writes
+against a (M, sum K) matrix are strided in the lane dim and dominate the
+emulated wall time).  Tiling X in and the output back out are pure
+layout passes (zero FLOPs), fused by XLA around the kernel.
+
+Like the rest of the zoo this runs under ``interpret=True`` on CPU; the
+differentiable wrapper (custom VJP) lives in ``kernels/ops.py``.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _round_up(x: int, m: int) -> int:
+    return -(-x // m) * m
+
+
+def _gmm_kernel(tab_ref, x_ref, w_ref, b_ref, o_ref, acc_ref, *, relu: bool):
+    t = pl.program_id(0)
+
+    @pl.when(tab_ref[3, t] == 1)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jnp.dot(x_ref[...], w_ref[...],
+                            preferred_element_type=jnp.float32)
+
+    @pl.when(tab_ref[4, t] == 1)
+    def _store():
+        y = acc_ref[...] + b_ref[...].astype(jnp.float32)
+        if relu:
+            y = jnp.maximum(y, 0.0)
+        o_ref[...] = y.astype(o_ref.dtype)
+
+
+@functools.lru_cache(maxsize=512)
+def _plan_tiles(m_blocks: int, kbs: tuple[int, ...], nbs: tuple[int, ...]):
+    """Offset table for the flattened grid (hashable block counts in,
+    (6, T) int32 out) — pure shape bookkeeping, cached across traces."""
+    rows: list[list[int]] = [[], [], [], [], [], []]
+    noff = xbase = wbase = obase = 0
+    for nkb, npb in zip(kbs, nbs):
+        for i in range(m_blocks):
+            for j in range(npb):
+                for kk in range(nkb):
+                    rows[0].append(xbase + i * nkb + kk)
+                    rows[1].append(wbase + kk * npb + j)
+                    rows[2].append(noff + j)
+                    rows[3].append(1 if kk == 0 else 0)
+                    rows[4].append(1 if kk == nkb - 1 else 0)
+                    rows[5].append(obase + i * npb + j)
+        noff += npb
+        xbase += m_blocks * nkb
+        wbase += nkb * npb
+        obase += m_blocks * npb
+    return np.array(rows, np.int32)
+
+
+def grouped_matmul(xs, ws, bs=None, *, relu: bool = False, bm: int = 128,
+                   bn: int = 128, bk: int = 128, interpret: bool = False):
+    """[x_g @ w_g (+ b_g) (+ ReLU)] for ragged (K_g, N_g), one kernel.
+
+    xs: G arrays (M, K_g) — shared M; ws: G arrays (K_g, N_g);
+    bs: G arrays (N_g,) or None.  Returns G arrays (M, N_g).
+    """
+    g = len(xs)
+    assert g == len(ws) and g >= 1, (len(xs), len(ws))
+    assert bs is None or len(bs) == g
+    m = xs[0].shape[0]
+    assert all(x.shape[0] == m for x in xs), [x.shape for x in xs]
+    assert all(x.shape[1] == w.shape[0] for x, w in zip(xs, ws)), \
+        [(x.shape, w.shape) for x, w in zip(xs, ws)]
+    mp = _round_up(m, bm)
+    mb = mp // bm
+    kps = [_round_up(x.shape[1], bk) for x in xs]
+    nps = [_round_up(w.shape[1], bn) for w in ws]
+    nsum = sum(nps)
+
+    xtiles = []
+    for x, kp in zip(xs, kps):
+        xp = jnp.pad(x, ((0, mp - m), (0, kp - x.shape[1])))
+        xt = xp.reshape(mb, bm, kp // bk, bk).transpose(0, 2, 1, 3)
+        xtiles.append(xt.reshape(-1, bm, bk))
+    xpk = jnp.concatenate(xtiles, axis=0)
+    wtiles = []
+    for w, kp, np_ in zip(ws, kps, nps):
+        wp = jnp.pad(w, ((0, kp - w.shape[0]), (0, np_ - w.shape[1])))
+        wt = wp.reshape(kp // bk, bk, np_ // bn, bn).transpose(0, 2, 1, 3)
+        wtiles.append(wt.reshape(-1, bk, bn))
+    wpk = jnp.concatenate(wtiles, axis=0).astype(xpk.dtype)
+    if bs is None:
+        bpk = jnp.zeros((1, nsum), xpk.dtype)
+    else:
+        bpk = jnp.concatenate(
+            [jnp.pad(b, (0, np_ - b.shape[0]))
+             for b, np_ in zip(bs, nps)]).reshape(1, nsum).astype(xpk.dtype)
+
+    tab = jnp.asarray(_plan_tiles(
+        mb, tuple(kp // bk for kp in kps), tuple(np_ // bn for np_ in nps)))
+    o_tiles = mb * sum(np_ // bn for np_ in nps)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(tab.shape[1],),
+        in_specs=[
+            pl.BlockSpec((None, bm, bk), lambda t, tab: (tab[0, t], 0, 0)),
+            pl.BlockSpec((None, bk, bn), lambda t, tab: (tab[1, t], 0, 0)),
+            pl.BlockSpec((1, bn), lambda t, tab: (0, tab[2, t])),
+        ],
+        out_specs=pl.BlockSpec((None, bm, bn),
+                               lambda t, tab: (tab[5, t], 0, 0)),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+    )
+    out = pl.pallas_call(
+        functools.partial(_gmm_kernel, relu=relu),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((o_tiles, bm, bn), xs[0].dtype),
+        interpret=interpret,
+    )(tab, xpk, wpk, bpk)
+
+    outs, obase = [], 0
+    for w, np_ in zip(ws, nps):
+        npb = np_ // bn
+        tiles = out[obase:obase + mb * npb]
+        y = tiles.reshape(mb, npb, bm, bn).transpose(0, 2, 1, 3)
+        outs.append(y.reshape(mp, np_)[:m, :w.shape[1]])
+        obase += mb * npb
+    return outs
+
+
+def grouped_matmul_ref(xs, ws, bs=None, *, relu: bool = False):
+    """Per-branch XLA oracle for tests/benchmarks."""
+    outs = []
+    for i, (x, w) in enumerate(zip(xs, ws)):
+        y = jnp.dot(x, w, preferred_element_type=jnp.float32)
+        if bs is not None:
+            y = y + bs[i].astype(jnp.float32)
+        if relu:
+            y = jnp.maximum(y, 0.0)
+        outs.append(y.astype(x.dtype))
+    return outs
+
+
+def grouped_matmul_flops(shapes, bm: int = 128, bn: int = 128,
+                         bk: int = 128) -> tuple[int, int]:
+    """(grouped, stacked) MXU FLOPs for branch GEMM shapes [(M, K_g, N_g)]:
+    grouped pads per-branch to alignment; stacked additionally pads every
+    branch to the widest (K, N) — the waste this kernel removes."""
+    ms = {m for m, _, _ in shapes}
+    assert len(ms) == 1, shapes
+    mp = _round_up(ms.pop(), bm)
+    kmax = max(_round_up(k, bk) for _, k, _ in shapes)
+    nmax = max(_round_up(n, bn) for _, _, n in shapes)
+    grouped = sum(2 * mp * _round_up(k, bk) * _round_up(n, bn)
+                  for _, k, n in shapes)
+    stacked = len(shapes) * 2 * mp * kmax * nmax
+    return grouped, stacked

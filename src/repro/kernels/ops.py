@@ -18,6 +18,7 @@ from repro.kernels import flash_attention as _attn
 from repro.kernels import ssd as _ssd
 from repro.kernels import branch_matmul as _bmm
 from repro.kernels import fused_branches as _fused
+from repro.kernels import grouped_matmul as _gmm
 
 
 @functools.cache
@@ -162,6 +163,54 @@ def _branch_matmul_bwd(interpret, res, g):
 
 
 _branch_matmul_vjp.defvjp(_branch_matmul_fwd, _branch_matmul_bwd)
+
+
+# ---------------------------------------------------------------------------
+# grouped ragged branch GEMM (per-branch (K_g, N_g), fused epilogue)
+# ---------------------------------------------------------------------------
+
+def grouped_matmul(xs, ws, bs=None, *, relu: bool = False,
+                   interpret: bool | None = None):
+    """G ragged branch GEMMs (M, K_g) @ (K_g, N_g) (+bias, +ReLU) in ONE
+    kernel — see ``kernels/grouped_matmul.py``.
+
+    Differentiable: the custom VJP masks the cotangent through the fused
+    ReLU, computes dx_g with the SAME grouped kernel (the G backward GEMMs
+    dy_g @ w_g^T are themselves ragged shared-M branches), and pulls dw/db
+    back through XLA — the co-execution knob concerns the forward kernel,
+    matching the ``_conv_alg`` / ``fused_gemm_reduce`` convention."""
+    interpret = default_interpret() if interpret is None else interpret
+    return _grouped_vjp(tuple(xs), tuple(ws),
+                        None if bs is None else tuple(bs), relu, interpret)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4))
+def _grouped_vjp(xs, ws, bs, relu, interpret):
+    return tuple(_gmm.grouped_matmul(xs, ws, bs, relu=relu,
+                                     interpret=interpret))
+
+
+def _grouped_fwd(xs, ws, bs, relu, interpret):
+    ys = _grouped_vjp(xs, ws, bs, relu, interpret)
+    return ys, (xs, ws, bs, ys if relu else None)
+
+
+def _grouped_bwd(relu, interpret, res, gs):
+    xs, ws, bs, ys = res
+    dys = [g.astype(x.dtype) for g, x in zip(gs, xs)]
+    if relu:
+        dys = [jnp.where(y > 0, dy, 0) for y, dy in zip(ys, dys)]
+    dxs = tuple(_gmm.grouped_matmul(
+        dys, [w.T for w in ws], interpret=interpret))
+    dws = tuple(x.T @ dy for x, dy in zip(xs, dys))
+    dbs = None if bs is None else tuple(dy.sum(0) for dy in dys)
+    return dxs, dws, dbs
+
+
+_grouped_vjp.defvjp(_grouped_fwd, _grouped_bwd)
+
+grouped_matmul_ref = _gmm.grouped_matmul_ref
+grouped_matmul_flops = _gmm.grouped_matmul_flops
 
 
 # ---------------------------------------------------------------------------

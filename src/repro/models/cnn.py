@@ -8,10 +8,13 @@ reasons about — the benchmark harness runs the Table-1/Table-2 analogues
 and the 27-case complementary-pair sweep on it.
 
 Execution is plan-driven: ``plan_cnn`` lowers the scheduler's CoGroups to a
-``core.plan.Plan`` (stacked / fused / spatial / serial / xla per group) and
-``forward_plan`` executes it — same-shape 1x1 branches actually run in ONE
-stacked Pallas kernel instead of four serial convs.  The algorithms-dict
-path (``forward(algorithms=...)``) remains as the serial fallback.
+``core.plan.Plan`` (grouped / stacked / fused / spatial / serial / xla per
+group) and ``forward_plan`` executes it.  Every branch conv carries its
+GEMM view (1x1 = channel matmul; K×K = im2col patches), so a whole
+Inception module co-executes: the ragged 1x1 projections AND the 3x3/5x5
+critical-path convs each run as ONE grouped Pallas kernel with bias+ReLU
+fused in-kernel, instead of six serial convs.  The algorithms-dict path
+(``forward(algorithms=...)``) remains as the serial fallback.
 """
 from __future__ import annotations
 
@@ -26,6 +29,7 @@ from repro.core.graph import Op, OpGraph
 # import from the conv2d module file directly (the package re-exports the
 # ops.conv2d *function* under the same name, shadowing the submodule)
 from repro.kernels.conv2d import CONV2D_ALGORITHMS as _CONV_ALGS
+from repro.kernels.ops import default_interpret
 from repro.kernels import ref as k_ref
 from repro.models import layers as L
 
@@ -73,7 +77,7 @@ def conv(x, w, b, *, stride=1, algorithm="xla", interpret=None):
         y = k_ref.conv2d_ref(x, w, stride=stride, padding="SAME")
     else:
         y = _conv_alg(x, w, stride, algorithm,
-                      True if interpret is None else interpret)
+                      default_interpret() if interpret is None else interpret)
     return jax.nn.relu(y + b)
 
 
@@ -211,31 +215,48 @@ def _plan_impls(params, cfg: CNNConfig, interpret=None):
     impls: dict = {}
     h, w = cfg.img[:2]
     dep = "input"
-    for i, (pb, (k, out, s)) in enumerate(zip(params["stem"], cfg.stem)):
-        impls[f"stem{i}"] = OpImpl(
-            deps=(dep,),
-            fn=lambda x, algorithm="xla", pb=pb, s=s: conv(
-                x, pb["w"], pb["b"], stride=s, algorithm=algorithm,
-                interpret=interpret))
-        dep = f"stem{i}"
-        h, w = -(-h // s), -(-w // s)
 
-    def conv1x1_impl(pb, in_t, dep, oh, ow):
-        wmat = pb["w"].reshape(pb["w"].shape[2], pb["w"].shape[3])  # (C, K)
+    def conv_impl(pb, in_t, dep, oh, ow, stride=1):
+        """OpImpl with the conv's GEMM views: a 1x1 conv is a channel
+        matmul; a K×K conv is its im2col view (M = B*OH*OW, K = C*KH*KW)
+        — the cuDNN GEMM lowering, which is what lets the 3x3/5x5
+        branches join grouped co-execution groups.  ``oh``/``ow`` must be
+        the POST-stride output extent (matching cost_model.gemm_shape).
+        The bias+ReLU epilogue is split out (gemm_bias/gemm_relu/
+        gemm_reshape) so the grouped kernel can fuse it in-kernel;
+        gemm_post keeps the equivalent out-of-kernel epilogue for
+        stacked/fused modes."""
+        kh, kw, cin, _ = pb["w"].shape
+        # (KH, KW, C, K) -> (C, KH, KW, K) -> (C*KH*KW, K): matches the
+        # (C, KH, KW) feature order of conv_general_dilated_patches.
+        wmat = pb["w"].transpose(2, 0, 1, 3).reshape(cin * kh * kw, -1)
 
-        def gemm_post(y2d, pb=pb, oh=oh, ow=ow):
-            y = y2d.reshape(-1, oh, ow, y2d.shape[-1])
-            return jax.nn.relu(y + pb["b"])
+        def gemm_x(x, in_t=in_t, kh=kh, kw=kw, cin=cin, s=stride):
+            x = in_t(x)
+            if (kh, kw) == (1, 1) and s == 1:
+                return x.reshape(-1, cin)
+            patches = jax.lax.conv_general_dilated_patches(
+                x, filter_shape=(kh, kw), window_strides=(s, s),
+                padding="SAME", dimension_numbers=("NHWC", "HWIO", "NHWC"))
+            return patches.reshape(-1, cin * kh * kw)
+
+        def gemm_reshape(y2d, oh=oh, ow=ow):
+            return y2d.reshape(-1, oh, ow, y2d.shape[-1])
+
+        def gemm_post(y2d, pb=pb):
+            return jax.nn.relu(gemm_reshape(y2d) + pb["b"])
 
         return OpImpl(
             deps=(dep,),
-            fn=lambda x, algorithm="xla", pb=pb, in_t=in_t: conv(
-                in_t(x), pb["w"], pb["b"], algorithm=algorithm,
+            fn=lambda x, algorithm="xla", pb=pb, in_t=in_t, s=stride: conv(
+                in_t(x), pb["w"], pb["b"], stride=s, algorithm=algorithm,
                 interpret=interpret),
-            gemm_x=lambda x, in_t=in_t, cin=wmat.shape[0]: in_t(x).reshape(
-                -1, cin),
+            gemm_x=gemm_x,
             gemm_w=wmat,
-            gemm_post=gemm_post)
+            gemm_post=gemm_post,
+            gemm_bias=pb["b"],
+            gemm_relu=True,
+            gemm_reshape=gemm_reshape)
 
     def memo1(fn):
         """Share one computed value across the four branch impls that
@@ -250,27 +271,24 @@ def _plan_impls(params, cfg: CNNConfig, interpret=None):
             return cell[0]
         return wrapped
 
+    for i, (pb, (k, out, s)) in enumerate(zip(params["stem"], cfg.stem)):
+        h, w = -(-h // s), -(-w // s)
+        impls[f"stem{i}"] = conv_impl(pb, identity, dep, h, w, stride=s)
+        dep = f"stem{i}"
+
     for i, p in enumerate(params["modules"]):
         pooled = i in cfg.pool_between
         if pooled:
             h, w = -(-h // 2), -(-w // 2)
         pre = memo1(lambda x: maxpool(x, 3, 2)) if pooled else identity
         nm = f"inc{i}"
-        impls[f"{nm}/1x1"] = conv1x1_impl(p["b1"], pre, dep, h, w)
-        impls[f"{nm}/r3"] = conv1x1_impl(p["r3"], pre, dep, h, w)
-        impls[f"{nm}/r5"] = conv1x1_impl(p["r5"], pre, dep, h, w)
-        impls[f"{nm}/pp"] = conv1x1_impl(
+        impls[f"{nm}/1x1"] = conv_impl(p["b1"], pre, dep, h, w)
+        impls[f"{nm}/r3"] = conv_impl(p["r3"], pre, dep, h, w)
+        impls[f"{nm}/r5"] = conv_impl(p["r5"], pre, dep, h, w)
+        impls[f"{nm}/pp"] = conv_impl(
             p["pp"], lambda x, pre=pre: maxpool(pre(x), 3, 1), dep, h, w)
-        impls[f"{nm}/3x3"] = OpImpl(
-            deps=(f"{nm}/r3",),
-            fn=lambda x, algorithm="xla", pb=p["b3"]: conv(
-                x, pb["w"], pb["b"], algorithm=algorithm,
-                interpret=interpret))
-        impls[f"{nm}/5x5"] = OpImpl(
-            deps=(f"{nm}/r5",),
-            fn=lambda x, algorithm="xla", pb=p["b5"]: conv(
-                x, pb["w"], pb["b"], algorithm=algorithm,
-                interpret=interpret))
+        impls[f"{nm}/3x3"] = conv_impl(p["b3"], identity, f"{nm}/r3", h, w)
+        impls[f"{nm}/5x5"] = conv_impl(p["b5"], identity, f"{nm}/r5", h, w)
         impls[f"{nm}/join"] = OpImpl(
             deps=(f"{nm}/1x1", f"{nm}/3x3", f"{nm}/5x5", f"{nm}/pp"),
             fn=lambda *ys, algorithm=None: jnp.concatenate(ys, axis=-1))
