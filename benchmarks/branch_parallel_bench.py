@@ -125,21 +125,29 @@ def modeled_vs_executed_table(batch: int = 4, reps: int = 3):
 
 def branch_mode_bench(batch: int = 2, reps: int = 5):
     """grouped vs stacked vs serial wall time on one ragged Inception
-    module — the branch-GEMM benchmark.
+    module — forward AND backward — the branch-GEMM benchmark.
 
     The SAME CoGroups (the 1x1 quad and the im2col-viewed 3x3/5x5 pair)
     execute under each forced plan mode: ``serial`` launches the
     scheduler-chosen algorithm-zoo kernel per branch plus the separate
     bias+ReLU pass, ``stacked`` pads every branch to the widest (K, N)
     and runs the branch-grid kernel, ``grouped`` runs the ragged
-    grouped-GEMM kernel with the epilogue fused in-kernel.  Wall times
-    are this host (XLA-CPU, Pallas interpret); modeled columns are the
-    TPU-v5e analytic cost model — the same ordering story at both scales.
+    grouped-GEMM kernel with the epilogue fused in-kernel.
+
+    The backward pass is timed as the eager VJP pullback alone (forward
+    residuals held fixed): serial pulls every conv back through its
+    per-op GEMM-view backward (two matmul-zoo launches per branch),
+    stacked through the branch kernel's VJP, grouped through the two
+    grouped launches (masked dx + dw/db) — the mirrored grad CoGroups of
+    ``core.plan.backward_plan``.  Wall times are this host (XLA-CPU,
+    Pallas interpret); modeled columns are the TPU-v5e analytic cost
+    model — the same ordering story at both scales.
     """
     import dataclasses as _dc
 
-    from repro.core import (gemm_shape, grouped_time, profile, serial_time,
-                            stacked_time)
+    from repro.core import (backward_profiles, gemm_shape,
+                            group_execution_time_bwd, grouped_time, profile,
+                            serial_time, stacked_time)
     from repro.core.plan import Plan
     from repro.models import cnn as CNN
     from repro.models.cnn import CNNConfig, InceptionSpec
@@ -157,27 +165,47 @@ def branch_mode_bench(batch: int = 2, reps: int = 5):
     for mode in ("serial", "stacked", "grouped"):
         forced = Plan([_dc.replace(gr, mode=mode) if len(gr.ops) > 1 else gr
                        for gr in plan.groups], dict(plan.context))
-        modeled = 0.0
+        modeled = modeled_bwd = 0.0
         for gr in forced.groups:
             ops = [g.ops[n] for n in gr.ops]
             profs = [profile(op, gr.algorithms[op.name]) for op in ops]
             if len(ops) == 1 or mode == "serial":
                 modeled += serial_time(profs)
-            elif mode == "stacked":
-                modeled += stacked_time(profs, [gemm_shape(op) for op in ops])
+                modeled_bwd += sum(
+                    p.time for op in ops
+                    for p in backward_profiles(op, gr.algorithms[op.name]))
             else:
-                modeled += grouped_time(profs)
+                if mode == "stacked":
+                    modeled += stacked_time(profs,
+                                            [gemm_shape(op) for op in ops])
+                else:
+                    modeled += grouped_time(profs)
+                modeled_bwd += group_execution_time_bwd(
+                    ops, gr.algorithms, mode=mode)[1]
         CNN.forward_plan(params, cfg, x, forced)             # warm caches
         timings: dict = {}
         for _ in range(reps):
             CNN.forward_plan(params, cfg, x, forced, timings=timings)
         wall = sum(timings.values()) / reps
+        # backward-only wall: eager VJP pullback against fixed residuals
+        y, f_vjp = jax.vjp(
+            lambda p: CNN.forward_plan(p, cfg, x, forced), params)
+        ct = jnp.ones_like(y)
+        jax.block_until_ready(f_vjp(ct))                     # warm caches
+        t0 = time.time()
+        for _ in range(reps):
+            jax.block_until_ready(f_vjp(ct))
+        bwd_wall = (time.time() - t0) / reps
         result[mode] = {"wall_us": round(wall * 1e6, 1),
-                        "modeled_us": round(modeled * 1e6, 3)}
+                        "modeled_us": round(modeled * 1e6, 3),
+                        "bwd_wall_us": round(bwd_wall * 1e6, 1),
+                        "bwd_modeled_us": round(modeled_bwd * 1e6, 3)}
         rows.append({
             "table": "branch_gemm_modes", "mode": mode, "batch": batch,
             "us_per_call": round(wall * 1e6, 1),
             "modeled_us": round(modeled * 1e6, 3),
+            "bwd_us_per_call": round(bwd_wall * 1e6, 1),
+            "bwd_modeled_us": round(modeled_bwd * 1e6, 3),
             "module": "inc(384,96r3,384,8r5,64,48) c64 16x16",
         })
     return rows, result

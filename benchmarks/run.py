@@ -10,7 +10,9 @@ Prints ``name,us_per_call,derived`` CSV rows:
               paper's proposal, modeled TPU makespan) + the 27-cases count.
   stacked   — intra-chip stacked branch GEMM vs per-branch GEMMs.
   branch_gemm_modes — grouped vs stacked vs serial execution of one ragged
-              Inception module's CoGroups (the branch-GEMM benchmark).
+              Inception module's CoGroups, forward AND backward (the
+              eager VJP pullback per forced mode — the grad CoGroups of
+              core/plan.py backward_plan).
   plan_makespan — modeled vs executed makespan per execution mode for the
               lowered plan (core/plan.py), serial vs planned — the
               cost-model validation table.
@@ -19,10 +21,15 @@ Prints ``name,us_per_call,derived`` CSV rows:
 Wall times are XLA-CPU (this host); modeled columns are TPU-v5e analytic.
 
 Besides the CSV, writes ``BENCH_plan.json`` (machine-readable perf
-baseline: branch-GEMM mode wall/modeled times, googlenet mode counts, the
-plan_makespan rows).  ``--smoke`` runs a seconds-scale subset (tiny batch,
-few reps, no plan_makespan) and writes ``BENCH_plan.smoke.json`` instead
-so a quick CI pass never clobbers the committed baseline.
+baseline: branch-GEMM mode wall/modeled times forward+backward, googlenet
+forward/backward mode counts and modeled train-step makespan, the
+plan_makespan rows).  ``--smoke`` runs a seconds-scale subset (fewer
+reps, no plan_makespan; same batch=2 module — batch 1 is unrepresentative
+of the grouped-vs-stacked backward) and writes ``BENCH_plan.smoke.json``
+instead
+so a quick CI pass never clobbers the committed baseline; ``scripts/ci.sh``
+asserts the smoke backward wall ordering (grouped <= serial, and <=
+stacked within tolerance).
 """
 from __future__ import annotations
 
@@ -64,21 +71,43 @@ def main(smoke: bool = False) -> None:
         _emit(matmul_algorithm_table())
     _emit(makespan_table())
 
-    mode_rows, modes = branch_mode_bench(batch=1 if smoke else 2,
-                                         reps=2 if smoke else 5)
+    # batch 2 even in smoke: at batch 1 (M=256 rows) the grouped kernels'
+    # fixed packing overhead dominates the interpret-mode wall and the
+    # grouped-vs-stacked backward ordering is not representative
+    mode_rows, modes = branch_mode_bench(batch=2, reps=2 if smoke else 5)
     _emit([dict(r) for r in mode_rows])
     wall = {m: v["wall_us"] for m, v in modes.items()}
+    bwd_wall = {m: v["bwd_wall_us"] for m, v in modes.items()}
     bench_json["branch_gemm"] = {
         "module": mode_rows[0]["module"] if mode_rows else "",
         "wall_us": wall,
         "modeled_us": {m: v["modeled_us"] for m, v in modes.items()},
         "wall_ordering_ok": wall["grouped"] <= wall["stacked"]
         <= wall["serial"],
+        "bwd_wall_us": bwd_wall,
+        "bwd_modeled_us": {m: v["bwd_modeled_us"] for m, v in modes.items()},
+        "bwd_wall_ordering_ok": bwd_wall["grouped"] <= bwd_wall["stacked"]
+        <= bwd_wall["serial"],
+        "bwd_grouped_beats_serial": bwd_wall["grouped"] <= bwd_wall["serial"],
     }
-    plan, _ = CNN.plan_cnn(get_config("googlenet"), batch=32)
+    # train=True: the same packing + per-direction budget checks the train
+    # driver lowers with — the recorded backward metrics describe the plan
+    # the training step actually executes, not an inference-packed one
+    plan, _ = CNN.plan_cnn(get_config("googlenet"), batch=32, train=True)
+    bwd_plan = plan.context["backward"]
     bench_json["googlenet_mode_counts"] = plan.mode_counts()
     bench_json["googlenet_xla_fallback_groups"] = len(
         plan.groups_of_mode("xla"))
+    bench_json["googlenet_bwd_mode_counts"] = bwd_plan.mode_counts()
+    bench_json["googlenet_bwd_xla_fallback_groups"] = len(
+        bwd_plan.groups_of_mode("xla"))
+    # forward+backward modeled makespans (TPU-v5e analytic, seconds): the
+    # training step's two halves under the lowered plans
+    bench_json["googlenet_makespan_modeled_s"] = {
+        "forward": plan.makespan,
+        "backward": bwd_plan.makespan,
+        "train_step": plan.makespan + bwd_plan.makespan,
+    }
 
     if not smoke:
         _emit(stacked_branch_gemm_bench())

@@ -5,8 +5,9 @@ execution (stacked kernels intra-chip, spatial mesh partitioning inter-chip).
 """
 from repro.core.graph import Op, OpGraph                      # noqa: F401
 from repro.core.cost_model import (                            # noqa: F401
-    OpProfile, profile, op_time, best_algorithm, co_execution_time,
-    gemm_shape, group_execution_time, grouped_time, serial_time,
+    OpProfile, profile, op_time, backward_profiles, best_algorithm,
+    co_execution_time, gemm_shape, gemm_shape_bwd, group_execution_time,
+    group_execution_time_bwd, grouped_time, serial_time,
     spatial_time, stacked_time, supported_algorithms, xla_interleave_time,
     PEAK_FLOPS, HBM_BW, ICI_BW, VMEM_BYTES, HBM_BYTES,
 )
@@ -18,5 +19,6 @@ from repro.core.branch_parallel import (                       # noqa: F401
     Branches, run, run_xla, run_spatial, run_stacked_matmul,
 )
 from repro.core.plan import (                                  # noqa: F401
-    ExecGroup, OpImpl, Plan, execute_plan, lower, run_plan, MODES,
+    ExecGroup, OpImpl, Plan, backward_plan, execute_plan, lower, run_plan,
+    MODES,
 )

@@ -129,7 +129,9 @@ def profile(op: Op, algorithm: str) -> OpProfile:
         elif algorithm == "direct":
             ws = 0.0
             flops = 2.0 * mac / _mxu_efficiency(c, k)
-            io = xin * kh * kw * 0.5 + xout + wts  # overlapping window re-reads
+            # overlapping window re-reads; a 1x1 tap still reads X once in
+            # full (the kh*kw*0.5 re-read factor bottoms out at 1)
+            io = xin * max(kh * kw * 0.5, 1.0) + xout + wts
             vmem = (h + kh) * (w + kw) * c * eb  # whole row-window resident
         elif algorithm == "winograd3x3":
             t = n_ * -(-oh // 2) * -(-ow // 2)
@@ -231,6 +233,112 @@ def gemm_shape(op: Op) -> tuple[int, int, int] | None:
         oh, ow = -(-p["h"] // s), -(-p["w"] // s)
         return p["n"] * oh * ow, p["c"] * p["kh"] * p["kw"], p["k"]
     return None
+
+
+def gemm_shape_bwd(op: Op) -> tuple[tuple[int, int, int],
+                                    tuple[int, int, int]] | None:
+    """The op's two backward GEMMs as (M, K, N) shapes, or None.
+
+    For a forward GEMM view (M, K, N) — convs via im2col like
+    ``gemm_shape`` — the VJP computes
+
+        dx = dY (M, N) @ W^T (N, K)      ->  (M, N, K)   shared-M ragged
+        dw = X^T (K, M) @ dY (M, N)      ->  (K, M, N)   shared-M contraction
+
+    which is why a forward co-execution group mirrors into a backward
+    one: the dx GEMMs of G branches again share M (the grouped kernel
+    with the ReLU cotangent mask), and the dw GEMMs share the M
+    *contraction* with ragged (K_g, N_g) outputs (the grouped dw kernel,
+    db reduced in the same pass).
+    """
+    s = gemm_shape(op)
+    if s is None:
+        return None
+    m, k, n = s
+    return (m, n, k), (k, m, n)
+
+
+def backward_profiles(op: Op, algorithm: str) -> list[OpProfile]:
+    """Profiles of the op's VJP computation (the Table-1 rows of the
+    backward pass).
+
+    GEMM-view ops price as their two backward GEMMs (``gemm_shape_bwd``),
+    each an aligned MXU matmul — the lowering the grouped dw/dx kernels
+    execute.  pointwise grads are the same traffic shape (a concat
+    backward is a split), so the forward profile stands.  Remaining kinds
+    (attention/ssd) use the forward profile doubled — their backward does
+    roughly twice the forward work.
+    """
+    sb = gemm_shape_bwd(op)
+    if sb is None:
+        p = profile(op, algorithm)
+        return [p] if op.kind == "pointwise" else [p, p]
+    profs = [profile(Op.make(f"{op.name}:{tag}", "matmul",
+                             dtype_bytes=op.dtype_bytes, m=m, k=k, n=n),
+                     "mxu128")
+             for tag, (m, k, n) in zip(("dx", "dw"), sb)]
+    kh, kw = op.p.get("kh", 1), op.p.get("kw", 1)
+    stride = op.p.get("stride", 1)
+    if op.kind == "conv2d" and ((kh, kw) != (1, 1) or stride != 1):
+        # the GEMM view of a KxK / strided conv backward materializes the
+        # im2col patch buffer both ways (dw reads the patches, dx scatters
+        # the patch cotangent) — the same M*(C*KH*KW) workspace the
+        # forward im2col_gemm profile charges.  A 1x1 stride-1 conv's
+        # backward is pure reshapes (no patch buffer, see _conv_gemm_bwd's
+        # fast path) and charges nothing.  The aligned-matmul time proxy
+        # stands (ROADMAP calibration caveat), but the C2 budget checks
+        # must see the real HBM footprint or they are vacuous for convs.
+        m, k, _ = gemm_shape(op)
+        ws = m * k * op.dtype_bytes
+        profs = [dataclasses.replace(p, workspace_bytes=p.workspace_bytes + ws)
+                 for p in profs]
+    return profs
+
+
+def group_execution_time_bwd(ops: list[Op], algorithms: dict | None = None,
+                             mode: str | None = None) -> tuple[str, float]:
+    """(realizable mode, modeled makespan) for the GRAD group mirroring a
+    forward co-execution group — the backward analogue of
+    ``group_execution_time``, and what the custom VJPs actually launch.
+
+    Branches with shared-M GEMM views backward-co-execute in two grouped
+    launches (dx then dw/db) or, for uniform shapes, two stacked ones
+    (``branch_matmul``'s VJP).  Anything else only has the per-op XLA
+    pullback, priced with the interleave loss.  ``mode`` forces the
+    pricing to a known forward mode (``plan.backward_plan`` passes the
+    lowered mode; the scheduler omits it to judge candidates).
+    """
+    algs = algorithms or {}
+
+    def bprofs(op):
+        return backward_profiles(
+            op, algs.get(op.name) or best_algorithm(op)[0])
+
+    if len(ops) == 1:
+        return "serial", sum(p.time for p in bprofs(ops[0]))
+    shapes = [gemm_shape(op) for op in ops]
+    grouped_ok = (all(s is not None for s in shapes)
+                  and len({s[0] for s in shapes}) == 1)
+    if grouped_ok and mode in ("grouped", "stacked", None):
+        per_op = [bprofs(op) for op in ops]
+        dxp = [p[0] for p in per_op]
+        dwp = [p[1] for p in per_op]
+        t_grouped = co_execution_time(dxp) + co_execution_time(dwp)
+        uniform = len({s[:2] for s in shapes}) == 1
+        # a FORCED stacked mode prices pad-to-max even on ragged branches
+        # (the stacked kernel pads K and N to the widest, so it executes
+        # — and pays — exactly that); the auto choice (mode=None) only
+        # prefers stacked on uniform shapes, like the forward judgement
+        if mode == "stacked" or (uniform and mode is None):
+            dx_shapes = [(m, n, k) for m, k, n in shapes]
+            dw_shapes = [(k, m, n) for m, k, n in shapes]
+            t_stacked = (stacked_time(dxp, dx_shapes)
+                         + stacked_time(dwp, dw_shapes))
+            if mode == "stacked" or t_stacked <= t_grouped:
+                return "stacked", t_stacked
+        return "grouped", t_grouped
+    flat = [p for op in ops for p in bprofs(op)]
+    return "xla", xla_interleave_time(flat)
 
 
 def co_execution_time(profiles: list[OpProfile]) -> float:

@@ -128,7 +128,7 @@ def _spatial_ok(graph: OpGraph, ops, mesh) -> bool:
 
 def lower(graph: OpGraph, schedule: Schedule, *, mesh=None,
           hbm_budget: float = cm.HBM_BYTES * 0.25,
-          vmem_budget: float = cm.VMEM_BYTES) -> Plan:
+          vmem_budget: float = cm.VMEM_BYTES, train: bool = False) -> Plan:
     """Lower a Schedule to an executable Plan.
 
     Mode choice per CoGroup: budget-infeasible or singleton -> serial;
@@ -137,9 +137,20 @@ def lower(graph: OpGraph, schedule: Schedule, *, mesh=None,
     fused complementary pair / xla interleave) at its modeled makespan,
     and a mesh upgrades same-output branches to ``spatial`` when the
     chip-split beats every single-chip mode.
+
+    ``train=True`` additionally checks the C2 budgets against the
+    group's backward profiles (each direction on its own — forward and
+    backward are sequential launches, so their footprints never
+    co-reside): a training step realizes the grad CoGroup of every
+    co-executed group through its custom VJP (see ``backward_plan``), so
+    a group whose backward footprint doesn't fit must run serial in BOTH
+    directions — the mirrored plan never takes a co-execution decision
+    the backward can't honor.
     """
     _REASON = {
-        "grouped": "ragged shared-M GEMM branches -> grouped kernel",
+        "grouped": "ragged shared-M GEMM branches -> grouped kernel "
+                   "(uniform-K shared-X branches dedup to one wide GEMM "
+                   "at execution)",
         "stacked": "same-shape GEMM branches",
         "fused": "compute+memory complementary pair",
         "xla": "heterogeneous group -> XLA interleave",
@@ -150,6 +161,14 @@ def lower(graph: OpGraph, schedule: Schedule, *, mesh=None,
         profs = [cm.profile(op, cg.algorithms[op.name]) for op in ops]
         feasible = (sum(p.workspace_bytes for p in profs) <= hbm_budget
                     and sum(p.vmem_bytes for p in profs) <= vmem_budget)
+        if train and feasible:
+            # forward and backward are separate sequential launches whose
+            # footprints never co-reside: each direction must fit the
+            # budgets on its own (not their sum)
+            bprofs = [p for op in ops
+                      for p in cm.backward_profiles(op, cg.algorithms[op.name])]
+            feasible = (sum(p.workspace_bytes for p in bprofs) <= hbm_budget
+                        and sum(p.vmem_bytes for p in bprofs) <= vmem_budget)
         if len(ops) == 1:
             mode, t, reason = "serial", cm.serial_time(profs), "singleton"
         elif cg.serialized or not feasible:
@@ -169,6 +188,77 @@ def lower(graph: OpGraph, schedule: Schedule, *, mesh=None,
 
 
 # ---------------------------------------------------------------------------
+# backward-plan lowering
+# ---------------------------------------------------------------------------
+
+def backward_plan(graph: OpGraph, plan: Plan, *,
+                  hbm_budget: float = cm.HBM_BYTES * 0.25,
+                  vmem_budget: float = cm.VMEM_BYTES) -> Plan:
+    """Derive the mirrored backward Plan from a lowered forward plan.
+
+    The backward graph of a fork/join network is the forward graph
+    reversed — the same CoGroups in mirrored order — and autodiff of
+    ``run_plan`` realizes exactly that structure: a co-executed forward
+    group pulls all its cotangents back through ONE custom VJP, so each
+    forward ExecGroup becomes one grad ExecGroup (ops ``grad:<name>``)
+    whose mode is what that VJP launches:
+
+      grouped -> grouped   dx through the grouped kernel with the ReLU
+                           cotangent mask applied in-kernel, dw/db
+                           through the grouped dw kernel — two ragged
+                           co-executed launches, zero XLA fallbacks.
+      stacked -> stacked   ``branch_matmul``'s VJP runs the stacked
+                           kernel on the backward GEMMs.
+      serial  -> serial    per-op VJPs (convs take the stride-aware
+                           GEMM-view backward ``models/cnn.py`` binds).
+      fused / spatial -> serial   those VJPs pull back per-op through XLA.
+      xla     -> xla       XLA interleaves the grad ops as it likes.
+
+    The same C2 safety net applies: a grad group whose summed backward
+    profiles exceed the budgets is priced serial (``lower(train=True)``
+    makes the demotion bidirectional, so the mirror stays faithful).
+    Makespans come from ``cost_model.group_execution_time_bwd`` /
+    ``backward_profiles``.  The returned Plan is the lowering + pricing
+    artifact for the training step's backward half — mode counts,
+    ``Plan.makespan``, the benchmarks' modeled columns; execution flows
+    through the VJPs of the forward plan, not through ``run_plan``.
+    """
+    _REASON = {
+        "grouped": "mirror: grouped dx (masked) + grouped dw/db kernels",
+        "stacked": "mirror: stacked kernel VJP on the backward GEMMs",
+        "serial": "per-op VJPs",
+        "fused": "fused VJP pulls back per-op",
+        "spatial": "spatial VJP pulls back per-op",
+        "xla": "forward group already XLA-interleaved",
+    }
+    groups: list[ExecGroup] = []
+    for g in reversed(plan.groups):
+        ops = [graph.ops[n] for n in g.ops]
+        bprofs = [p for op in ops
+                  for p in cm.backward_profiles(
+                      op, g.algorithms.get(op.name)
+                      or cm.best_algorithm(op)[0])]
+        feasible = (sum(p.workspace_bytes for p in bprofs) <= hbm_budget
+                    and sum(p.vmem_bytes for p in bprofs) <= vmem_budget)
+        if g.mode in ("grouped", "stacked") and feasible:
+            mode, t = cm.group_execution_time_bwd(ops, g.algorithms,
+                                                  mode=g.mode)
+            reason = _REASON[mode]
+        elif g.mode == "xla":
+            mode, t = "xla", cm.xla_interleave_time(bprofs)
+            reason = _REASON["xla"]
+        else:
+            mode, t = "serial", sum(p.time for p in bprofs)
+            reason = ("budget-infeasible (C2 fallback)"
+                      if g.mode in ("grouped", "stacked")
+                      else _REASON[g.mode])
+        groups.append(ExecGroup(
+            mode, tuple(f"grad:{n}" for n in g.ops),
+            {f"grad:{n}": a for n, a in g.algorithms.items()}, t, reason))
+    return Plan(groups, context={"forward": plan})
+
+
+# ---------------------------------------------------------------------------
 # execution
 # ---------------------------------------------------------------------------
 
@@ -182,6 +272,13 @@ class OpImpl:
       gemm_x/gemm_w/gemm_post — the op as ``post(x2d @ w)`` with
           x2d (M, K) from the deps and w (K, N): grouped + stacked + fused
           modes.  For a K×K conv, gemm_x is the im2col patch view.
+      gemm_x_key — opt-in hashable token identifying the gemm_x
+          *transform*: two impls with equal (deps, gemm_x_key) promise to
+          produce the identical x2d.  When every branch of a grouped
+          group shares one (deps, key) and one K, the executor dedups the
+          shared X into ONE wide GEMM (weights concatenated along N — a
+          single X read); the ragged kernel stays for mixed-K groups.
+          ``None`` (the default) never dedups.
       gemm_bias/gemm_relu/gemm_reshape — split epilogue for grouped mode:
           when every branch provides bias + ReLU + a pure reshape, the
           grouped kernel fuses bias+ReLU in-kernel (no HBM round-trip)
@@ -194,6 +291,7 @@ class OpImpl:
     deps: tuple[str, ...]
     fn: Callable[..., Any]
     gemm_x: Callable[..., Any] | None = None
+    gemm_x_key: Any = None
     gemm_w: Any = None
     gemm_post: Callable[..., Any] | None = None
     gemm_bias: Any = None
@@ -271,13 +369,49 @@ def _run_stacked(group: ExecGroup, impls: dict[str, OpImpl], env: dict,
         env[name] = impl.gemm_post(ys[i][:, :ns[i]])
 
 
+def _shared_x_wide(impls, names) -> bool:
+    """Shared-input X dedup condition (ROADMAP item): every branch reads
+    the SAME GEMM lhs — one (deps, gemm_x_key) bucket, opt-in via the
+    key — with one K, so the group is a single wide GEMM along N."""
+    i0 = impls[names[0]]
+    if i0.gemm_x_key is None:
+        return False
+    if any(impls[n].deps != i0.deps or impls[n].gemm_x_key != i0.gemm_x_key
+           for n in names):
+        return False
+    return len({impls[n].gemm_w.shape[0] for n in names}) == 1
+
+
 def _run_grouped(group: ExecGroup, impls: dict[str, OpImpl], env: dict,
                  interpret):
     from repro.kernels.ops import grouped_matmul  # ragged, fused epilogue
     names = group.ops
-    xs = [impls[n].gemm_x(*_dep_args(impls[n], env)) for n in names]
     ws = [impls[n].gemm_w for n in names]
-    if _grouped_fusable(impls, names):
+    fusable = _grouped_fusable(impls, names)
+    if len(names) > 1 and _shared_x_wide(impls, names):
+        # uniform-K branches over one X: concatenate weights along N into
+        # ONE wide GEMM — the shared input is read once instead of G
+        # times, and the wide GEMM's VJP keeps the backward deduped too
+        # (one dx, one wide dw/db, split by the concat's own pullback).
+        i0 = impls[names[0]]
+        x = i0.gemm_x(*_dep_args(i0, env))
+        if fusable:
+            (y,) = grouped_matmul(
+                [x], [jnp.concatenate(ws, axis=1)],
+                [jnp.concatenate([impls[n].gemm_bias for n in names])],
+                relu=True, interpret=interpret)
+        else:
+            (y,) = grouped_matmul([x], [jnp.concatenate(ws, axis=1)],
+                                  interpret=interpret)
+        off = 0
+        for n, w in zip(names, ws):
+            sl = y[:, off:off + w.shape[1]]
+            env[n] = impls[n].gemm_reshape(sl) if fusable \
+                else impls[n].gemm_post(sl)
+            off += w.shape[1]
+        return
+    xs = [impls[n].gemm_x(*_dep_args(impls[n], env)) for n in names]
+    if fusable:
         ys = grouped_matmul(xs, ws, [impls[n].gemm_bias for n in names],
                             relu=True, interpret=interpret)
         for n, y in zip(names, ys):

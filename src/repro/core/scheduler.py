@@ -17,6 +17,7 @@ kernel, which is precisely the framework flaw the paper documents.
 from __future__ import annotations
 
 import dataclasses
+import functools
 
 from repro.core import cost_model as cm
 from repro.core import selector as sel
@@ -50,12 +51,29 @@ class Schedule:
 def schedule(graph: OpGraph, *, max_group: int = 4,
              hbm_budget: float = cm.HBM_BYTES * 0.25,
              vmem_budget: float = cm.VMEM_BYTES,
-             concurrent: bool = True) -> Schedule:
+             concurrent: bool = True, train: bool = False) -> Schedule:
     """List-schedule the DAG into co-execution groups.
 
     concurrent=False reproduces the serial baseline (every op its own group,
     per-op-fastest algorithm) — the framework behaviour the paper critiques.
+
+    train=True packs for the whole training step: candidate groups are
+    judged (and CoGroup times recorded) at forward PLUS backward cost —
+    the grad CoGroup mirrors the forward packing (the VJP of a grouped
+    group launches the grouped dx/dw kernels), so a group only forms when
+    co-execution wins in both directions AND each direction's launch fits
+    the C2 budgets on its own (matching ``plan.lower(train=True)``).
+    Backward pricing comes from ``cost_model.group_execution_time_bwd``
+    over ``gemm_shape_bwd``.
     """
+
+    @functools.cache
+    def bwd_serial(name: str) -> float:
+        # memoized: the greedy packer re-prices the same op across
+        # O(ready * max_group) candidate extensions
+        op = graph.ops[name]
+        return sum(p.time
+                   for p in cm.backward_profiles(op, cm.best_algorithm(op)[0]))
     fastest = sel.select_fastest(graph)
     prio = graph.critical_path_weights(
         lambda op: fastest.profiles[op.name].time)
@@ -87,8 +105,18 @@ def schedule(graph: OpGraph, *, max_group: int = 4,
                 # their full win (grouped has no padding-waste term) while
                 # heterogeneous groups stop looking better than they run.
                 _, t_group = cm.group_execution_time(ops, profs)
-                feasible = (sum(p.workspace_bytes for p in profs) <= hbm_budget
-                            and sum(p.vmem_bytes for p in profs) <= vmem_budget)
+                if train:
+                    t_serial += sum(bwd_serial(n) for n in cand)
+                    t_group += cm.group_execution_time_bwd(ops, algs)[1]
+                feasible = sel._group_feasible(profs, hbm_budget, vmem_budget)
+                if train and feasible:
+                    # mirror lower(train=True): the backward launch must
+                    # fit the budgets on its own, or the lowered plan
+                    # demotes the group this packing relied on
+                    feasible = sel._group_feasible(
+                        [p for op in ops
+                         for p in cm.backward_profiles(op, algs[op.name])],
+                        hbm_budget, vmem_budget)
                 if feasible and t_group < t_serial * 0.98:
                     chosen = cand
                     ready.pop(i)
@@ -100,10 +128,18 @@ def schedule(graph: OpGraph, *, max_group: int = 4,
         # Record the realizable-mode makespan (lower() re-derives the mode
         # itself — budgets and the mesh can still override it there).
         _, t = cm.group_execution_time(ops, profs)
-        serialized = (len(chosen) > 1 and not sel._group_feasible(
-            profs, hbm_budget, vmem_budget))
+        if train:
+            t += cm.group_execution_time_bwd(ops, algs)[1]
+        serialized = (len(chosen) > 1 and not (
+            sel._group_feasible(profs, hbm_budget, vmem_budget)
+            and (not train or sel._group_feasible(
+                [p for op in ops
+                 for p in cm.backward_profiles(op, algs[op.name])],
+                hbm_budget, vmem_budget))))
         if serialized:
             t = cm.serial_time(profs)
+            if train:
+                t += sum(bwd_serial(n) for n in chosen)
         groups.append(CoGroup(chosen, algs, t, serialized))
         # retire
         for n in chosen:

@@ -25,8 +25,24 @@ k-steps of one output tile are consecutive grid steps, so the fp32
 accumulator lives in VMEM scratch across them.  The bias + optional ReLU
 epilogue is applied in-kernel at the last k-step — branch outputs leave
 the kernel finished, with no post-kernel bias/activation round-trip.
-Per-branch dims pad only to the 128 lane/sublane alignment, never to the
-widest branch: zero pad-to-max-N FLOPs.
+The optional ``mask`` operand (tiled like X) zeroes LHS elements where
+mask <= 0 before the dot: the fused-ReLU *cotangent* mask of the
+backward pass, applied in-kernel instead of a separate XLA pass.
+Per-branch dims pad only to the block alignment, never to the widest
+branch: zero pad-to-max-N FLOPs.
+
+``grouped_matmul_dw`` is the mirrored backward-weight kernel: G
+*transposed* GEMMs dw_g = x_g^T @ dy_g with per-branch (K_g, N_g)
+outputs sharing the M contraction, db_g = sum_M dy_g reduced in the same
+pass (accumulated on the first k-row, where each dy column block is
+streamed in anyway, and stored at the last m-step) — the whole grad
+CoGroup of a grouped branch group in one launch.
+
+Block sizes default to ``grouped_block_shape`` (ROADMAP "block-size
+tuning"): 256-row M-blocks once M > 16384, and 256-wide (bk, bn) weight
+tiles for bf16 when every branch is already 256-aligned; the returned
+``GroupedBlocks`` repr records the choice (``grouped_debug`` prints the
+whole launch).
 
 Every tensor operand is packed as a (T, block, block) tile stack —
 branch g's X tiles occupy slots [xbase_g, xbase_g + mb * nkb_g), its
@@ -43,6 +59,7 @@ differentiable wrapper (custom VJP) lives in ``kernels/ops.py``.
 from __future__ import annotations
 
 import functools
+from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
@@ -55,14 +72,98 @@ def _round_up(x: int, m: int) -> int:
     return -(-x // m) * m
 
 
-def _gmm_kernel(tab_ref, x_ref, w_ref, b_ref, o_ref, acc_ref, *, relu: bool):
+def _tile_stack(a2d, b0: int, b1: int):
+    """(D0, D1) -> (D0/b0 * D1/b1, b0, b1) leading-dim tile stack,
+    row-block major (the slot layout every kernel here addresses)."""
+    d0, d1 = a2d.shape
+    t = a2d.reshape(d0 // b0, b0, d1 // b1, b1).transpose(0, 2, 1, 3)
+    return t.reshape(-1, b0, b1)
+
+
+# ---------------------------------------------------------------------------
+# block-size heuristic (ROADMAP "block-size tuning")
+# ---------------------------------------------------------------------------
+
+M_LARGE_ROWS = 16384     # B*OH*OW beyond which 256-row M-blocks pay off
+
+
+class GroupedBlocks(NamedTuple):
+    """Chosen (bm, bn, bk) with the reason — the kernel's debug repr."""
+    bm: int
+    bn: int
+    bk: int
+    note: str = "default 128^3"
+
+    def __repr__(self):
+        return (f"GroupedBlocks(bm={self.bm}, bn={self.bn}, bk={self.bk}, "
+                f"note={self.note!r})")
+
+
+def grouped_block_shape(m: int, kns, dtype=jnp.float32) -> GroupedBlocks:
+    """Pick (bm, bn, bk) for a grouped launch over branch widths ``kns``
+    = [(K_g, N_g)] sharing ``m`` rows.
+
+    Large-M groups (M = B*OH*OW > 16384) take 256-row M-blocks — half
+    the grid steps, twice the MXU work per DMA.  bf16 operands take
+    256-wide (bk, bn) weight tiles whenever EVERY branch's K (resp. N)
+    is already a multiple of 256, so the wider alignment adds zero pad
+    FLOPs; a (256, 256) bf16 W tile plus the f32 accumulator still sit
+    comfortably in VMEM.  f32 keeps 128 lanes (the MXU native tile).
+    """
+    notes = []
+    bm, bn, bk = 128, 128, 128
+    if m > M_LARGE_ROWS:
+        bm = 256
+        notes.append(f"M={m}>16k -> bm=256")
+    if jnp.dtype(dtype) == jnp.dtype(jnp.bfloat16):
+        if all(n % 256 == 0 for _, n in kns):
+            bn = 256
+        if all(k % 256 == 0 for k, _ in kns):
+            bk = 256
+        if bn == 256 or bk == 256:
+            notes.append(f"bf16 256-aligned -> (bk,bn)=({bk},{bn})")
+    return GroupedBlocks(bm, bn, bk, "; ".join(notes) or "default 128^3")
+
+
+def grouped_debug(xs, ws, *, bm=None, bn=None, bk=None) -> str:
+    """Human-readable description of the launch ``grouped_matmul(xs, ws)``
+    would make — branch count, shared M, dtype, chosen blocks (heuristic
+    or explicit), and the flattened grid size."""
+    m = xs[0].shape[0]
+    kns = [(w.shape[0], w.shape[1]) for w in ws]
+    blocks = grouped_block_shape(m, kns, xs[0].dtype)
+    if not (bm is None and bn is None and bk is None):
+        # mirror the kernels: explicit dims override, the rest still come
+        # from the heuristic — the repr must report the ACTUAL launch
+        blocks = GroupedBlocks(bm or blocks.bm, bn or blocks.bn,
+                               bk or blocks.bk,
+                               f"explicit over ({blocks.note})")
+    mb = _round_up(m, blocks.bm) // blocks.bm
+    steps = sum(mb * (_round_up(k, blocks.bk) // blocks.bk)
+                * (_round_up(n, blocks.bn) // blocks.bn) for k, n in kns)
+    return (f"grouped_matmul[G={len(ws)} M={m} "
+            f"{jnp.dtype(xs[0].dtype).name} {blocks!r} grid={steps}]")
+
+
+# ---------------------------------------------------------------------------
+# forward kernel: y_g = epilogue(x_g @ w_g + b_g)
+# ---------------------------------------------------------------------------
+
+def _gmm_kernel(tab_ref, *refs, relu: bool, masked: bool):
+    if masked:
+        x_ref, m_ref, w_ref, b_ref, o_ref, acc_ref = refs
+    else:
+        x_ref, w_ref, b_ref, o_ref, acc_ref = refs
     t = pl.program_id(0)
 
     @pl.when(tab_ref[3, t] == 1)
     def _init():
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
-    acc_ref[...] += jnp.dot(x_ref[...], w_ref[...],
+    x = x_ref[...]
+    if masked:
+        x = jnp.where(m_ref[...] > 0, x, jnp.zeros_like(x))
+    acc_ref[...] += jnp.dot(x, w_ref[...],
                             preferred_element_type=jnp.float32)
 
     @pl.when(tab_ref[4, t] == 1)
@@ -96,38 +197,46 @@ def _plan_tiles(m_blocks: int, kbs: tuple[int, ...], nbs: tuple[int, ...]):
     return np.array(rows, np.int32)
 
 
-def grouped_matmul(xs, ws, bs=None, *, relu: bool = False, bm: int = 128,
-                   bn: int = 128, bk: int = 128, interpret: bool = False):
+def grouped_matmul(xs, ws, bs=None, *, relu: bool = False, mask=None,
+                   bm: int | None = None, bn: int | None = None,
+                   bk: int | None = None, interpret: bool = False):
     """[x_g @ w_g (+ b_g) (+ ReLU)] for ragged (K_g, N_g), one kernel.
 
     xs: G arrays (M, K_g) — shared M; ws: G arrays (K_g, N_g);
-    bs: G arrays (N_g,) or None.  Returns G arrays (M, N_g).
+    bs: G arrays (N_g,) or None; mask: G arrays (M, K_g) or None —
+    x_g is zeroed where mask_g <= 0 in-kernel (the ReLU cotangent mask
+    of the backward dx GEMMs).  Block sizes default to
+    ``grouped_block_shape``.  Returns G arrays (M, N_g).
     """
     g = len(xs)
     assert g == len(ws) and g >= 1, (len(xs), len(ws))
     assert bs is None or len(bs) == g
+    assert mask is None or len(mask) == g
     m = xs[0].shape[0]
     assert all(x.shape[0] == m for x in xs), [x.shape for x in xs]
     assert all(x.shape[1] == w.shape[0] for x, w in zip(xs, ws)), \
         [(x.shape, w.shape) for x, w in zip(xs, ws)]
+    if bm is None or bn is None or bk is None:
+        blocks = grouped_block_shape(
+            m, [(w.shape[0], w.shape[1]) for w in ws], xs[0].dtype)
+        bm, bn, bk = bm or blocks.bm, bn or blocks.bn, bk or blocks.bk
     mp = _round_up(m, bm)
     mb = mp // bm
     kps = [_round_up(x.shape[1], bk) for x in xs]
     nps = [_round_up(w.shape[1], bn) for w in ws]
     nsum = sum(nps)
 
-    xtiles = []
-    for x, kp in zip(xs, kps):
-        xp = jnp.pad(x, ((0, mp - m), (0, kp - x.shape[1])))
-        xt = xp.reshape(mb, bm, kp // bk, bk).transpose(0, 2, 1, 3)
-        xtiles.append(xt.reshape(-1, bm, bk))
-    xpk = jnp.concatenate(xtiles, axis=0)
-    wtiles = []
-    for w, kp, np_ in zip(ws, kps, nps):
-        wp = jnp.pad(w, ((0, kp - w.shape[0]), (0, np_ - w.shape[1])))
-        wt = wp.reshape(kp // bk, bk, np_ // bn, bn).transpose(0, 2, 1, 3)
-        wtiles.append(wt.reshape(-1, bk, bn))
-    wpk = jnp.concatenate(wtiles, axis=0).astype(xpk.dtype)
+    def pack_x(arrs):
+        return jnp.concatenate(
+            [_tile_stack(jnp.pad(a, ((0, mp - m), (0, kp - a.shape[1]))),
+                         bm, bk)
+             for a, kp in zip(arrs, kps)], axis=0)
+
+    xpk = pack_x(xs)
+    wpk = jnp.concatenate(
+        [_tile_stack(jnp.pad(w, ((0, kp - w.shape[0]),
+                                 (0, np_ - w.shape[1]))), bk, bn)
+         for w, kp, np_ in zip(ws, kps, nps)], axis=0).astype(xpk.dtype)
     if bs is None:
         bpk = jnp.zeros((1, nsum), xpk.dtype)
     else:
@@ -139,24 +248,34 @@ def grouped_matmul(xs, ws, bs=None, *, relu: bool = False, bm: int = 128,
         mb, tuple(kp // bk for kp in kps), tuple(np_ // bn for np_ in nps)))
     o_tiles = mb * sum(np_ // bn for np_ in nps)
 
+    in_specs = [pl.BlockSpec((None, bm, bk), lambda t, tab: (tab[0, t], 0, 0))]
+    ins = [xpk]
+    if mask is not None:
+        assert all(mk.shape == x.shape for mk, x in zip(mask, xs)), \
+            [(mk.shape, x.shape) for mk, x in zip(mask, xs)]
+        in_specs.append(
+            pl.BlockSpec((None, bm, bk), lambda t, tab: (tab[0, t], 0, 0)))
+        ins.append(pack_x(mask))
+    in_specs += [
+        pl.BlockSpec((None, bk, bn), lambda t, tab: (tab[1, t], 0, 0)),
+        pl.BlockSpec((1, bn), lambda t, tab: (0, tab[2, t])),
+    ]
+    ins += [wpk, bpk]
+
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=1,
         grid=(tab.shape[1],),
-        in_specs=[
-            pl.BlockSpec((None, bm, bk), lambda t, tab: (tab[0, t], 0, 0)),
-            pl.BlockSpec((None, bk, bn), lambda t, tab: (tab[1, t], 0, 0)),
-            pl.BlockSpec((1, bn), lambda t, tab: (0, tab[2, t])),
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((None, bm, bn),
                                lambda t, tab: (tab[5, t], 0, 0)),
         scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
     )
     out = pl.pallas_call(
-        functools.partial(_gmm_kernel, relu=relu),
+        functools.partial(_gmm_kernel, relu=relu, masked=mask is not None),
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((o_tiles, bm, bn), xs[0].dtype),
         interpret=interpret,
-    )(tab, xpk, wpk, bpk)
+    )(tab, *ins)
 
     outs, obase = [], 0
     for w, np_ in zip(ws, nps):
@@ -168,10 +287,12 @@ def grouped_matmul(xs, ws, bs=None, *, relu: bool = False, bm: int = 128,
     return outs
 
 
-def grouped_matmul_ref(xs, ws, bs=None, *, relu: bool = False):
+def grouped_matmul_ref(xs, ws, bs=None, *, relu: bool = False, mask=None):
     """Per-branch XLA oracle for tests/benchmarks."""
     outs = []
     for i, (x, w) in enumerate(zip(xs, ws)):
+        if mask is not None:
+            x = jnp.where(mask[i] > 0, x, jnp.zeros_like(x))
         y = jnp.dot(x, w, preferred_element_type=jnp.float32)
         if bs is not None:
             y = y + bs[i].astype(jnp.float32)
@@ -179,6 +300,181 @@ def grouped_matmul_ref(xs, ws, bs=None, *, relu: bool = False):
             y = jnp.maximum(y, 0.0)
         outs.append(y.astype(x.dtype))
     return outs
+
+
+# ---------------------------------------------------------------------------
+# backward-weight kernel: dw_g = x_g^T @ dy_g, db_g = sum_M dy_g
+# ---------------------------------------------------------------------------
+
+def _gmm_dw_kernel(tab_ref, *refs, masked: bool):
+    if masked:
+        x_ref, dy_ref, y_ref, dw_ref, db_ref, acc_ref, db_acc_ref = refs
+    else:
+        x_ref, dy_ref, dw_ref, db_ref, acc_ref, db_acc_ref = refs
+    t = pl.program_id(0)
+    dy = dy_ref[...]
+    if masked:
+        dy = jnp.where(y_ref[...] > 0, dy, jnp.zeros_like(dy))
+
+    @pl.when(tab_ref[2, t] == 1)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    @pl.when((tab_ref[2, t] == 1) & (tab_ref[6, t] == 1))
+    def _init_db():
+        db_acc_ref[...] = jnp.zeros_like(db_acc_ref)
+
+    # x^T @ dy: contract the shared m-rows of both tiles -> (bk, bn)
+    acc_ref[...] += jax.lax.dot_general(
+        x_ref[...], dy, dimension_numbers=(((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+
+    @pl.when(tab_ref[6, t] == 1)
+    def _acc_db():
+        # db rides the first k-row, whose dy blocks are streamed in anyway
+        db_acc_ref[...] += dy.astype(jnp.float32).sum(0, keepdims=True)
+
+    @pl.when(tab_ref[3, t] == 1)
+    def _store():
+        dw_ref[...] = acc_ref[...].astype(dw_ref.dtype)
+        db_ref[...] = db_acc_ref[...]
+
+
+@functools.lru_cache(maxsize=512)
+def _plan_tiles_dw(m_blocks: int, kbs: tuple[int, ...], nbs: tuple[int, ...]):
+    """Offset table for the dw grid — one step per (branch, col-block,
+    k-row-block, m-step), m-steps consecutive so the fp32 (bk, bn)
+    accumulator lives in VMEM scratch across them.  Column-major per
+    branch (j outermost) so the db output block of column j is visited
+    consecutively and holds its finished sum before the grid moves on.
+
+        row 0  xt     slot into the packed X tile stack (T_x, bm, bk)
+        row 1  dyt    slot into the packed dY tile stack (T_dy, bm, bn)
+        row 2  first  1 on a tile's first m-step (zero the accumulators)
+        row 3  last   1 on a tile's last m-step (store dw + db)
+        row 4  ot     slot into the packed dW tile stack (T_w, bk, bn)
+        row 5  bj     col-block index into the packed db (1, sum Np_g)
+        row 6  dodb   1 on k-row 0 (the k-row that accumulates db)
+    """
+    rows: list[list[int]] = [[] for _ in range(7)]
+    noff = xbase = dybase = wbase = 0
+    for nkb, npb in zip(kbs, nbs):
+        for j in range(npb):
+            for ki in range(nkb):
+                for mi in range(m_blocks):
+                    rows[0].append(xbase + mi * nkb + ki)
+                    rows[1].append(dybase + mi * npb + j)
+                    rows[2].append(1 if mi == 0 else 0)
+                    rows[3].append(1 if mi == m_blocks - 1 else 0)
+                    rows[4].append(wbase + ki * npb + j)
+                    rows[5].append(noff + j)
+                    rows[6].append(1 if ki == 0 else 0)
+        noff += npb
+        xbase += m_blocks * nkb
+        dybase += m_blocks * npb
+        wbase += nkb * npb
+    return np.array(rows, np.int32)
+
+
+def grouped_matmul_dw(xs, dys, mask=None, *, bm: int | None = None,
+                      bn: int | None = None, bk: int | None = None,
+                      interpret: bool = False):
+    """G transposed GEMMs dw_g = x_g^T @ dy_g with db_g = sum_M dy_g
+    reduced in the same pass — the backward-weight half of a grouped
+    branch group in ONE kernel.
+
+    xs: G arrays (M, K_g) — the forward GEMM inputs (im2col patches for
+    convs); dys: G arrays (M, N_g) — output cotangents; mask: optional G
+    arrays (M, N_g) — dy_g is zeroed where mask_g <= 0 before BOTH the
+    GEMM and the db reduction (the fused-ReLU cotangent mask, applied
+    in-kernel).  Returns (dws, dbs): G arrays (K_g, N_g) in the input
+    dtype and G float32 arrays (N_g,).
+    """
+    g = len(xs)
+    assert g == len(dys) and g >= 1, (len(xs), len(dys))
+    assert mask is None or len(mask) == g
+    m = xs[0].shape[0]
+    assert all(x.shape[0] == m and dy.shape[0] == m
+               for x, dy in zip(xs, dys)), \
+        [(x.shape, dy.shape) for x, dy in zip(xs, dys)]
+    kns = [(x.shape[1], dy.shape[1]) for x, dy in zip(xs, dys)]
+    if bm is None or bn is None or bk is None:
+        blocks = grouped_block_shape(m, kns, xs[0].dtype)
+        bm, bn, bk = bm or blocks.bm, bn or blocks.bn, bk or blocks.bk
+    mp = _round_up(m, bm)
+    mb = mp // bm
+    kps = [_round_up(k, bk) for k, _ in kns]
+    nps = [_round_up(n, bn) for _, n in kns]
+    nsum = sum(nps)
+
+    xpk = jnp.concatenate(
+        [_tile_stack(jnp.pad(x, ((0, mp - m), (0, kp - x.shape[1]))),
+                     bm, bk)
+         for x, kp in zip(xs, kps)], axis=0)
+
+    def pack_dy(arrs):
+        return jnp.concatenate(
+            [_tile_stack(jnp.pad(a, ((0, mp - m), (0, np_ - a.shape[1]))),
+                         bm, bn)
+             for a, np_ in zip(arrs, nps)], axis=0)
+
+    ins = [xpk, pack_dy(dys).astype(xpk.dtype)]
+    in_specs = [
+        pl.BlockSpec((None, bm, bk), lambda t, tab: (tab[0, t], 0, 0)),
+        pl.BlockSpec((None, bm, bn), lambda t, tab: (tab[1, t], 0, 0)),
+    ]
+    if mask is not None:
+        assert all(mk.shape == dy.shape for mk, dy in zip(mask, dys)), \
+            [(mk.shape, dy.shape) for mk, dy in zip(mask, dys)]
+        ins.append(pack_dy(mask))
+        in_specs.append(
+            pl.BlockSpec((None, bm, bn), lambda t, tab: (tab[1, t], 0, 0)))
+
+    tab = jnp.asarray(_plan_tiles_dw(
+        mb, tuple(kp // bk for kp in kps), tuple(np_ // bn for np_ in nps)))
+    w_tiles = sum((kp // bk) * (np_ // bn) for kp, np_ in zip(kps, nps))
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(tab.shape[1],),
+        in_specs=in_specs,
+        out_specs=[
+            pl.BlockSpec((None, bk, bn), lambda t, tab: (tab[4, t], 0, 0)),
+            pl.BlockSpec((1, bn), lambda t, tab: (0, tab[5, t])),
+        ],
+        scratch_shapes=[pltpu.VMEM((bk, bn), jnp.float32),
+                        pltpu.VMEM((1, bn), jnp.float32)],
+    )
+    dwt, dbp = pl.pallas_call(
+        functools.partial(_gmm_dw_kernel, masked=mask is not None),
+        grid_spec=grid_spec,
+        out_shape=[jax.ShapeDtypeStruct((w_tiles, bk, bn), xs[0].dtype),
+                   jax.ShapeDtypeStruct((1, nsum), jnp.float32)],
+        interpret=interpret,
+    )(tab, *ins)
+
+    dws, dbs, wbase, noff = [], [], 0, 0
+    for (k, n), kp, np_ in zip(kns, kps, nps):
+        nkb, npb = kp // bk, np_ // bn
+        tiles = dwt[wbase:wbase + nkb * npb]
+        dw = tiles.reshape(nkb, npb, bk, bn).transpose(0, 2, 1, 3)
+        dws.append(dw.reshape(kp, np_)[:k, :n])
+        dbs.append(dbp[0, noff:noff + n])
+        wbase += nkb * npb
+        noff += np_
+    return dws, dbs
+
+
+def grouped_matmul_dw_ref(xs, dys, mask=None):
+    """Per-branch XLA oracle: (dws, dbs) with the same mask semantics."""
+    dws, dbs = [], []
+    for i, (x, dy) in enumerate(zip(xs, dys)):
+        if mask is not None:
+            dy = jnp.where(mask[i] > 0, dy, jnp.zeros_like(dy))
+        dws.append(jnp.dot(x.T, dy,
+                           preferred_element_type=jnp.float32).astype(x.dtype))
+        dbs.append(dy.astype(jnp.float32).sum(0))
+    return dws, dbs
 
 
 def grouped_matmul_flops(shapes, bm: int = 128, bn: int = 128,

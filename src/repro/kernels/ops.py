@@ -174,14 +174,24 @@ def grouped_matmul(xs, ws, bs=None, *, relu: bool = False,
     """G ragged branch GEMMs (M, K_g) @ (K_g, N_g) (+bias, +ReLU) in ONE
     kernel — see ``kernels/grouped_matmul.py``.
 
-    Differentiable: the custom VJP masks the cotangent through the fused
-    ReLU, computes dx_g with the SAME grouped kernel (the G backward GEMMs
-    dy_g @ w_g^T are themselves ragged shared-M branches), and pulls dw/db
-    back through XLA — the co-execution knob concerns the forward kernel,
-    matching the ``_conv_alg`` / ``fused_gemm_reduce`` convention."""
+    Differentiable, and the backward pass co-executes too: the custom VJP
+    runs exactly two grouped launches — dx_g through the SAME grouped
+    kernel with the ReLU cotangent mask applied in-kernel (the G backward
+    GEMMs dy_g @ w_g^T are themselves ragged shared-M branches), and
+    dw_g/db_g through the grouped dw kernel (G transposed GEMMs
+    x_g^T @ dy_g with db reduced in the same pass).  No per-branch XLA
+    fallback remains on the grouped path."""
     interpret = default_interpret() if interpret is None else interpret
     return _grouped_vjp(tuple(xs), tuple(ws),
                         None if bs is None else tuple(bs), relu, interpret)
+
+
+def grouped_matmul_dw(xs, dys, ys=None, *, interpret: bool | None = None):
+    """(dws, dbs) of a grouped branch GEMM in ONE kernel: dw_g = x_g^T @
+    dy_g (dy masked by y_g > 0 when ``ys`` is given) with db_g reduced in
+    the same pass — see ``kernels/grouped_matmul.py``."""
+    interpret = default_interpret() if interpret is None else interpret
+    return _gmm.grouped_matmul_dw(xs, dys, ys, interpret=interpret)
 
 
 @functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4))
@@ -198,19 +208,23 @@ def _grouped_fwd(xs, ws, bs, relu, interpret):
 def _grouped_bwd(relu, interpret, res, gs):
     xs, ws, bs, ys = res
     dys = [g.astype(x.dtype) for g, x in zip(gs, xs)]
-    if relu:
-        dys = [jnp.where(y > 0, dy, 0) for y, dy in zip(ys, dys)]
+    mask = list(ys) if relu else None
     dxs = tuple(_gmm.grouped_matmul(
-        dys, [w.T for w in ws], interpret=interpret))
-    dws = tuple(x.T @ dy for x, dy in zip(xs, dys))
-    dbs = None if bs is None else tuple(dy.sum(0) for dy in dys)
+        dys, [w.T for w in ws], mask=mask, interpret=interpret))
+    dws, dbs = _gmm.grouped_matmul_dw(xs, dys, mask, interpret=interpret)
+    dws = tuple(dw.astype(w.dtype) for dw, w in zip(dws, ws))
+    dbs = None if bs is None else tuple(
+        db.astype(b.dtype) for db, b in zip(dbs, bs))
     return dxs, dws, dbs
 
 
 _grouped_vjp.defvjp(_grouped_fwd, _grouped_bwd)
 
 grouped_matmul_ref = _gmm.grouped_matmul_ref
+grouped_matmul_dw_ref = _gmm.grouped_matmul_dw_ref
 grouped_matmul_flops = _gmm.grouped_matmul_flops
+grouped_block_shape = _gmm.grouped_block_shape
+grouped_debug = _gmm.grouped_debug
 
 
 # ---------------------------------------------------------------------------

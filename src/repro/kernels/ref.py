@@ -15,10 +15,13 @@ def branch_matmul_ref(x, y):
 
 
 def conv2d_ref(x, w, *, stride: int = 1, padding: str = "SAME"):
+    # f32 accumulation via explicit casts (not preferred_element_type):
+    # the conv TRANSPOSE then sees a same-dtype f32 conv, so bf16 inputs
+    # stay differentiable (mixed-dtype conv transpose is rejected by lax)
     return jax.lax.conv_general_dilated(
-        x, w, window_strides=(stride, stride), padding=padding,
+        x.astype(jnp.float32), w.astype(jnp.float32),
+        window_strides=(stride, stride), padding=padding,
         dimension_numbers=("NHWC", "HWIO", "NHWC"),
-        preferred_element_type=jnp.float32,
     ).astype(x.dtype)
 
 

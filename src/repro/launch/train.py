@@ -8,10 +8,12 @@ the full configs on a production mesh (the dry-run proves those compile).
 
 The CNN family (googlenet) trains through the execution-plan path:
 ``--plan concurrent`` lowers the scheduler's co-execution groups to a
-``core/plan.py`` Plan (stacked branch kernels etc.), ``--plan serial``
-re-plans with concurrency off (singleton groups, per-op-fastest
-algorithms — the paper's serial baseline), ``--plan none`` is the plain
-XLA forward:
+``core/plan.py`` Plan (grouped/stacked branch kernels etc.) packed at
+forward+backward cost — the custom VJPs co-execute the mirrored grad
+CoGroups (``backward_plan``), so ``--plan`` covers the train step's
+backward half too.  ``--plan serial`` re-plans with concurrency off
+(singleton groups, per-op-fastest algorithms — the paper's serial
+baseline), ``--plan none`` is the plain XLA forward:
 
   PYTHONPATH=src python -m repro.launch.train --arch googlenet --reduced \
       --steps 20 --batch 4 --plan concurrent
@@ -101,10 +103,18 @@ def main(argv=None):
                   "(kernel choice comes from the plan)")
         plan = None
         if args.plan != "none":
+            # train=True: pack + budget-check groups at fwd+bwd cost —
+            # the plan covers the whole training step, not just forward
             plan, _ = CNN.plan_cnn(cfg, args.batch,
-                                   concurrent=args.plan == "concurrent")
+                                   concurrent=args.plan == "concurrent",
+                                   train=True)
             print(f"[train] plan: modes={plan.mode_counts()} "
                   f"modeled_makespan={plan.makespan * 1e3:.3f} ms")
+            bwd = plan.context.get("backward")
+            if bwd is not None:
+                print(f"[train] backward plan: modes={bwd.mode_counts()} "
+                      f"modeled_makespan={bwd.makespan * 1e3:.3f} ms "
+                      f"xla_fallbacks={len(bwd.groups_of_mode('xla'))}")
         step_fn = ST.make_cnn_train_step(cfg, opt, plan=plan)
     else:
         if args.plan != "none":

@@ -15,6 +15,13 @@ Inception module co-executes: the ragged 1x1 projections AND the 3x3/5x5
 critical-path convs each run as ONE grouped Pallas kernel with bias+ReLU
 fused in-kernel, instead of six serial convs.  The algorithms-dict path
 (``forward(algorithms=...)``) remains as the serial fallback.
+
+The backward pass co-executes the mirrored fork/join: grouped groups
+differentiate through the grouped dw/db/dx kernels (their custom VJP),
+serial convs through the stride-aware im2col GEMM-view backward
+(``_conv_gemm_bwd`` — no XLA conv-transpose anywhere on the zoo path),
+and ``plan_cnn`` attaches the lowered grad CoGroups as
+``plan.context["backward"]`` (``core.plan.backward_plan``).
 """
 from __future__ import annotations
 
@@ -24,6 +31,7 @@ from typing import Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core.graph import Op, OpGraph
 # import from the conv2d module file directly (the package re-exports the
@@ -83,11 +91,13 @@ def conv(x, w, b, *, stride=1, algorithm="xla", interpret=None):
 
 @functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3, 4))
 def _conv_alg(x, w, stride, algorithm, interpret):
-    """Algorithm-zoo conv with a reference-conv VJP: the paper's algorithm
-    knob concerns the FORWARD kernel; the gradient of the mathematical op
-    is algorithm-independent, so the backward pass routes through XLA's
-    conv transpose (Pallas kernels have no JVP rule to differentiate
-    through)."""
+    """Algorithm-zoo conv with a GEMM-view VJP: the paper's algorithm knob
+    concerns the FORWARD kernel; the gradient of the mathematical op is
+    algorithm-independent and routes through the stride-aware im2col GEMM
+    lowering (``_conv_gemm_bwd``) — the same cuDNN-style view the grouped
+    dw/dx kernels co-execute for branch groups, here launched per-op
+    through the matmul zoo (the serial regime's one-kernel-per-op
+    backward)."""
     return _CONV_ALGS[algorithm](x, w, stride=stride, padding="SAME",
                                  interpret=interpret)
 
@@ -98,19 +108,55 @@ def _conv_alg_fwd(x, w, stride, algorithm, interpret):
 
 def _conv_alg_bwd(stride, algorithm, interpret, res, g):
     x, w = res
-    _, vjp = jax.vjp(
-        lambda xx, ww: k_ref.conv2d_ref(xx, ww, stride=stride,
-                                        padding="SAME"), x, w)
-    return vjp(g.astype(x.dtype))
+    return _conv_gemm_bwd(x, w, g.astype(x.dtype), stride,
+                          interpret=interpret)
 
 
 _conv_alg.defvjp(_conv_alg_fwd, _conv_alg_bwd)
 
 
+def _im2col(x, kh, kw, stride):
+    """SAME-padded im2col patches, feature order (C, KH, KW) — the GEMM
+    lhs every conv's forward AND backward lowering shares."""
+    return jax.lax.conv_general_dilated_patches(
+        x, filter_shape=(kh, kw), window_strides=(stride, stride),
+        padding="SAME", dimension_numbers=("NHWC", "HWIO", "NHWC"))
+
+
+def _conv_gemm_bwd(x, w, dy, stride, interpret=None):
+    """Conv backward through the stride-aware GEMM view (no XLA
+    conv-transpose): dw is the transposed GEMM patches^T @ dY2d — exactly
+    the contraction the grouped dw kernel co-executes for branch groups —
+    and dx pulls the patch cotangent back through the im2col gather.
+    The two GEMMs launch per-op through the Pallas matmul zoo, so the
+    serial baseline's backward is kernel-for-kernel comparable with the
+    grouped backward (one launch per op vs one per group)."""
+    from repro.kernels.ops import matmul as k_matmul
+    kh, kw, cin, cout = w.shape
+    dy2 = dy.reshape(-1, cout)
+    if (kh, kw) == (1, 1) and stride == 1:
+        x2 = x.reshape(-1, cin)
+        dx = k_matmul(dy2, w.reshape(cin, cout).T,
+                      interpret=interpret).reshape(x.shape)
+        dw2 = k_matmul(x2.T, dy2, interpret=interpret)
+        return dx, dw2.reshape(1, 1, cin, cout)
+    patches, pat_vjp = jax.vjp(lambda xx: _im2col(xx, kh, kw, stride), x)
+    p2 = patches.reshape(-1, cin * kh * kw)
+    wmat = w.transpose(2, 0, 1, 3).reshape(cin * kh * kw, cout)
+    dpat = k_matmul(dy2, wmat.T, interpret=interpret)
+    dx = pat_vjp(dpat.reshape(patches.shape))[0]
+    dw2 = k_matmul(p2.T, dy2, interpret=interpret)
+    return dx, dw2.reshape(cin, kh, kw, cout).transpose(1, 2, 0, 3)
+
+
 def maxpool(x, k=3, stride=2):
+    # numpy (not jnp) init: dtype-preserving for bf16, and still a
+    # concrete monoid identity — a traced jnp array defeats
+    # reduce_window's max-monoid detection, lowering to the generic
+    # reduce_window_p which has no transpose rule (jit+grad asserts)
     return jax.lax.reduce_window(
-        x, -jnp.inf, jax.lax.max, (1, k, k, 1), (1, stride, stride, 1),
-        "SAME")
+        x, np.array(-np.inf, x.dtype), jax.lax.max, (1, k, k, 1),
+        (1, stride, stride, 1), "SAME")
 
 
 def _conv_init(key, kh, cin, cout, dtype):
@@ -235,10 +281,7 @@ def _plan_impls(params, cfg: CNNConfig, interpret=None):
             x = in_t(x)
             if (kh, kw) == (1, 1) and s == 1:
                 return x.reshape(-1, cin)
-            patches = jax.lax.conv_general_dilated_patches(
-                x, filter_shape=(kh, kw), window_strides=(s, s),
-                padding="SAME", dimension_numbers=("NHWC", "HWIO", "NHWC"))
-            return patches.reshape(-1, cin * kh * kw)
+            return _im2col(x, kh, kw, s).reshape(-1, cin * kh * kw)
 
         def gemm_reshape(y2d, oh=oh, ow=ow):
             return y2d.reshape(-1, oh, ow, y2d.shape[-1])
@@ -252,6 +295,9 @@ def _plan_impls(params, cfg: CNNConfig, interpret=None):
                 in_t(x), pb["w"], pb["b"], stride=s, algorithm=algorithm,
                 interpret=interpret),
             gemm_x=gemm_x,
+            # branches whose pre-transform object AND filter geometry
+            # coincide produce the identical x2d -> wide-GEMM dedup
+            gemm_x_key=("conv_x", id(in_t), kh, kw, stride, cin),
             gemm_w=wmat,
             gemm_post=gemm_post,
             gemm_bias=pb["b"],
@@ -315,12 +361,18 @@ def forward_plan(params, cfg: CNNConfig, images, plan, *, mesh=None,
 
 def plan_cnn(cfg: CNNConfig, batch: int, *, mesh=None, concurrent=True,
              max_group: int = 4, hbm_budget: float | None = None,
-             vmem_budget: float | None = None):
+             vmem_budget: float | None = None, train: bool = False):
     """graph -> schedule -> executable plan for this CNN.
 
     Returns (Plan, Schedule).  This supersedes ``schedule_algorithms``: the
     plan carries the same per-op algorithm choices AND the per-group
     execution mode that makes the co-execution decisions real.
+
+    The mirrored backward plan (``core.plan.backward_plan``) is attached
+    as ``plan.context["backward"]`` — the lowering/pricing of the grad
+    CoGroups the training step's VJPs execute.  ``train=True`` packs and
+    budget-checks groups at forward+backward cost (a group only forms
+    when co-execution wins across the whole step).
     """
     from repro.core import plan as planlib
     from repro.core import scheduler as S
@@ -330,9 +382,11 @@ def plan_cnn(cfg: CNNConfig, batch: int, *, mesh=None, concurrent=True,
     if vmem_budget is not None:
         kw["vmem_budget"] = vmem_budget
     g = build_graph(cfg, batch)
-    sch = S.schedule(g, concurrent=concurrent, max_group=max_group, **kw)
-    plan = planlib.lower(g, sch, mesh=mesh, **kw)
+    sch = S.schedule(g, concurrent=concurrent, max_group=max_group,
+                     train=train, **kw)
+    plan = planlib.lower(g, sch, mesh=mesh, train=train, **kw)
     plan.context.update({"cfg": cfg, "batch": batch})
+    plan.context["backward"] = planlib.backward_plan(g, plan, **kw)
     return plan, sch
 
 

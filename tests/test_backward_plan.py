@@ -1,0 +1,361 @@
+"""Backward co-execution: mirrored plan lowering, backward pricing, the
+full-plan gradcheck vs the XLA reference, and shared-X dedup."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core import (Op, OpGraph, OpImpl, backward_plan, backward_profiles,
+                        gemm_shape_bwd, group_execution_time_bwd, lower,
+                        profile, run_plan, schedule)
+from repro.core.scheduler import CoGroup, Schedule
+from repro.models import cnn as CNN
+from repro.models.cnn import CNNConfig, InceptionSpec
+
+
+# ---------------------------------------------------------------------------
+# cost model: backward GEMM shapes + pricing
+# ---------------------------------------------------------------------------
+
+def test_gemm_shape_bwd_mirrors_forward():
+    op = Op.make("c", "conv2d", n=2, h=16, w=16, c=64, kh=3, kw=3, k=96,
+                 stride=1)
+    # forward im2col view (512, 576, 96) -> dx (M, N, K), dw (K, M, N)
+    assert gemm_shape_bwd(op) == ((512, 96, 576), (576, 512, 96))
+    op2 = Op.make("c2", "conv2d", n=2, h=16, w=16, c=64, kh=5, kw=5, k=32,
+                  stride=2)
+    assert gemm_shape_bwd(op2) == ((128, 32, 1600), (1600, 128, 32))
+    assert gemm_shape_bwd(Op.make("p", "pointwise", elements=64)) is None
+
+
+def test_backward_profiles_shapes_and_kinds():
+    op = Op.make("m", "matmul", m=256, k=128, n=384)
+    profs = backward_profiles(op, "mxu128")
+    assert [p.op for p in profs] == ["m:dx", "m:dw"]
+    # dx has the forward FLOPs (aligned shapes: identical MACs), dw too
+    fwd = profile(op, "mxu128")
+    assert all(p.flops == fwd.flops for p in profs)
+    # pointwise grad is the same traffic shape (concat backward = split)
+    pw = Op.make("j", "pointwise", elements=1 << 16)
+    assert len(backward_profiles(pw, "vpu")) == 1
+
+
+def test_direct_conv_1x1_io_not_undercounted():
+    """The PR-2 flag: the direct algorithm's kh*kw*0.5 re-read factor
+    bottomed out below 1 for 1x1 convs, undercounting input traffic."""
+    op = Op.make("c", "conv2d", n=32, h=28, w=28, c=192, kh=1, kw=1, k=64)
+    p = profile(op, "direct")
+    eb = op.dtype_bytes
+    xin = 32 * 28 * 28 * 192 * eb
+    xout = 32 * 28 * 28 * 64 * eb
+    wts = 192 * 64 * eb
+    assert p.hbm_bytes >= xin + xout + wts
+    # 3x3 keeps the overlapping-window re-read factor (4.5x input)
+    p3 = profile(Op.make("c3", "conv2d", n=32, h=28, w=28, c=192, kh=3,
+                         kw=3, k=64), "direct")
+    assert p3.hbm_bytes > 4 * xin
+
+
+def test_group_execution_time_bwd_modes():
+    ragged = [Op.make(f"b{i}", "matmul", m=512, k=k, n=n)
+              for i, (k, n) in enumerate([(64, 96), (64, 16), (576, 208),
+                                          (400, 48)])]
+    mode, t = group_execution_time_bwd(ragged)
+    assert mode == "grouped" and t > 0
+    # forcing the lowered forward mode prices that mode
+    assert group_execution_time_bwd(ragged, mode="grouped")[0] == "grouped"
+    uniform = [Op.make(f"u{i}", "matmul", m=512, k=128, n=128)
+               for i in range(3)]
+    assert group_execution_time_bwd(uniform, mode="stacked")[0] == "stacked"
+    het = [Op.make("g", "matmul", m=512, k=128, n=128),
+           Op.make("p", "pointwise", elements=1 << 20)]
+    assert group_execution_time_bwd(het)[0] == "xla"
+    single = [Op.make("s", "matmul", m=512, k=128, n=128)]
+    assert group_execution_time_bwd(single)[0] == "serial"
+
+
+# ---------------------------------------------------------------------------
+# backward-plan lowering
+# ---------------------------------------------------------------------------
+
+def test_backward_plan_googlenet_zero_xla():
+    """The acceptance regression: googlenet's backward plan mirrors the
+    forward fork/join groups in reverse and lowers every Inception grad
+    CoGroup to grouped/stacked — zero XLA fallbacks, just like PR 2
+    achieved forward."""
+    plan, _ = CNN.plan_cnn(get_config("googlenet"), batch=32)
+    bwd = plan.context["backward"]
+    assert len(bwd.groups) == len(plan.groups)
+    # mirrored order, grad:-prefixed ops
+    assert [g.ops for g in bwd.groups] == [
+        tuple(f"grad:{n}" for n in g.ops) for g in reversed(plan.groups)]
+    assert bwd.groups_of_mode("xla") == []
+    multi = [g for g in bwd.groups if len(g.ops) > 1]
+    assert len(multi) >= 18    # 2 grad co-exec groups per inception module
+    for g in multi:
+        assert g.mode in ("grouped", "stacked"), g
+    # the K×K critical-path conv grads co-execute in the grouped kernels
+    kxk = [g for g in multi
+           if any(n.endswith("/3x3") or n.endswith("/5x5") for n in g.ops)]
+    assert kxk and all(g.mode == "grouped" for g in kxk), kxk
+    # forward mode mirrors backward mode group-for-group
+    for fg, bg in zip(reversed(plan.groups), bwd.groups):
+        if fg.mode in ("grouped", "stacked"):
+            assert bg.mode == fg.mode, (fg, bg)
+    assert bwd.makespan > 0
+    # the train driver's exact lowering (train=True packing + per-direction
+    # budget checks, conv backward workspace charged) holds zero-xla too
+    plan_tr, _ = CNN.plan_cnn(get_config("googlenet"), batch=32, train=True)
+    assert plan_tr.context["backward"].groups_of_mode("xla") == []
+    assert plan_tr.mode_counts().get("grouped", 0) >= 15
+
+
+def test_backward_plan_budget_demotes_to_serial():
+    """The C2 safety net mirrors: grad groups over budget price serial."""
+    g = OpGraph()
+    g.add(Op.make("a", "matmul", m=256, k=256, n=256))
+    g.add(Op.make("b", "matmul", m=256, k=128, n=384))
+    cg = CoGroup(["a", "b"], {"a": "mxu128", "b": "mxu128"}, 1.0)
+    plan = lower(g, Schedule([cg]))
+    assert plan.groups[0].mode == "grouped"
+    bwd = backward_plan(g, plan, vmem_budget=1.0)
+    assert bwd.groups[0].mode == "serial"
+    assert "C2" in bwd.groups[0].reason
+    bwd_ok = backward_plan(g, plan)
+    assert bwd_ok.groups[0].mode == "grouped"
+
+
+def test_lower_train_budget_covers_backward():
+    """lower(train=True) checks C2 budgets against fwd+bwd profiles, so a
+    group whose backward footprint doesn't fit runs serial both ways."""
+    g = OpGraph()
+    g.add(Op.make("a", "matmul", m=256, k=256, n=256))
+    g.add(Op.make("b", "matmul", m=256, k=128, n=384))
+    cg = CoGroup(["a", "b"], {"a": "mxu128", "b": "mxu128"}, 1.0)
+    fwd_only = profile(g.ops["a"], "mxu128").vmem_bytes \
+        + profile(g.ops["b"], "mxu128").vmem_bytes
+    # budget fits the forward profiles alone but not fwd+bwd
+    plan_fwd = lower(g, Schedule([cg]), vmem_budget=fwd_only + 1)
+    assert plan_fwd.groups[0].mode == "grouped"
+    plan_tr = lower(g, Schedule([cg]), vmem_budget=fwd_only + 1, train=True)
+    assert plan_tr.groups[0].mode == "serial"
+    assert "C2" in plan_tr.groups[0].reason
+
+
+def test_scheduler_train_packs_backward():
+    """train=True prices candidates at fwd+bwd cost: groups still form on
+    googlenet and recorded times grow by the backward makespan."""
+    g = CNN.build_graph(get_config("googlenet"), batch=32)
+    sch = schedule(g)
+    sch_tr = schedule(g, train=True)
+    assert any(len(cg.ops) > 1 for cg in sch_tr.groups)
+    assert sch_tr.makespan > sch.makespan
+
+
+# ---------------------------------------------------------------------------
+# full-plan gradcheck vs the XLA reference
+# ---------------------------------------------------------------------------
+
+def _tiny_cfg():
+    """Stride-2 stem (serial GEMM-view backward) + one ragged Inception
+    module (grouped dw/db/dx kernels) — every backward path in one net."""
+    return CNNConfig(name="tiny", img=(8, 8, 3), stem=((3, 8, 2),),
+                     modules=(InceptionSpec(16, 8, 24, 4, 8, 8),),
+                     pool_between=(), num_classes=5)
+
+
+@pytest.mark.parametrize("dtype,rtol,atol", [
+    (jnp.float32, 2e-3, 2e-3),
+    (jnp.bfloat16, 1e-1, 1e-1),
+])
+def test_full_plan_backward_matches_xla_reference(dtype, rtol, atol):
+    """jax.grad through the lowered plan (grouped dw/db/dx kernels,
+    GEMM-view serial conv backward) against autodiff of the plain XLA
+    forward — ragged shapes, a strided stem, f32 and bf16."""
+    cfg = _tiny_cfg()
+    plan, _ = CNN.plan_cnn(cfg, batch=2)
+    assert plan.mode_counts().get("grouped", 0) >= 1
+    params = CNN.init_params(cfg, jax.random.PRNGKey(0), dtype=dtype)
+    batch = {"images": jax.random.normal(jax.random.PRNGKey(1),
+                                         (2, *cfg.img), dtype),
+             "labels": jax.random.randint(jax.random.PRNGKey(2), (2,), 0,
+                                          cfg.num_classes)}
+    (lp, _), gp = jax.value_and_grad(CNN.loss_fn, has_aux=True)(
+        params, cfg, batch, plan=plan)
+    (l0, _), g0 = jax.value_and_grad(CNN.loss_fn, has_aux=True)(
+        params, cfg, batch)
+    np.testing.assert_allclose(float(lp), float(l0), rtol=max(rtol, 1e-4))
+    for a, b in zip(jax.tree.leaves(g0), jax.tree.leaves(gp)):
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(b, np.float32),
+                                   rtol=rtol, atol=atol)
+
+
+def test_full_plan_backward_under_jit():
+    """jit(value_and_grad(loss_fn)) through the plan — the train driver's
+    exact path.  Eager gradchecks alone missed a maxpool init that
+    defeated reduce_window's max-monoid lowering, which only the
+    jit-of-vjp combination trips (linearize asserts on an unknown
+    primal)."""
+    cfg = _tiny_cfg()
+    plan, _ = CNN.plan_cnn(cfg, batch=2, train=True)
+    params = CNN.init_params(cfg, jax.random.PRNGKey(0))
+    batch = {"images": jax.random.normal(jax.random.PRNGKey(1),
+                                         (2, *cfg.img), jnp.float32),
+             "labels": jax.random.randint(jax.random.PRNGKey(2), (2,), 0,
+                                          cfg.num_classes)}
+    vg = jax.value_and_grad(CNN.loss_fn, has_aux=True)
+    (lj, _), gj = jax.jit(
+        lambda p: vg(p, cfg, batch, plan=plan))(params)
+    (le, _), ge = vg(params, cfg, batch, plan=plan)
+    np.testing.assert_allclose(float(lj), float(le), rtol=1e-5)
+    for a, b in zip(jax.tree.leaves(ge), jax.tree.leaves(gj)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-4, atol=1e-4)
+
+
+def test_strided_grouped_branches_gradcheck():
+    """Grads of a stride-2 grouped conv group (im2col GEMM views) match
+    autodiff through the reference convs — weights AND input."""
+    from repro.kernels import ref as k_ref
+    g = OpGraph()
+    g.add(Op.make("src", "pointwise", elements=2 * 16 * 16 * 8))
+    g.add(Op.make("a", "conv2d", n=2, h=16, w=16, c=8, kh=3, kw=3, k=24,
+                  stride=2), ["src"])
+    g.add(Op.make("b", "conv2d", n=2, h=16, w=16, c=8, kh=5, kw=5, k=8,
+                  stride=2), ["src"])
+    cg = CoGroup(["a", "b"], {"a": "im2col_gemm", "b": "im2col_gemm"}, 1.0)
+    plan = lower(g, Schedule([CoGroup(["src"], {"src": "vpu"}, 0.0), cg]))
+    assert plan.groups[1].mode == "grouped"
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    x = jax.random.normal(ks[0], (2, 16, 16, 8), jnp.float32)
+    was = jax.random.normal(ks[1], (3, 3, 8, 24), jnp.float32) * 0.2
+    wbs = jax.random.normal(ks[2], (5, 5, 8, 8), jnp.float32) * 0.2
+
+    def build_impls(was, wbs):
+        def im2col_impl(w4d, s):
+            kh, kw, cin, cout = w4d.shape
+
+            def gemm_x(x):
+                p = jax.lax.conv_general_dilated_patches(
+                    x, filter_shape=(kh, kw), window_strides=(s, s),
+                    padding="SAME",
+                    dimension_numbers=("NHWC", "HWIO", "NHWC"))
+                return p.reshape(-1, cin * kh * kw)
+
+            return OpImpl(
+                deps=("src",),
+                fn=lambda x, algorithm=None, w=w4d: k_ref.conv2d_ref(
+                    x, w, stride=s, padding="SAME"),
+                gemm_x=gemm_x,
+                gemm_w=w4d.transpose(2, 0, 1, 3).reshape(cin * kh * kw,
+                                                         cout),
+                gemm_post=lambda y: y.reshape(-1, 8, 8, y.shape[-1]))
+
+        return {"src": OpImpl(deps=("x0",), fn=lambda x, algorithm=None: x),
+                "a": im2col_impl(was, 2), "b": im2col_impl(wbs, 2)}
+
+    def loss(x, was, wbs):
+        env = run_plan(build_impls(was, wbs), {"x0": x}, plan)
+        return (env["a"] * env["a"]).sum() + (env["b"] * env["b"]).sum()
+
+    def loss_ref(x, was, wbs):
+        ya = k_ref.conv2d_ref(x, was, stride=2, padding="SAME")
+        yb = k_ref.conv2d_ref(x, wbs, stride=2, padding="SAME")
+        return (ya * ya).sum() + (yb * yb).sum()
+
+    got = jax.grad(loss, argnums=(0, 1, 2))(x, was, wbs)
+    want = jax.grad(loss_ref, argnums=(0, 1, 2))(x, was, wbs)
+    for a, b in zip(jax.tree.leaves(got), jax.tree.leaves(want)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-3, atol=1e-3)
+
+
+def test_conv_alg_gemm_backward_matches_conv_transpose():
+    """The serial conv backward (stride-aware im2col GEMM view) equals
+    the XLA conv-transpose gradients it replaced."""
+    from repro.kernels import ref as k_ref
+    for kh, stride in ((1, 1), (3, 1), (3, 2), (5, 2)):
+        ks = jax.random.split(jax.random.PRNGKey(kh * 10 + stride), 2)
+        x = jax.random.normal(ks[0], (2, 8, 8, 6), jnp.float32)
+        w = jax.random.normal(ks[1], (kh, kh, 6, 10), jnp.float32) * 0.3
+
+        def loss(x, w):
+            y = CNN._conv_alg(x, w, stride, "im2col_gemm", True)
+            return (y * y).sum()
+
+        def loss_ref(x, w):
+            y = k_ref.conv2d_ref(x, w, stride=stride, padding="SAME")
+            return (y * y).sum()
+
+        got = jax.grad(loss, argnums=(0, 1))(x, w)
+        want = jax.grad(loss_ref, argnums=(0, 1))(x, w)
+        for a, b in zip(got, want):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                       rtol=1e-4, atol=1e-4), (kh, stride)
+
+
+# ---------------------------------------------------------------------------
+# shared-input X dedup (wide GEMM)
+# ---------------------------------------------------------------------------
+
+def test_shared_x_dedup_lowers_to_one_wide_gemm(monkeypatch):
+    """Uniform-K branches with one (deps, gemm_x_key) run as ONE wide GEMM
+    (weights concatenated along N — a single X read); outputs and grads
+    match the per-branch references, and the ragged kernel stays for
+    impls without the key."""
+    import repro.kernels.ops as kops
+    g = OpGraph()
+    g.add(Op.make("a", "matmul", m=256, k=128, n=384))
+    g.add(Op.make("b", "matmul", m=256, k=128, n=32))
+    cg = CoGroup(["a", "b"], {"a": "mxu128", "b": "mxu128"}, 1.0)
+    plan = lower(g, Schedule([cg]))
+    assert plan.groups[0].mode == "grouped", plan.groups[0]
+    k1, k2, k3 = jax.random.split(jax.random.PRNGKey(0), 3)
+    x = jax.random.normal(k1, (256, 128), jnp.float32) * 0.1
+    wa = jax.random.normal(k2, (128, 384), jnp.float32) * 0.1
+    wb = jax.random.normal(k3, (128, 32), jnp.float32) * 0.1
+
+    calls = []
+    orig = kops.grouped_matmul
+
+    def spy(xs, ws, bs=None, **kw):
+        calls.append(len(list(xs)))
+        return orig(xs, ws, bs, **kw)
+
+    monkeypatch.setattr(kops, "grouped_matmul", spy)
+
+    def impls(wa, wb, key):
+        return {
+            "a": OpImpl(deps=("xin",), fn=lambda x, algorithm=None: x @ wa,
+                        gemm_x=lambda x: x, gemm_x_key=key, gemm_w=wa,
+                        gemm_post=lambda y: y),
+            "b": OpImpl(deps=("xin",), fn=lambda x, algorithm=None: x @ wb,
+                        gemm_x=lambda x: x, gemm_x_key=key, gemm_w=wb,
+                        gemm_post=lambda y: y),
+        }
+
+    env = run_plan(impls(wa, wb, ("shared", 1)), {"xin": x}, plan)
+    assert calls == [1], calls          # ONE wide GEMM, not G ragged
+    np.testing.assert_allclose(np.asarray(env["a"]), np.asarray(x @ wa),
+                               rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(env["b"]), np.asarray(x @ wb),
+                               rtol=1e-4, atol=1e-4)
+
+    # grads flow through the wide GEMM and its column split
+    def loss(x, wa, wb):
+        env = run_plan(impls(wa, wb, ("shared", 1)), {"xin": x}, plan)
+        return (env["a"] * env["a"]).sum() + (env["b"] * env["b"]).sum()
+
+    got = jax.grad(loss, argnums=(0, 1, 2))(x, wa, wb)
+    want = jax.grad(lambda x, wa, wb: ((x @ wa) ** 2).sum()
+                    + ((x @ wb) ** 2).sum(), argnums=(0, 1, 2))(x, wa, wb)
+    for a, b in zip(got, want):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-4, atol=1e-4)
+
+    # no key -> the ragged kernel with G branches (no dedup)
+    calls.clear()
+    run_plan(impls(wa, wb, None), {"xin": x}, plan)
+    assert calls == [2], calls
