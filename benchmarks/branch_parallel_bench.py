@@ -124,31 +124,40 @@ def modeled_vs_executed_table(batch: int = 4, reps: int = 3):
 
 
 def branch_mode_bench(batch: int = 2, reps: int = 5):
-    """grouped vs stacked vs serial wall time on one ragged Inception
-    module — forward AND backward — the branch-GEMM benchmark.
+    """fused_concat vs grouped vs stacked vs serial wall time on one
+    ragged Inception module — forward AND backward — the branch-GEMM
+    benchmark.
 
     The SAME CoGroups (the 1x1 quad and the im2col-viewed 3x3/5x5 pair)
     execute under each forced plan mode: ``serial`` launches the
     scheduler-chosen algorithm-zoo kernel per branch plus the separate
     bias+ReLU pass, ``stacked`` pads every branch to the widest (K, N)
     and runs the branch-grid kernel, ``grouped`` runs the ragged
-    grouped-GEMM kernel with the epilogue fused in-kernel.
+    grouped-GEMM kernel with the epilogue fused in-kernel (the module's
+    join still a standalone concat op), and ``fused_concat`` is grouped
+    with the join ABSORBED — the pair launch's epilogue writes straight
+    into the join buffer (``grouped_concat`` groups, zero standalone
+    concat ops).
 
     The backward pass is timed as the eager VJP pullback alone (forward
     residuals held fixed): serial pulls every conv back through its
     per-op GEMM-view backward (two matmul-zoo launches per branch),
-    stacked through the branch kernel's VJP, grouped through the two
-    grouped launches (masked dx + dw/db) — the mirrored grad CoGroups of
-    ``core.plan.backward_plan``.  Wall times are this host (XLA-CPU,
-    Pallas interpret); modeled columns are the TPU-v5e analytic cost
-    model — the same ordering story at both scales.
+    stacked through the branch kernel's VJP, grouped/fused_concat
+    through ONE combined launch per grad CoGroup (masked dx + dw/db over
+    the concatenated offset table) — the mirrored grad CoGroups of
+    ``core.plan.backward_plan``.  The fused variant also measures
+    ``bwd_launches_per_group`` with the eager kernel-launch counter.
+    Wall times are this host (XLA-CPU, Pallas interpret); modeled columns
+    are the TPU-v5e analytic cost model — the same ordering story at
+    both scales.
     """
     import dataclasses as _dc
 
     from repro.core import (backward_profiles, gemm_shape,
-                            group_execution_time_bwd, grouped_time, profile,
-                            serial_time, stacked_time)
+                            group_execution_time, group_execution_time_bwd,
+                            grouped_time, profile, serial_time, stacked_time)
     from repro.core.plan import Plan
+    from repro.kernels.ops import KERNEL_LAUNCHES, reset_launch_counts
     from repro.models import cnn as CNN
     from repro.models.cnn import CNNConfig, InceptionSpec
 
@@ -159,53 +168,99 @@ def branch_mode_bench(batch: int = 2, reps: int = 5):
     params = CNN.init_params(cfg, jax.random.PRNGKey(0))
     x = jax.random.normal(jax.random.PRNGKey(1), (batch, *cfg.img),
                           jnp.float32) * 0.1
-    plan, _ = CNN.plan_cnn(cfg, batch)
+    plan, _ = CNN.plan_cnn(cfg, batch, fuse_concat=False)
+    plan_fused, _ = CNN.plan_cnn(cfg, batch)
 
-    rows, result = [], {}
-    for mode in ("serial", "stacked", "grouped"):
-        forced = Plan([_dc.replace(gr, mode=mode) if len(gr.ops) > 1 else gr
-                       for gr in plan.groups], dict(plan.context))
-        modeled = modeled_bwd = 0.0
+    def modeled_times(forced):
+        fwd = bwd = 0.0
         for gr in forced.groups:
             ops = [g.ops[n] for n in gr.ops]
             profs = [profile(op, gr.algorithms[op.name]) for op in ops]
-            if len(ops) == 1 or mode == "serial":
-                modeled += serial_time(profs)
-                modeled_bwd += sum(
+            if gr.mode == "grouped_concat":
+                branch = [op for op in ops if op.name != gr.join]
+                bprofs = [p for op, p in zip(ops, profs)
+                          if op.name != gr.join]
+                fwd += group_execution_time(branch, bprofs,
+                                            join=g.ops[gr.join])[1]
+                bwd += group_execution_time_bwd(
+                    branch, gr.algorithms, mode="grouped_concat",
+                    join=g.ops[gr.join])[1]
+            elif len(ops) == 1 or gr.mode == "serial":
+                fwd += serial_time(profs)
+                bwd += sum(
                     p.time for op in ops
                     for p in backward_profiles(op, gr.algorithms[op.name]))
+            elif gr.mode == "stacked":
+                fwd += stacked_time(profs, [gemm_shape(op) for op in ops])
+                bwd += group_execution_time_bwd(ops, gr.algorithms,
+                                                mode="stacked")[1]
             else:
-                if mode == "stacked":
-                    modeled += stacked_time(profs,
-                                            [gemm_shape(op) for op in ops])
-                else:
-                    modeled += grouped_time(profs)
-                modeled_bwd += group_execution_time_bwd(
-                    ops, gr.algorithms, mode=mode)[1]
+                fwd += grouped_time(profs)
+                bwd += group_execution_time_bwd(ops, gr.algorithms,
+                                                mode="grouped")[1]
+        return fwd, bwd
+
+    variants = {}
+    for mode in ("serial", "stacked", "grouped"):
+        variants[mode] = Plan(
+            [_dc.replace(gr, mode=mode) if len(gr.ops) > 1 else gr
+             for gr in plan.groups], dict(plan.context))
+    # fused_concat == grouped everywhere except the join handling: the
+    # concat group keeps its absorbed join, every other multi group runs
+    # the grouped kernel
+    variants["fused_concat"] = Plan(
+        [gr if gr.mode == "grouped_concat" or len(gr.ops) == 1
+         else _dc.replace(gr, mode="grouped")
+         for gr in plan_fused.groups], dict(plan_fused.context))
+
+    # warm every variant, then time them INTERLEAVED and keep the
+    # per-variant minimum across reps: a load spike on this shared host
+    # hits all modes of that rep alike instead of biasing whichever
+    # variant it landed on (sequential per-mode averaging made the
+    # fused-vs-grouped comparison a coin flip under load)
+    rows, result, pullbacks = [], {}, {}
+    for mode, forced in variants.items():
+        result[mode] = {"wall_us": float("inf"), "bwd_wall_us": float("inf")}
         CNN.forward_plan(params, cfg, x, forced)             # warm caches
-        timings: dict = {}
-        for _ in range(reps):
-            CNN.forward_plan(params, cfg, x, forced, timings=timings)
-        wall = sum(timings.values()) / reps
-        # backward-only wall: eager VJP pullback against fixed residuals
         y, f_vjp = jax.vjp(
-            lambda p: CNN.forward_plan(p, cfg, x, forced), params)
+            lambda p, forced=forced: CNN.forward_plan(p, cfg, x, forced),
+            params)
         ct = jnp.ones_like(y)
         jax.block_until_ready(f_vjp(ct))                     # warm caches
-        t0 = time.time()
-        for _ in range(reps):
+        pullbacks[mode] = (f_vjp, ct)
+    for _ in range(reps):
+        for mode, forced in variants.items():
+            timings: dict = {}      # per-group eager wall, this rep only
+            CNN.forward_plan(params, cfg, x, forced, timings=timings)
+            result[mode]["wall_us"] = min(result[mode]["wall_us"],
+                                          sum(timings.values()) * 1e6)
+            f_vjp, ct = pullbacks[mode]
+            t0 = time.time()
+            jax.block_until_ready(f_vjp(ct))   # eager VJP pullback alone
+            result[mode]["bwd_wall_us"] = min(result[mode]["bwd_wall_us"],
+                                              (time.time() - t0) * 1e6)
+    for mode, forced in variants.items():
+        modeled, modeled_bwd = modeled_times(forced)
+        result[mode]["wall_us"] = round(result[mode]["wall_us"], 1)
+        result[mode]["bwd_wall_us"] = round(result[mode]["bwd_wall_us"], 1)
+        result[mode]["modeled_us"] = round(modeled * 1e6, 3)
+        result[mode]["bwd_modeled_us"] = round(modeled_bwd * 1e6, 3)
+        if mode == "fused_concat":
+            # one combined dx+dw/db kernel per grouped-family grad CoGroup
+            n_groups = sum(1 for gr in forced.groups
+                           if gr.mode in ("grouped", "grouped_concat"))
+            f_vjp, ct = pullbacks[mode]
+            reset_launch_counts()
             jax.block_until_ready(f_vjp(ct))
-        bwd_wall = (time.time() - t0) / reps
-        result[mode] = {"wall_us": round(wall * 1e6, 1),
-                        "modeled_us": round(modeled * 1e6, 3),
-                        "bwd_wall_us": round(bwd_wall * 1e6, 1),
-                        "bwd_modeled_us": round(modeled_bwd * 1e6, 3)}
+            launches = KERNEL_LAUNCHES.get("grouped_matmul_bwd", 0)
+            result[mode]["bwd_launches_per_group"] = launches / max(
+                n_groups, 1)
         rows.append({
             "table": "branch_gemm_modes", "mode": mode, "batch": batch,
-            "us_per_call": round(wall * 1e6, 1),
-            "modeled_us": round(modeled * 1e6, 3),
-            "bwd_us_per_call": round(bwd_wall * 1e6, 1),
-            "bwd_modeled_us": round(modeled_bwd * 1e6, 3),
+            "us_per_call": result[mode]["wall_us"],
+            "modeled_us": result[mode]["modeled_us"],
+            "bwd_us_per_call": result[mode]["bwd_wall_us"],
+            "bwd_modeled_us": result[mode]["bwd_modeled_us"],
             "module": "inc(384,96r3,384,8r5,64,48) c64 16x16",
         })
     return rows, result

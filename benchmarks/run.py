@@ -9,10 +9,12 @@ Prints ``name,us_per_call,derived`` CSV rows:
   makespan  — serial vs concurrency-aware scheduling on GoogleNet (the
               paper's proposal, modeled TPU makespan) + the 27-cases count.
   stacked   — intra-chip stacked branch GEMM vs per-branch GEMMs.
-  branch_gemm_modes — grouped vs stacked vs serial execution of one ragged
-              Inception module's CoGroups, forward AND backward (the
-              eager VJP pullback per forced mode — the grad CoGroups of
-              core/plan.py backward_plan).
+  branch_gemm_modes — fused_concat vs grouped vs stacked vs serial
+              execution of one ragged Inception module's CoGroups,
+              forward AND backward (the eager VJP pullback per forced
+              mode — the grad CoGroups of core/plan.py backward_plan;
+              fused_concat absorbs the join into the grouped launch and
+              its backward is ONE combined launch per grad CoGroup).
   plan_makespan — modeled vs executed makespan per execution mode for the
               lowered plan (core/plan.py), serial vs planned — the
               cost-model validation table.
@@ -28,8 +30,9 @@ reps, no plan_makespan; same batch=2 module — batch 1 is unrepresentative
 of the grouped-vs-stacked backward) and writes ``BENCH_plan.smoke.json``
 instead
 so a quick CI pass never clobbers the committed baseline; ``scripts/ci.sh``
-asserts the smoke backward wall ordering (grouped <= serial, and <=
-stacked within tolerance).
+asserts the smoke guardrails (backward wall ordering grouped <= stacked
+<= serial, fused_concat no slower than grouped, one combined backward
+launch per grad CoGroup, zero standalone googlenet joins).
 """
 from __future__ import annotations
 
@@ -74,21 +77,28 @@ def main(smoke: bool = False) -> None:
     # batch 2 even in smoke: at batch 1 (M=256 rows) the grouped kernels'
     # fixed packing overhead dominates the interpret-mode wall and the
     # grouped-vs-stacked backward ordering is not representative
-    mode_rows, modes = branch_mode_bench(batch=2, reps=2 if smoke else 5)
+    mode_rows, modes = branch_mode_bench(batch=2, reps=3 if smoke else 5)
     _emit([dict(r) for r in mode_rows])
     wall = {m: v["wall_us"] for m, v in modes.items()}
     bwd_wall = {m: v["bwd_wall_us"] for m, v in modes.items()}
+    modeled = {m: v["modeled_us"] for m, v in modes.items()}
+    bwd_modeled = {m: v["bwd_modeled_us"] for m, v in modes.items()}
     bench_json["branch_gemm"] = {
         "module": mode_rows[0]["module"] if mode_rows else "",
         "wall_us": wall,
-        "modeled_us": {m: v["modeled_us"] for m, v in modes.items()},
+        "modeled_us": modeled,
         "wall_ordering_ok": wall["grouped"] <= wall["stacked"]
         <= wall["serial"],
+        "fused_wall_ok": wall["fused_concat"] <= wall["grouped"],
+        "fused_modeled_ok": modeled["fused_concat"] <= modeled["grouped"]
+        and bwd_modeled["fused_concat"] <= bwd_modeled["grouped"],
         "bwd_wall_us": bwd_wall,
-        "bwd_modeled_us": {m: v["bwd_modeled_us"] for m, v in modes.items()},
+        "bwd_modeled_us": bwd_modeled,
         "bwd_wall_ordering_ok": bwd_wall["grouped"] <= bwd_wall["stacked"]
         <= bwd_wall["serial"],
         "bwd_grouped_beats_serial": bwd_wall["grouped"] <= bwd_wall["serial"],
+        "bwd_launches_per_group":
+            modes["fused_concat"]["bwd_launches_per_group"],
     }
     # train=True: the same packing + per-direction budget checks the train
     # driver lowers with — the recorded backward metrics describe the plan
@@ -98,6 +108,11 @@ def main(smoke: bool = False) -> None:
     bench_json["googlenet_mode_counts"] = plan.mode_counts()
     bench_json["googlenet_xla_fallback_groups"] = len(
         plan.groups_of_mode("xla"))
+    # zero standalone inception joins on the fused path: every join rides
+    # a grouped_concat launch
+    bench_json["googlenet_standalone_join_groups"] = sum(
+        1 for g in plan.groups
+        if g.mode != "grouped_concat" and any("join" in n for n in g.ops))
     bench_json["googlenet_bwd_mode_counts"] = bwd_plan.mode_counts()
     bench_json["googlenet_bwd_xla_fallback_groups"] = len(
         bwd_plan.groups_of_mode("xla"))

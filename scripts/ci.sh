@@ -7,28 +7,54 @@ export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 python -m pytest -x -q "$@"
 make bench-smoke
 
-# Backward co-execution guardrails on the smoke baseline: every co-executed
-# backward (grouped AND stacked grad CoGroups) must beat the serial per-op
-# backward on wall time, and googlenet's backward plan must lower with zero
-# XLA fallbacks.  grouped-vs-stacked wall gets a loose 2x tolerance (NOT
-# an ordering claim — a catastrophic-regression tripwire only): the
-# interpret-mode emulation charges the grouped kernel's scalar-prefetch
-# offset table per grid step — a cost the hardware path doesn't pay —
-# and the reps=2 smoke run is noisy (committed baseline sits at ~1.24x);
-# the real ordering claim lives in the modeled (TPU) column.  Modeled asserts grouped is
-# the BEST mode; stacked-vs-serial is shape-dependent (ragged branches
-# pay pad-to-max — exactly why the grouped kernel exists).
+# Co-execution guardrails on the smoke baseline:
+#   - every co-executed backward (grouped AND stacked grad CoGroups) beats
+#     the serial per-op backward on wall time, and the grouped backward
+#     beats stacked within BWD_WALL_TOL (the re-enabled wall assertion:
+#     the hoisted offset tables + single combined dx/dw/db launch fixed
+#     the regression where the interpret emulation's per-call table
+#     re-upload put grouped a few percent behind stacked, so the
+#     tolerance is strict 1.0 — raise it only with a measured reason);
+#   - modeled asserts grouped is the BEST mode (stacked-vs-serial is
+#     shape-dependent: ragged branches pay pad-to-max — exactly why the
+#     grouped kernel exists);
+#   - fused-concat: the join-absorbing launch is no slower than grouped
+#     (wall, within the FUSED_WALL_TOL jitter floor — the join the fusion
+#     deletes is ~1ms of a ~400ms interpret-emulated module, so the wall
+#     comparison is a tie-or-win; the decisive fused-vs-grouped claim is
+#     the MODELED column, asserted strictly), googlenet lowers with ZERO
+#     standalone join ops, and the backward runs exactly ONE combined
+#     kernel per grouped-family grad CoGroup;
+#   - googlenet's backward plan lowers with zero XLA fallbacks.
 python - <<'PY'
 import json
+
+# Single named tolerance per wall check (keep the comment above and these
+# constants in sync by construction: this is the only place the numbers
+# live).  BWD_WALL_TOL: grouped-vs-stacked backward wall (strict).
+# FUSED_WALL_TOL: fused-concat vs grouped forward jitter floor.
+BWD_WALL_TOL = 1.0
+FUSED_WALL_TOL = 1.10
+
 d = json.load(open("BENCH_plan.smoke.json"))
 bg = d["branch_gemm"]["bwd_wall_us"]
 assert bg["grouped"] <= bg["serial"], f"grouped bwd slower than serial: {bg}"
 assert bg["stacked"] <= bg["serial"], f"stacked bwd slower than serial: {bg}"
-assert bg["grouped"] <= 2.0 * bg["stacked"], \
-    f"grouped bwd >2x behind stacked: {bg}"
+assert bg["grouped"] <= BWD_WALL_TOL * bg["stacked"], \
+    f"grouped bwd >{BWD_WALL_TOL}x behind stacked: {bg}"
 bm = d["branch_gemm"]["bwd_modeled_us"]
 assert bm["grouped"] <= bm["stacked"] and bm["grouped"] <= bm["serial"], \
     f"modeled backward: grouped not the best mode: {bm}"
+
+fg = d["branch_gemm"]
+w = fg["wall_us"]
+assert w["fused_concat"] <= FUSED_WALL_TOL * w["grouped"], \
+    f"fused_concat slower than grouped on wall (> {FUSED_WALL_TOL}x): {w}"
+assert fg["fused_modeled_ok"], \
+    f"fused_concat not ahead in the modeled column: {fg['modeled_us']}"
+assert fg["bwd_launches_per_group"] == 1, \
+    f"grad CoGroup not a single combined launch: {fg['bwd_launches_per_group']}"
+assert d["googlenet_standalone_join_groups"] == 0, d
 assert d["googlenet_bwd_xla_fallback_groups"] == 0, d
-print("backward smoke guardrails ok:", bg)
+print("smoke guardrails ok:", fg["wall_us"], bg)
 PY

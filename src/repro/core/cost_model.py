@@ -246,10 +246,11 @@ def gemm_shape_bwd(op: Op) -> tuple[tuple[int, int, int],
         dw = X^T (K, M) @ dY (M, N)      ->  (K, M, N)   shared-M contraction
 
     which is why a forward co-execution group mirrors into a backward
-    one: the dx GEMMs of G branches again share M (the grouped kernel
-    with the ReLU cotangent mask), and the dw GEMMs share the M
-    *contraction* with ragged (K_g, N_g) outputs (the grouped dw kernel,
-    db reduced in the same pass).
+    one: the dx GEMMs of G branches again share M, and the dw GEMMs
+    share the M *contraction* with ragged (K_g, N_g) outputs — the two
+    phases of the combined backward kernel (``grouped_matmul_bwd``,
+    ReLU cotangent mask folded into the dY packing, db reduced on the
+    first k-row).
     """
     s = gemm_shape(op)
     if s is None:
@@ -263,8 +264,8 @@ def backward_profiles(op: Op, algorithm: str) -> list[OpProfile]:
     backward pass).
 
     GEMM-view ops price as their two backward GEMMs (``gemm_shape_bwd``),
-    each an aligned MXU matmul — the lowering the grouped dw/dx kernels
-    execute.  pointwise grads are the same traffic shape (a concat
+    each an aligned MXU matmul — the lowering the combined backward
+    kernel's two phases execute.  pointwise grads are the same traffic shape (a concat
     backward is a split), so the forward profile stands.  Remaining kinds
     (attention/ssd) use the forward profile doubled — their backward does
     roughly twice the forward work.
@@ -295,18 +296,44 @@ def backward_profiles(op: Op, algorithm: str) -> list[OpProfile]:
     return profs
 
 
+def concat_profile(join_op: Op, elements: float | None = None) -> OpProfile:
+    """The fork/join concat as an explicit profile row: reading the branch
+    outputs back and writing the joint buffer — 2 * elements * eb bytes of
+    pure HBM traffic, zero MXU work.  ``elements`` defaults to the join
+    op's full element count (the standalone-concat cost every unfused mode
+    pays); the fused epilogue-concat passes only the passthrough columns
+    (branch slices produced by an earlier launch), because its in-launch
+    branches leave the kernel already inside the join buffer."""
+    e = join_op.p["elements"] if elements is None else elements
+    return OpProfile(f"{join_op.name}:concat", "concat", 0.0,
+                     2.0 * e * join_op.dtype_bytes, 0.0, 0.0)
+
+
+def _passthrough_elements(shapes, join_op: Op) -> float:
+    """Join elements NOT produced by the group's own branch GEMMs — the
+    columns a fused epilogue-concat still has to copy in."""
+    own = sum(m * n for m, _, n in shapes)
+    return max(join_op.p["elements"] - own, 0.0)
+
+
 def group_execution_time_bwd(ops: list[Op], algorithms: dict | None = None,
-                             mode: str | None = None) -> tuple[str, float]:
+                             mode: str | None = None,
+                             join: Op | None = None) -> tuple[str, float]:
     """(realizable mode, modeled makespan) for the GRAD group mirroring a
     forward co-execution group — the backward analogue of
     ``group_execution_time``, and what the custom VJPs actually launch.
 
-    Branches with shared-M GEMM views backward-co-execute in two grouped
-    launches (dx then dw/db) or, for uniform shapes, two stacked ones
-    (``branch_matmul``'s VJP).  Anything else only has the per-op XLA
-    pullback, priced with the interleave loss.  ``mode`` forces the
-    pricing to a known forward mode (``plan.backward_plan`` passes the
-    lowered mode; the scheduler omits it to judge candidates).
+    Branches with shared-M GEMM views backward-co-execute in ONE combined
+    grouped launch (masked dx + dw/db over a concatenated offset table —
+    the single kernel ``kernels.ops``' VJPs emit) or, for uniform shapes,
+    two stacked ones (``branch_matmul``'s VJP).  Anything else only has
+    the per-op XLA pullback, priced with the interleave loss.  ``mode``
+    forces the pricing to a known forward mode (``plan.backward_plan``
+    passes the lowered mode; the scheduler omits it to judge candidates).
+    ``join`` + mode="grouped_concat" prices the grad of a fused
+    epilogue-concat group: the joint cotangent is sliced straight into
+    the combined launch's packing, so only the passthrough columns pay
+    the split's read+write (the standalone join backward disappears).
     """
     algs = algorithms or {}
 
@@ -319,11 +346,17 @@ def group_execution_time_bwd(ops: list[Op], algorithms: dict | None = None,
     shapes = [gemm_shape(op) for op in ops]
     grouped_ok = (all(s is not None for s in shapes)
                   and len({s[0] for s in shapes}) == 1)
-    if grouped_ok and mode in ("grouped", "stacked", None):
+    if grouped_ok and mode in ("grouped", "grouped_concat", "stacked", None):
         per_op = [bprofs(op) for op in ops]
         dxp = [p[0] for p in per_op]
         dwp = [p[1] for p in per_op]
-        t_grouped = co_execution_time(dxp) + co_execution_time(dwp)
+        if mode == "grouped_concat":
+            assert join is not None, "grouped_concat backward needs the join"
+            rider = concat_profile(join, _passthrough_elements(shapes, join))
+            return "grouped_concat", co_execution_time(dxp + dwp + [rider])
+        # ONE combined launch: dx and dw/db share the grid, so compute of
+        # one phase overlaps memory of the other across the whole union
+        t_grouped = co_execution_time(dxp + dwp)
         uniform = len({s[:2] for s in shapes}) == 1
         # a FORCED stacked mode prices pad-to-max even on ragged branches
         # (the stacked kernel pads K and N to the widest, so it executes
@@ -406,8 +439,8 @@ def xla_interleave_time(profiles: list[OpProfile]) -> float:
     return co + XLA_INTERLEAVE_LOSS * (serial_time(profiles) - co)
 
 
-def group_execution_time(ops: list[Op],
-                         profiles: list[OpProfile]) -> tuple[str, float]:
+def group_execution_time(ops: list[Op], profiles: list[OpProfile],
+                         join: Op | None = None) -> tuple[str, float]:
     """(realizable single-chip mode, modeled makespan) for a co-execution
     group — the shared judgement ``scheduler`` packs with and
     ``plan.lower`` turns into an ExecGroup.
@@ -417,18 +450,33 @@ def group_execution_time(ops: list[Op],
     complementary (GEMM, pointwise) pair fuses; anything else only has the
     XLA-interleave path, modeled with its overlap loss.  ``spatial`` needs
     a mesh and is decided by ``plan.lower`` on top of this.
+
+    ``join``: the fork/join concat this group's outputs feed, when the
+    caller wants the concat traffic priced WITH the group (the absorption
+    judgement in ``plan.lower``).  A grouped group then becomes
+    ``grouped_concat`` — the fused epilogue-concat writes branch slices
+    in place, so only the passthrough columns keep their copy cost
+    (``concat_profile``) — while any other mode pays the standalone
+    concat's full read+write on top (the term the join's own singleton
+    group prices when it is NOT absorbed; never count both).
     """
     if len(ops) == 1:
         return "serial", profiles[0].time
     shapes = [gemm_shape(op) for op in ops]
     if all(s is not None for s in shapes) \
             and len({s[0] for s in shapes}) == 1:
+        if join is not None:
+            rider = concat_profile(join, _passthrough_elements(shapes, join))
+            return "grouped_concat", co_execution_time(profiles + [rider])
         t_grouped = grouped_time(profiles)
         if len({s[:2] for s in shapes}) == 1:   # uniform (M, K): stackable
             t_stacked = stacked_time(profiles, shapes)
             if t_stacked <= t_grouped:
                 return "stacked", t_stacked
         return "grouped", t_grouped
+    if join is not None:
+        mode, t = group_execution_time(ops, profiles)
+        return mode, t + concat_profile(join).time
     gemm = [i for i, s in enumerate(shapes) if s is not None]
     stream = [i for i, op in enumerate(ops) if op.kind == "pointwise"]
     if (len(ops) == 2 and len(gemm) == 1 and len(stream) == 1

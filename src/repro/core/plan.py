@@ -16,6 +16,14 @@ Modes (mirroring ``core/branch_parallel.py``):
             grid with a scalar-prefetched offset table and the bias+ReLU
             epilogue fused in-kernel (``kernels/grouped_matmul.py``).  No
             pad-to-max-N waste, no post-kernel HBM round-trip.
+  grouped_concat — a grouped group that ABSORBS the fork/join concat its
+            branches feed: the epilogue writes each branch's tiles
+            straight into its slice of the join's [M, sum N_g] layout
+            (``grouped_matmul_concat``), join inputs produced by earlier
+            groups are copied in as passthrough column slices, and the
+            standalone join op disappears from the plan.  The grad group
+            mirrors as ONE combined dx+dw/db launch whose packing slices
+            the joint cotangent directly.
   stacked — same-GEMM-shape branches fuse into ONE Pallas kernel with a
             branch grid axis (``kernels/branch_matmul.py``); heterogeneous
             output widths are padded to a common N and sliced back.  Kept
@@ -49,7 +57,8 @@ from repro.core import cost_model as cm
 from repro.core.graph import OpGraph
 from repro.core.scheduler import Schedule
 
-MODES = ("grouped", "stacked", "fused", "spatial", "serial", "xla")
+MODES = ("grouped", "grouped_concat", "stacked", "fused", "spatial",
+         "serial", "xla")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -60,6 +69,7 @@ class ExecGroup:
     algorithms: dict[str, str]     # op -> algorithm (serial fallback path)
     modeled_time: float            # cost-model makespan under ``mode``
     reason: str = ""               # why ``mode`` was chosen (debugging)
+    join: str = ""                 # grouped_concat: the absorbed join op
 
     def __post_init__(self):
         if self.mode not in MODES:
@@ -126,9 +136,61 @@ def _spatial_ok(graph: OpGraph, ops, mesh) -> bool:
     return len(outs) == 1
 
 
+def _absorb_concat_joins(graph: OpGraph,
+                         groups: list[ExecGroup]) -> list[ExecGroup]:
+    """Fuse fork/join concats into the grouped launches that feed them.
+
+    A grouped group absorbs a join when (a) the join is the ONLY consumer
+    of every op in the group (their outputs exist solely to be
+    concatenated), (b) the join is a pointwise op lowered as its own
+    singleton group later in the plan, and (c) every OTHER join input is
+    produced by an earlier group (those arrive as passthrough column
+    slices).  The merged ``grouped_concat`` group prices at
+    ``cost_model.group_execution_time(..., join=...)`` — branch slices
+    leave the kernel inside the join buffer, so only the passthrough
+    columns keep a copy cost — and the standalone join group is dropped.
+    """
+    out: list[ExecGroup | None] = list(groups)
+    for idx, g in enumerate(out):
+        if g is None or g.mode != "grouped" or len(g.ops) < 2:
+            continue
+        succs = {s for n in g.ops for s in graph.succ[n]}
+        if len(succs) != 1:
+            continue
+        (jname,) = succs
+        jop = graph.ops.get(jname)
+        if jop is None or jop.kind != "pointwise":
+            continue
+        if any(graph.succ[n] != {jname} for n in g.ops):
+            continue
+        jidx = next((k for k, gg in enumerate(out)
+                     if gg is not None and gg.ops == (jname,)), None)
+        if jidx is None or jidx < idx:
+            continue
+        produced = {n for gg in out[:idx] if gg is not None for n in gg.ops}
+        produced.update(n for n in graph.ops if not graph.pred[n])
+        if not all(p in produced for p in graph.pred[jname] - set(g.ops)):
+            continue
+        ops = [graph.ops[n] for n in g.ops]
+        profs = [cm.profile(op, g.algorithms[op.name]) for op in ops]
+        mode, t = cm.group_execution_time(ops, profs, join=jop)
+        if mode != "grouped_concat" \
+                or t >= g.modeled_time + out[jidx].modeled_time:
+            continue
+        algs = dict(g.algorithms)
+        algs.update(out[jidx].algorithms)
+        out[idx] = ExecGroup(
+            "grouped_concat", g.ops + (jname,), algs, t,
+            "fused epilogue-concat: branch slices land in the join "
+            "buffer in-kernel", join=jname)
+        out[jidx] = None
+    return [g for g in out if g is not None]
+
+
 def lower(graph: OpGraph, schedule: Schedule, *, mesh=None,
           hbm_budget: float = cm.HBM_BYTES * 0.25,
-          vmem_budget: float = cm.VMEM_BYTES, train: bool = False) -> Plan:
+          vmem_budget: float = cm.VMEM_BYTES, train: bool = False,
+          fuse_concat: bool = True) -> Plan:
     """Lower a Schedule to an executable Plan.
 
     Mode choice per CoGroup: budget-infeasible or singleton -> serial;
@@ -136,7 +198,10 @@ def lower(graph: OpGraph, schedule: Schedule, *, mesh=None,
     single-chip mode (grouped ragged branch GEMM / stacked uniform-shape /
     fused complementary pair / xla interleave) at its modeled makespan,
     and a mesh upgrades same-output branches to ``spatial`` when the
-    chip-split beats every single-chip mode.
+    chip-split beats every single-chip mode.  ``fuse_concat`` (default)
+    then absorbs each fork/join concat into the grouped launch feeding it
+    (``_absorb_concat_joins`` -> ``grouped_concat`` groups — zero
+    standalone join ops on the fused path).
 
     ``train=True`` additionally checks the C2 budgets against the
     group's backward profiles (each direction on its own — forward and
@@ -184,6 +249,8 @@ def lower(graph: OpGraph, schedule: Schedule, *, mesh=None,
                     reason = "branches fit the mesh model axis"
         groups.append(ExecGroup(mode, tuple(cg.ops), dict(cg.algorithms),
                                 t, reason))
+    if fuse_concat:
+        groups = _absorb_concat_joins(graph, groups)
     return Plan(groups, context={"mesh": mesh})
 
 
@@ -203,10 +270,14 @@ def backward_plan(graph: OpGraph, plan: Plan, *,
     forward ExecGroup becomes one grad ExecGroup (ops ``grad:<name>``)
     whose mode is what that VJP launches:
 
-      grouped -> grouped   dx through the grouped kernel with the ReLU
-                           cotangent mask applied in-kernel, dw/db
-                           through the grouped dw kernel — two ragged
-                           co-executed launches, zero XLA fallbacks.
+      grouped -> grouped   ONE combined launch: masked dx + dw/db over a
+                           concatenated two-phase offset table
+                           (``grouped_matmul_bwd``) — zero XLA fallbacks
+                           and a single kernel per grad CoGroup.
+      grouped_concat -> grouped_concat   the same combined launch; the
+                           joint cotangent is sliced straight into its
+                           packing, so the standalone join backward
+                           (split) disappears with its forward.
       stacked -> stacked   ``branch_matmul``'s VJP runs the stacked
                            kernel on the backward GEMMs.
       serial  -> serial    per-op VJPs (convs take the stride-aware
@@ -224,7 +295,9 @@ def backward_plan(graph: OpGraph, plan: Plan, *,
     through the VJPs of the forward plan, not through ``run_plan``.
     """
     _REASON = {
-        "grouped": "mirror: grouped dx (masked) + grouped dw/db kernels",
+        "grouped": "mirror: ONE combined masked-dx + dw/db launch",
+        "grouped_concat": "mirror: ONE combined launch, joint cotangent "
+                          "sliced straight into its packing",
         "stacked": "mirror: stacked kernel VJP on the backward GEMMs",
         "serial": "per-op VJPs",
         "fused": "fused VJP pulls back per-op",
@@ -240,7 +313,13 @@ def backward_plan(graph: OpGraph, plan: Plan, *,
                       or cm.best_algorithm(op)[0])]
         feasible = (sum(p.workspace_bytes for p in bprofs) <= hbm_budget
                     and sum(p.vmem_bytes for p in bprofs) <= vmem_budget)
-        if g.mode in ("grouped", "stacked") and feasible:
+        if g.mode == "grouped_concat" and feasible:
+            branch_ops = [op for op in ops if op.name != g.join]
+            mode, t = cm.group_execution_time_bwd(
+                branch_ops, g.algorithms, mode="grouped_concat",
+                join=graph.ops[g.join])
+            reason = _REASON[mode]
+        elif g.mode in ("grouped", "stacked") and feasible:
             mode, t = cm.group_execution_time_bwd(ops, g.algorithms,
                                                   mode=g.mode)
             reason = _REASON[mode]
@@ -250,11 +329,12 @@ def backward_plan(graph: OpGraph, plan: Plan, *,
         else:
             mode, t = "serial", sum(p.time for p in bprofs)
             reason = ("budget-infeasible (C2 fallback)"
-                      if g.mode in ("grouped", "stacked")
+                      if g.mode in ("grouped", "grouped_concat", "stacked")
                       else _REASON[g.mode])
         groups.append(ExecGroup(
             mode, tuple(f"grad:{n}" for n in g.ops),
-            {f"grad:{n}": a for n, a in g.algorithms.items()}, t, reason))
+            {f"grad:{n}": a for n, a in g.algorithms.items()}, t, reason,
+            join=f"grad:{g.join}" if g.join else ""))
     return Plan(groups, context={"forward": plan})
 
 
@@ -336,6 +416,26 @@ def _grouped_runnable(group: ExecGroup, impls, pending) -> bool:
         return False
     return _grouped_fusable(impls, group.ops) or all(
         impls[n].gemm_post is not None for n in group.ops)
+
+
+def _grouped_concat_runnable(group: ExecGroup, impls, env, pending) -> bool:
+    """The absorbed-join launch needs: every branch with GEMM views AND
+    the split in-kernel epilogue (the output goes straight into the join
+    buffer — there is no out-of-kernel ``gemm_post`` stage to run), the
+    join impl with its 2D->NHWC ``gemm_reshape`` view, and every
+    passthrough join input already in ``env``."""
+    if len(pending) != len(group.ops) or not group.join \
+            or group.join not in impls:
+        return False
+    jimpl = impls[group.join]
+    branches = [n for n in group.ops if n != group.join]
+    if jimpl.gemm_reshape is None or not set(branches) <= set(jimpl.deps):
+        return False
+    if not all(impls[n].gemm_x is not None and impls[n].gemm_w is not None
+               for n in branches):
+        return False
+    return _grouped_fusable(impls, branches) and all(
+        d in env for d in jimpl.deps if d not in branches)
 
 
 def _fused_runnable(group: ExecGroup, impls, pending) -> bool:
@@ -422,6 +522,62 @@ def _run_grouped(group: ExecGroup, impls: dict[str, OpImpl], env: dict,
             env[n] = impls[n].gemm_post(y)
 
 
+def _run_grouped_concat(group: ExecGroup, impls: dict[str, OpImpl], env: dict,
+                        interpret):
+    """Fused epilogue-concat execution: the grouped kernel writes every
+    in-launch branch's bias+ReLU output straight into its slice of the
+    join's (M, sum N_g) buffer; join inputs produced by EARLIER groups
+    (e.g. the 1x1/pool-proj outputs of an inception quad) are copied in
+    as passthrough column slices.  Only the join gets an env entry — the
+    absorption condition guarantees the join is every in-launch branch's
+    sole consumer, so their standalone outputs would be dead values (and
+    materializing them would be exactly the per-branch round-trip this
+    mode deletes)."""
+    from repro.kernels.ops import (grouped_block_shape,
+                                   grouped_matmul_concat)
+    jimpl = impls[group.join]
+    branches = [n for n in group.ops if n != group.join]
+    offs: dict[str, int] = {}
+    widths: dict[str, int] = {}
+    off = 0
+    for d in jimpl.deps:
+        w = impls[d].gemm_w.shape[1] if d in branches else env[d].shape[-1]
+        offs[d], widths[d] = off, w
+        off += w
+    order = [d for d in jimpl.deps if d in branches]
+    xs = [impls[n].gemm_x(*_dep_args(impls[n], env)) for n in order]
+    ws = [impls[n].gemm_w for n in order]
+    # the PADDED join buffer (compact=False): branch g's true columns sit
+    # at the cumulative padded base, so the join assembles as ONE
+    # concatenate of passthrough segments and (maximal) buffer slices —
+    # strictly less copying than per-branch outputs + a standalone concat
+    y2d = grouped_matmul_concat(
+        xs, ws, [impls[n].gemm_bias for n in order],
+        offsets=[offs[n] for n in order], total=off, relu=True,
+        compact=False, interpret=interpret)
+    bn = grouped_block_shape(
+        xs[0].shape[0], [(w.shape[0], w.shape[1]) for w in ws],
+        xs[0].dtype).bn
+    pbase = {}
+    base = 0
+    for n, w in zip(order, ws):
+        pbase[n] = base
+        base += -(-w.shape[1] // bn) * bn
+    segs: list = []       # (lo, hi) buffer slices interleaved with pt 2D
+    for d in jimpl.deps:
+        if d in branches:
+            lo, hi = pbase[d], pbase[d] + widths[d]
+            if segs and isinstance(segs[-1], tuple) and segs[-1][1] == lo:
+                segs[-1] = (segs[-1][0], hi)       # extend a contiguous run
+            else:
+                segs.append((lo, hi))
+        else:
+            segs.append(env[d].reshape(-1, widths[d]).astype(y2d.dtype))
+    parts = [y2d[:, s[0]:s[1]] if isinstance(s, tuple) else s for s in segs]
+    joined = parts[0] if len(parts) == 1 else jnp.concatenate(parts, axis=-1)
+    env[group.join] = jimpl.gemm_reshape(joined)
+
+
 def _run_fused(group: ExecGroup, impls: dict[str, OpImpl], env: dict,
                interpret):
     from repro.kernels.ops import fused_gemm_reduce  # padded wrapper
@@ -474,6 +630,9 @@ def run_plan(impls: dict[str, OpImpl], env: dict, plan: Plan, *,
         if group.mode == "grouped" and _grouped_runnable(group, impls,
                                                          pending):
             _run_grouped(group, impls, env, interpret)
+        elif group.mode == "grouped_concat" and _grouped_concat_runnable(
+                group, impls, env, pending):
+            _run_grouped_concat(group, impls, env, interpret)
         elif group.mode == "stacked" and _stacked_runnable(group, impls,
                                                            pending):
             _run_stacked(group, impls, env, interpret)

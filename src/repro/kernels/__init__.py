@@ -1,9 +1,11 @@
 """Pallas TPU kernels: the per-op algorithm zoo (paper C3/C4) + oracles."""
 from repro.kernels.ops import (  # noqa: F401
     attention, branch_matmul, conv2d, conv2d_supported, fused_gemm_reduce,
-    grouped_matmul, grouped_matmul_dw, grouped_matmul_dw_ref,
+    grouped_matmul, grouped_matmul_bwd, grouped_matmul_bwd_ref,
+    grouped_matmul_concat, grouped_matmul_concat_ref,
+    grouped_matmul_dw, grouped_matmul_dw_ref,
     grouped_matmul_flops, grouped_matmul_ref, grouped_block_shape,
-    grouped_debug, matmul, ssd,
+    grouped_debug, matmul, ssd, KERNEL_LAUNCHES, reset_launch_counts,
     ATTENTION_ALGORITHMS, CONV2D_ALGORITHMS, MATMUL_ALGORITHMS, SSD_ALGORITHMS,
     attention_workspace_bytes, conv2d_workspace_bytes, matmul_workspace_bytes,
     matmul_vmem_bytes, ssd_workspace_bytes, default_interpret,

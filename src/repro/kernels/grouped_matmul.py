@@ -31,12 +31,29 @@ backward pass, applied in-kernel instead of a separate XLA pass.
 Per-branch dims pad only to the block alignment, never to the widest
 branch: zero pad-to-max-N FLOPs.
 
+``grouped_matmul_concat`` is the fused epilogue-concat variant: the same
+kernel, but the scalar-prefetched table lays output slots out as the
+fork/join's padded panel layout (m-outermost, per-branch column-block
+offsets), so each branch's bias+ReLU epilogue stores its finished tile
+directly into the branch's slice of the join buffer.  The per-branch
+output buffers, their tile-stack unpacks, and the standalone
+``concatenate`` join all disappear — one bulk layout pass plus a single
+column gather (identity for bn-aligned widths) yields the true
+``[M, sum N_g]`` join.
+
 ``grouped_matmul_dw`` is the mirrored backward-weight kernel: G
 *transposed* GEMMs dw_g = x_g^T @ dy_g with per-branch (K_g, N_g)
 outputs sharing the M contraction, db_g = sum_M dy_g reduced in the same
 pass (accumulated on the first k-row, where each dy column block is
-streamed in anyway, and stored at the last m-step) — the whole grad
-CoGroup of a grouped branch group in one launch.
+streamed in anyway, and stored at the last m-step).
+
+``grouped_matmul_bwd`` merges the masked-dx pass and ``grouped_matmul_dw``
+into ONE launch over a concatenated two-phase offset table: the dY and
+mask tile stacks both phases read are identically tiled (bm, bn) blocks,
+so they are packed once and shared — half the packing traffic of the
+separate dx + dw launches, and the whole grad CoGroup of a grouped
+branch group is a single kernel (the shape ``kernels/ops.py``'s VJPs
+emit).
 
 Block sizes default to ``grouped_block_shape`` (ROADMAP "block-size
 tuning"): 256-row M-blocks once M > 16384, and 256-wide (bk, bn) weight
@@ -66,6 +83,20 @@ import jax.numpy as jnp
 import numpy as np
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
+
+
+# Eager kernel launches by wrapper name — the benchmark's
+# launches-per-grad-CoGroup instrument (under jit the wrapper runs once
+# at trace time, so only eager measurement is meaningful).
+KERNEL_LAUNCHES: dict[str, int] = {}
+
+
+def _count_launch(name: str) -> None:
+    KERNEL_LAUNCHES[name] = KERNEL_LAUNCHES.get(name, 0) + 1
+
+
+def reset_launch_counts() -> None:
+    KERNEL_LAUNCHES.clear()
 
 
 def _round_up(x: int, m: int) -> int:
@@ -197,6 +228,19 @@ def _plan_tiles(m_blocks: int, kbs: tuple[int, ...], nbs: tuple[int, ...]):
     return np.array(rows, np.int32)
 
 
+@functools.lru_cache(maxsize=512)
+def _device_table(builder, *args):
+    """Device-resident offset table — hoisted: built and uploaded ONCE per
+    tile-grid shape and reused across launches.  Re-uploading the table
+    every call is what put the grouped backward behind stacked on host
+    wall under the interpret emulation (BENCH ``bwd_wall_ordering_ok``
+    regression).  ensure_compile_time_eval: a first call from inside a
+    jit trace must still cache a CONCRETE device array, not a traced
+    constant that would leak into later eager calls."""
+    with jax.ensure_compile_time_eval():
+        return jnp.asarray(builder(*args))
+
+
 def grouped_matmul(xs, ws, bs=None, *, relu: bool = False, mask=None,
                    bm: int | None = None, bn: int | None = None,
                    bk: int | None = None, interpret: bool = False):
@@ -244,8 +288,10 @@ def grouped_matmul(xs, ws, bs=None, *, relu: bool = False, mask=None,
             [jnp.pad(b, (0, np_ - b.shape[0]))
              for b, np_ in zip(bs, nps)]).reshape(1, nsum).astype(xpk.dtype)
 
-    tab = jnp.asarray(_plan_tiles(
-        mb, tuple(kp // bk for kp in kps), tuple(np_ // bn for np_ in nps)))
+    _count_launch("grouped_matmul")
+    tab = _device_table(
+        _plan_tiles,
+        mb, tuple(kp // bk for kp in kps), tuple(np_ // bn for np_ in nps))
     o_tiles = mb * sum(np_ // bn for np_ in nps)
 
     in_specs = [pl.BlockSpec((None, bm, bk), lambda t, tab: (tab[0, t], 0, 0))]
@@ -300,6 +346,169 @@ def grouped_matmul_ref(xs, ws, bs=None, *, relu: bool = False, mask=None):
             y = jnp.maximum(y, 0.0)
         outs.append(y.astype(x.dtype))
     return outs
+
+
+# ---------------------------------------------------------------------------
+# fused epilogue-concat: y_g tiles land in the join's [M, sum N_g] layout
+# ---------------------------------------------------------------------------
+
+@functools.lru_cache(maxsize=512)
+def _plan_tiles_concat(m_blocks: int, kbs: tuple[int, ...],
+                       nbs: tuple[int, ...]):
+    """Offset table for the fused-concat grid — the SAME six rows as
+    ``_plan_tiles`` (the launch runs the unmodified ``_gmm_kernel``, so a
+    grid step costs exactly what a plain grouped step costs), but ordered
+    m-outermost with output slots laid out as the join's padded panel
+    layout: slot = mi * sum(npb_g) + (colblock base of branch g) + j.
+    One ``reshape . transpose . reshape`` then yields the whole
+    (Mp, sum Np_g) padded join — no per-branch unpack — and a single
+    column gather compacts away the per-branch block padding."""
+    rows: list[list[int]] = [[] for _ in range(6)]
+    xbases, wbases, cbases = [], [], []
+    xb = wb = cb = 0
+    for nkb, npb in zip(kbs, nbs):
+        xbases.append(xb)
+        wbases.append(wb)
+        cbases.append(cb)
+        xb += m_blocks * nkb
+        wb += nkb * npb
+        cb += npb
+    ncbt = cb
+    for i in range(m_blocks):
+        for g, (nkb, npb) in enumerate(zip(kbs, nbs)):
+            for j in range(npb):
+                for kk in range(nkb):
+                    rows[0].append(xbases[g] + i * nkb + kk)
+                    rows[1].append(wbases[g] + kk * npb + j)
+                    rows[2].append(cbases[g] + j)
+                    rows[3].append(1 if kk == 0 else 0)
+                    rows[4].append(1 if kk == nkb - 1 else 0)
+                    rows[5].append(i * ncbt + cbases[g] + j)
+    return np.array(rows, np.int32)
+
+
+@functools.lru_cache(maxsize=512)
+def _concat_gather_index(offsets: tuple[int, ...], ns: tuple[int, ...],
+                         nps: tuple[int, ...], total: int):
+    """Column map join-buffer -> padded-panel layout: true column
+    offsets[g] + c reads padded column base_g + c; passthrough holes
+    (columns no branch owns) read column 0 — placeholder values the
+    caller's ``dynamic_update_slice`` overwrites."""
+    idx = np.zeros(total, np.int32)
+    base = 0
+    for off, n, np_ in zip(offsets, ns, nps):
+        idx[off:off + n] = base + np.arange(n, dtype=np.int32)
+        base += np_
+    with jax.ensure_compile_time_eval():
+        return jnp.asarray(idx)
+
+
+def grouped_matmul_concat(xs, ws, bs=None, *, offsets, total: int,
+                          relu: bool = False, compact: bool = True,
+                          bm: int | None = None, bn: int | None = None,
+                          bk: int | None = None, interpret: bool = False):
+    """[x_g @ w_g (+ b_g) (+ ReLU)] assembled into the fork/join's concat
+    layout — ONE (M, total) output, branch g's columns at ``offsets[g]``.
+
+    The launch IS a grouped launch (the unmodified ``_gmm_kernel`` —
+    identical per-step cost), but its output slots are the join's padded
+    panel layout, m-outermost: one bulk layout pass yields the whole
+    (Mp, sum Np_g) padded join at once — the per-branch output buffers
+    and their unpacks disappear — and one column gather compacts the
+    per-branch block padding into the true [M, total] layout (for
+    bn-aligned branch widths it degenerates to the identity).
+
+    Columns of ``total`` not covered by any branch (passthrough slices of
+    branch outputs computed by an EARLIER launch) carry placeholder
+    values — the caller overwrites them (``core/plan.py`` uses
+    ``lax.dynamic_update_slice``).  Returns the (M, total) join buffer.
+
+    ``compact=False`` skips the gather and returns the PADDED
+    (M, sum Np_g) join buffer instead — branch g's true columns at the
+    cumulative padded base — for callers that splice the passthrough
+    segments and strip the padding in one pass (``core/plan.py``'s
+    grouped_concat executor); ``offsets``/``total`` then only fix the
+    branch order.
+    """
+    g = len(xs)
+    assert g == len(ws) and g == len(offsets) and g >= 1
+    assert bs is None or len(bs) == g
+    m = xs[0].shape[0]
+    assert all(x.shape[0] == m for x in xs), [x.shape for x in xs]
+    assert all(x.shape[1] == w.shape[0] for x, w in zip(xs, ws))
+    ns = [w.shape[1] for w in ws]
+    segs = sorted(zip(offsets, ns))
+    assert all(o1 >= o0 + n0 for (o0, n0), (o1, _) in zip(segs, segs[1:])) \
+        and segs[-1][0] + segs[-1][1] <= total, (offsets, ns, total)
+    if bm is None or bn is None or bk is None:
+        blocks = grouped_block_shape(
+            m, [(w.shape[0], w.shape[1]) for w in ws], xs[0].dtype)
+        bm, bn, bk = bm or blocks.bm, bn or blocks.bn, bk or blocks.bk
+    mp = _round_up(m, bm)
+    mb = mp // bm
+    kps = [_round_up(x.shape[1], bk) for x in xs]
+    nps = [_round_up(n, bn) for n in ns]
+    nsum = sum(nps)
+
+    xpk = jnp.concatenate(
+        [_tile_stack(jnp.pad(x, ((0, mp - m), (0, kp - x.shape[1]))),
+                     bm, bk)
+         for x, kp in zip(xs, kps)], axis=0)
+    wpk = jnp.concatenate(
+        [_tile_stack(jnp.pad(w, ((0, kp - w.shape[0]),
+                                 (0, np_ - w.shape[1]))), bk, bn)
+         for w, kp, np_ in zip(ws, kps, nps)], axis=0).astype(xpk.dtype)
+    if bs is None:
+        bpk = jnp.zeros((1, nsum), xpk.dtype)
+    else:
+        bpk = jnp.concatenate(
+            [jnp.pad(b, (0, np_ - b.shape[0]))
+             for b, np_ in zip(bs, nps)]).reshape(1, nsum).astype(xpk.dtype)
+
+    _count_launch("grouped_matmul_concat")
+    tab = _device_table(
+        _plan_tiles_concat,
+        mb, tuple(kp // bk for kp in kps), tuple(np_ // bn for np_ in nps))
+    ncbt = sum(np_ // bn for np_ in nps)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(tab.shape[1],),
+        in_specs=[
+            pl.BlockSpec((None, bm, bk), lambda t, tab: (tab[0, t], 0, 0)),
+            pl.BlockSpec((None, bk, bn), lambda t, tab: (tab[1, t], 0, 0)),
+            pl.BlockSpec((1, bn), lambda t, tab: (0, tab[2, t])),
+        ],
+        out_specs=pl.BlockSpec((None, bm, bn),
+                               lambda t, tab: (tab[5, t], 0, 0)),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+    )
+    out = pl.pallas_call(
+        functools.partial(_gmm_kernel, relu=relu, masked=False),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((mb * ncbt, bm, bn), xs[0].dtype),
+        interpret=interpret,
+    )(tab, xpk, wpk, bpk)
+    # m-outermost slots: ONE layout pass unpacks the padded join whole
+    y2 = out.reshape(mb, ncbt, bm, bn).transpose(0, 2, 1, 3)
+    y2 = y2.reshape(mp, ncbt * bn)[:m]
+    if not compact:
+        return y2
+    idx = _concat_gather_index(tuple(int(o) for o in offsets), tuple(ns),
+                               tuple(nps), int(total))
+    return jnp.take(y2, idx, axis=1)
+
+
+def grouped_matmul_concat_ref(xs, ws, bs=None, *, offsets, total: int,
+                              relu: bool = False):
+    """Per-branch XLA oracle: scatter each branch's GEMM into the join
+    layout (uncovered columns are zero here, unspecified in the kernel)."""
+    m = xs[0].shape[0]
+    out = jnp.zeros((m, total), xs[0].dtype)
+    ys = grouped_matmul_ref(xs, ws, bs, relu=relu)
+    for y, off in zip(ys, offsets):
+        out = jax.lax.dynamic_update_slice(out, y, (0, off))
+    return out
 
 
 # ---------------------------------------------------------------------------
@@ -430,8 +639,10 @@ def grouped_matmul_dw(xs, dys, mask=None, *, bm: int | None = None,
         in_specs.append(
             pl.BlockSpec((None, bm, bn), lambda t, tab: (tab[1, t], 0, 0)))
 
-    tab = jnp.asarray(_plan_tiles_dw(
-        mb, tuple(kp // bk for kp in kps), tuple(np_ // bn for np_ in nps)))
+    _count_launch("grouped_matmul_dw")
+    tab = _device_table(
+        _plan_tiles_dw,
+        mb, tuple(kp // bk for kp in kps), tuple(np_ // bn for np_ in nps))
     w_tiles = sum((kp // bk) * (np_ // bn) for kp, np_ in zip(kps, nps))
 
     grid_spec = pltpu.PrefetchScalarGridSpec(
@@ -475,6 +686,239 @@ def grouped_matmul_dw_ref(xs, dys, mask=None):
                            preferred_element_type=jnp.float32).astype(x.dtype))
         dbs.append(dy.astype(jnp.float32).sum(0))
     return dws, dbs
+
+
+# ---------------------------------------------------------------------------
+# combined backward: masked dx + dw/db in ONE launch (concatenated table)
+# ---------------------------------------------------------------------------
+
+def _gmm_bwd_kernel(tab_ref, dy_ref, ab_ref, o_ref, db_ref,
+                    acc_ref, accb_ref):
+    t = pl.program_id(0)
+    is_dw = tab_ref[6, t] == 1
+    first = tab_ref[2, t] == 1
+    last = tab_ref[3, t] == 1
+    dodb = tab_ref[5, t] == 1
+    dy = dy_ref[...]          # pre-masked at pack time (ReLU cotangent)
+
+    @pl.when(first)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    # phase 0 — dx_g = dy_g @ w_g^T: ab is the W^T tile
+    @pl.when(~is_dw)
+    def _acc_dx():
+        acc_ref[...] += jnp.dot(dy, ab_ref[...],
+                                preferred_element_type=jnp.float32)
+
+    # phase 1 — dw_g = x_g^T @ dy_g: ab is the X tile; db on k-row 0
+    @pl.when(is_dw)
+    def _acc_dw():
+        acc_ref[...] += jax.lax.dot_general(
+            ab_ref[...], dy, dimension_numbers=(((0,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+
+    @pl.when(is_dw & first & dodb)
+    def _init_db():
+        accb_ref[...] = jnp.zeros_like(accb_ref)
+
+    @pl.when(is_dw & dodb)
+    def _acc_db():
+        accb_ref[...] += dy.astype(jnp.float32).sum(0, keepdims=True)
+
+    @pl.when(last)
+    def _store():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+    @pl.when(is_dw & last)
+    def _store_db():
+        db_ref[...] = accb_ref[...]
+
+
+@functools.lru_cache(maxsize=512)
+def _plan_tiles_bwd(m_blocks: int, kbs: tuple[int, ...],
+                    nbs: tuple[int, ...]):
+    """Concatenated two-phase offset table: every dx step, then every dw
+    step, one flat grid over ONE uniform block size b = bm = bn = bk.
+    Uniform blocks let both phases share one operand stack (W^T tiles ++
+    X tiles), one output stack (dX tiles ++ dW tiles) and one fp32
+    accumulator — vs separate per-phase operands, the interpret emulation
+    (and a naive pipeline) moves one less input and one less output block
+    per step.  Rows:
+
+        row 0  dyt    slot into the packed dY tile stack (both phases)
+        row 1  abt    slot into the shared W^T ++ X tile stack
+        row 2  first  1 on a tile's first accumulation step
+        row 3  last   1 on a tile's last step (store)
+        row 4  ot     slot into the shared dX ++ dW output tile stack
+        row 5  dodb   1 on k-row 0 of the dw phase (accumulates db)
+        row 6  phase  0 = dx step, 1 = dw step
+        row 7  bj     col-block index into the packed db (1, sum Np_g)
+    """
+    rows: list[list[int]] = [[] for _ in range(8)]
+    xbases, dybases, wtbases, dxbases, dwbases, noffs = [], [], [], [], [], []
+    xb = dyb = wtb = dxb = dwb = nb = 0
+    for nkb, npb in zip(kbs, nbs):
+        dybases.append(dyb)
+        wtbases.append(wtb)
+        dxbases.append(dxb)
+        dyb += m_blocks * npb
+        wtb += npb * nkb
+        dxb += m_blocks * nkb
+    for nkb, npb in zip(kbs, nbs):
+        xbases.append(wtb + xb)         # X tiles follow ALL W^T tiles
+        dwbases.append(dxb + dwb)       # dW tiles follow ALL dX tiles
+        noffs.append(nb)
+        xb += m_blocks * nkb
+        dwb += nkb * npb
+        nb += npb
+    # dx phase: (branch, row-block, K col-block, N contraction-block)
+    for g, (nkb, npb) in enumerate(zip(kbs, nbs)):
+        for i in range(m_blocks):
+            for kk in range(nkb):
+                for j in range(npb):
+                    rows[0].append(dybases[g] + i * npb + j)
+                    rows[1].append(wtbases[g] + j * nkb + kk)
+                    rows[2].append(1 if j == 0 else 0)
+                    rows[3].append(1 if j == npb - 1 else 0)
+                    rows[4].append(dxbases[g] + i * nkb + kk)
+                    rows[5].append(0)
+                    rows[6].append(0)
+                    rows[7].append(0)
+    # dw phase: (branch, N col-block, K row-block, m-step)
+    for g, (nkb, npb) in enumerate(zip(kbs, nbs)):
+        for j in range(npb):
+            for ki in range(nkb):
+                for mi in range(m_blocks):
+                    rows[0].append(dybases[g] + mi * npb + j)
+                    rows[1].append(xbases[g] + mi * nkb + ki)
+                    rows[2].append(1 if mi == 0 else 0)
+                    rows[3].append(1 if mi == m_blocks - 1 else 0)
+                    rows[4].append(dwbases[g] + ki * npb + j)
+                    rows[5].append(1 if ki == 0 else 0)
+                    rows[6].append(1)
+                    rows[7].append(noffs[g] + j)
+    return np.array(rows, np.int32)
+
+
+def grouped_matmul_bwd(xs, ws, dys, mask=None, *, block: int | None = None,
+                       interpret: bool = False):
+    """The whole grad CoGroup of a grouped branch group in ONE launch:
+    dx_g = (dy_g ⊙ mask_g) @ w_g^T, dw_g = x_g^T @ (dy_g ⊙ mask_g),
+    db_g = sum_M (dy_g ⊙ mask_g), over a concatenated two-phase offset
+    table (``_plan_tiles_bwd``).
+
+    The dY tile stack both phases read is packed ONCE — with the ReLU
+    cotangent mask folded into the packing pass, so no mask operand rides
+    the grid — and the W^T/X operands (resp. dX/dW outputs) share one
+    tile stack over a single uniform block size: half the packing traffic
+    of the separate dx + dw launches this replaces, and one block less in
+    and out per grid step.
+
+    xs: G arrays (M, K_g) — forward GEMM inputs; ws: G arrays (K_g, N_g);
+    dys: G arrays (M, N_g); mask: optional G arrays (M, N_g) — the
+    fused-ReLU cotangent mask (dy zeroed where mask <= 0, both phases).
+    Returns (dxs, dws, dbs): G×(M, K_g), G×(K_g, N_g) in the input dtype
+    and G float32 (N_g,).
+    """
+    g = len(xs)
+    assert g == len(ws) == len(dys) and g >= 1, (len(xs), len(ws), len(dys))
+    assert mask is None or len(mask) == g
+    m = xs[0].shape[0]
+    assert all(x.shape[0] == m and dy.shape[0] == m
+               and x.shape[1] == w.shape[0] and dy.shape[1] == w.shape[1]
+               for x, w, dy in zip(xs, ws, dys)), \
+        [(x.shape, w.shape, dy.shape) for x, w, dy in zip(xs, ws, dys)]
+    kns = [(w.shape[0], w.shape[1]) for w in ws]
+    if block is None:
+        blocks = grouped_block_shape(m, kns, xs[0].dtype)
+        # the shared operand/output stacks need ONE block size
+        b = blocks.bm if blocks.bm == blocks.bn == blocks.bk else 128
+    else:
+        b = block
+    mp = _round_up(m, b)
+    mb = mp // b
+    kps = [_round_up(k, b) for k, _ in kns]
+    nps = [_round_up(n, b) for _, n in kns]
+    nsum = sum(nps)
+
+    if mask is not None:
+        assert all(mk.shape == dy.shape for mk, dy in zip(mask, dys))
+        dys = [jnp.where(mk > 0, dy, jnp.zeros_like(dy))
+               for mk, dy in zip(mask, dys)]
+    dypk = jnp.concatenate(
+        [_tile_stack(jnp.pad(dy, ((0, mp - m), (0, np_ - dy.shape[1]))),
+                     b, b)
+         for dy, np_ in zip(dys, nps)], axis=0)
+    # shared second operand: every branch's W^T tiles, then every X's
+    abpk = jnp.concatenate(
+        [_tile_stack(jnp.pad(w.T, ((0, np_ - w.shape[1]),
+                                   (0, kp - w.shape[0]))), b, b)
+         for w, kp, np_ in zip(ws, kps, nps)]
+        + [_tile_stack(jnp.pad(x, ((0, mp - m), (0, kp - x.shape[1]))),
+                       b, b)
+           for x, kp in zip(xs, kps)], axis=0).astype(dypk.dtype)
+
+    _count_launch("grouped_matmul_bwd")
+    tab = _device_table(
+        _plan_tiles_bwd,
+        mb, tuple(kp // b for kp in kps), tuple(np_ // b for np_ in nps))
+    dx_tiles = mb * sum(kp // b for kp in kps)
+    w_tiles = sum((kp // b) * (np_ // b) for kp, np_ in zip(kps, nps))
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(tab.shape[1],),
+        in_specs=[
+            pl.BlockSpec((None, b, b), lambda t, tab: (tab[0, t], 0, 0)),
+            pl.BlockSpec((None, b, b), lambda t, tab: (tab[1, t], 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((None, b, b), lambda t, tab: (tab[4, t], 0, 0)),
+            pl.BlockSpec((1, b), lambda t, tab: (0, tab[7, t])),
+        ],
+        scratch_shapes=[pltpu.VMEM((b, b), jnp.float32),
+                        pltpu.VMEM((1, b), jnp.float32)],
+    )
+    ot, dbp = pl.pallas_call(
+        _gmm_bwd_kernel,
+        grid_spec=grid_spec,
+        out_shape=[jax.ShapeDtypeStruct((dx_tiles + w_tiles, b, b),
+                                        xs[0].dtype),
+                   jax.ShapeDtypeStruct((1, nsum), jnp.float32)],
+        interpret=interpret,
+    )(tab, dypk, abpk)
+
+    dxs, dws, dbs = [], [], []
+    dxbase, wbase, noff = 0, dx_tiles, 0
+    for (k, n), kp, np_ in zip(kns, kps, nps):
+        nkb, npb = kp // b, np_ // b
+        xt = ot[dxbase:dxbase + mb * nkb]
+        dx = xt.reshape(mb, nkb, b, b).transpose(0, 2, 1, 3)
+        dxs.append(dx.reshape(mp, kp)[:m, :k])
+        wt = ot[wbase:wbase + nkb * npb]
+        dw = wt.reshape(nkb, npb, b, b).transpose(0, 2, 1, 3)
+        dws.append(dw.reshape(kp, np_)[:k, :n])
+        dbs.append(dbp[0, noff:noff + n])
+        dxbase += mb * nkb
+        wbase += nkb * npb
+        noff += np_
+    return dxs, dws, dbs
+
+
+def grouped_matmul_bwd_ref(xs, ws, dys, mask=None):
+    """Per-branch XLA oracle: (dxs, dws, dbs) with the same mask
+    semantics as ``grouped_matmul_bwd``."""
+    dxs, dws, dbs = [], [], []
+    for i, (x, w, dy) in enumerate(zip(xs, ws, dys)):
+        if mask is not None:
+            dy = jnp.where(mask[i] > 0, dy, jnp.zeros_like(dy))
+        dxs.append(jnp.dot(dy, w.T,
+                           preferred_element_type=jnp.float32).astype(x.dtype))
+        dws.append(jnp.dot(x.T, dy,
+                           preferred_element_type=jnp.float32).astype(x.dtype))
+        dbs.append(dy.astype(jnp.float32).sum(0))
+    return dxs, dws, dbs
 
 
 def grouped_matmul_flops(shapes, bm: int = 128, bn: int = 128,

@@ -175,12 +175,11 @@ def grouped_matmul(xs, ws, bs=None, *, relu: bool = False,
     kernel — see ``kernels/grouped_matmul.py``.
 
     Differentiable, and the backward pass co-executes too: the custom VJP
-    runs exactly two grouped launches — dx_g through the SAME grouped
-    kernel with the ReLU cotangent mask applied in-kernel (the G backward
-    GEMMs dy_g @ w_g^T are themselves ragged shared-M branches), and
-    dw_g/db_g through the grouped dw kernel (G transposed GEMMs
-    x_g^T @ dy_g with db reduced in the same pass).  No per-branch XLA
-    fallback remains on the grouped path."""
+    emits exactly ONE combined grouped launch
+    (``kernels/grouped_matmul.py::grouped_matmul_bwd``) — masked dx, dw
+    and db over a concatenated two-phase offset table, with the dY/mask
+    tile stacks packed once and shared between the phases.  No per-branch
+    XLA fallback, and no second launch, remains on the grouped path."""
     interpret = default_interpret() if interpret is None else interpret
     return _grouped_vjp(tuple(xs), tuple(ws),
                         None if bs is None else tuple(bs), relu, interpret)
@@ -209,22 +208,106 @@ def _grouped_bwd(relu, interpret, res, gs):
     xs, ws, bs, ys = res
     dys = [g.astype(x.dtype) for g, x in zip(gs, xs)]
     mask = list(ys) if relu else None
-    dxs = tuple(_gmm.grouped_matmul(
-        dys, [w.T for w in ws], mask=mask, interpret=interpret))
-    dws, dbs = _gmm.grouped_matmul_dw(xs, dys, mask, interpret=interpret)
+    # ONE combined launch: masked dx + dw + db over the concatenated
+    # two-phase offset table (was two grouped launches, with the dY and
+    # mask stacks packed once per launch instead of once per call)
+    dxs, dws, dbs = _gmm.grouped_matmul_bwd(xs, ws, dys, mask,
+                                            interpret=interpret)
     dws = tuple(dw.astype(w.dtype) for dw, w in zip(dws, ws))
     dbs = None if bs is None else tuple(
         db.astype(b.dtype) for db, b in zip(dbs, bs))
-    return dxs, dws, dbs
+    return tuple(dxs), dws, dbs
 
 
 _grouped_vjp.defvjp(_grouped_fwd, _grouped_bwd)
 
+
+def grouped_matmul_concat(xs, ws, bs=None, *, offsets, total: int,
+                          relu: bool = False, compact: bool = True,
+                          interpret: bool | None = None):
+    """Fused epilogue-concat grouped GEMM: G ragged branches whose
+    bias+ReLU epilogues write straight into the fork/join's (M, total)
+    concat layout at per-branch column ``offsets`` — the join leaves the
+    kernel assembled, with no per-branch HBM round-trip and no standalone
+    concatenate op (``kernels/grouped_matmul.py::grouped_matmul_concat``).
+
+    Columns not covered by a branch (passthrough slices produced by an
+    earlier launch) are placeholders — overwrite them before use.
+    ``compact=False`` returns the padded (M, sum Np_g) join buffer
+    instead (see the kernel wrapper).  Differentiable: the custom VJP
+    slices each branch's cotangent (and its ReLU mask) out of the joint
+    buffer and emits ONE combined backward launch (masked dx + dw/db,
+    ``grouped_matmul_bwd``)."""
+    interpret = default_interpret() if interpret is None else interpret
+    return _concat_vjp(tuple(xs), tuple(ws),
+                       None if bs is None else tuple(bs),
+                       tuple(int(o) for o in offsets), int(total), relu,
+                       compact, interpret)
+
+
+def grouped_matmul_bwd(xs, ws, dys, ys=None, *,
+                       interpret: bool | None = None):
+    """(dxs, dws, dbs) of a grouped branch GEMM in ONE combined launch
+    (masked dx + dw/db over a concatenated two-phase offset table; dy is
+    masked by y_g > 0 when ``ys`` is given) — see
+    ``kernels/grouped_matmul.py``."""
+    interpret = default_interpret() if interpret is None else interpret
+    return _gmm.grouped_matmul_bwd(xs, ws, dys, ys, interpret=interpret)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6, 7))
+def _concat_vjp(xs, ws, bs, offsets, total, relu, compact, interpret):
+    return _gmm.grouped_matmul_concat(xs, ws, bs, offsets=offsets,
+                                      total=total, relu=relu,
+                                      compact=compact, interpret=interpret)
+
+
+def _concat_fwd(xs, ws, bs, offsets, total, relu, compact, interpret):
+    y = _concat_vjp(xs, ws, bs, offsets, total, relu, compact, interpret)
+    return y, (xs, ws, bs, y if relu else None)
+
+
+def _concat_offsets(xs, ws, offsets, compact):
+    """Branch column offsets in the buffer the forward returned: the true
+    join offsets when compact, the cumulative padded bases otherwise."""
+    if compact:
+        return offsets
+    blocks = _gmm.grouped_block_shape(
+        xs[0].shape[0], [(w.shape[0], w.shape[1]) for w in ws],
+        xs[0].dtype)
+    offs, base = [], 0
+    for w in ws:
+        offs.append(base)
+        base += _round_up(w.shape[1], blocks.bn)
+    return offs
+
+
+def _concat_bwd(offsets, total, relu, compact, interpret, res, g):
+    xs, ws, bs, y = res
+    offs = _concat_offsets(xs, ws, offsets, compact)
+    dys = [g[:, off:off + w.shape[1]].astype(x.dtype)
+           for off, w, x in zip(offs, ws, xs)]
+    mask = [y[:, off:off + w.shape[1]]
+            for off, w in zip(offs, ws)] if relu else None
+    dxs, dws, dbs = _gmm.grouped_matmul_bwd(xs, ws, dys, mask,
+                                            interpret=interpret)
+    dws = tuple(dw.astype(w.dtype) for dw, w in zip(dws, ws))
+    dbs = None if bs is None else tuple(
+        db.astype(b.dtype) for db, b in zip(dbs, bs))
+    return tuple(dxs), dws, dbs
+
+
+_concat_vjp.defvjp(_concat_fwd, _concat_bwd)
+
 grouped_matmul_ref = _gmm.grouped_matmul_ref
 grouped_matmul_dw_ref = _gmm.grouped_matmul_dw_ref
+grouped_matmul_bwd_ref = _gmm.grouped_matmul_bwd_ref
+grouped_matmul_concat_ref = _gmm.grouped_matmul_concat_ref
 grouped_matmul_flops = _gmm.grouped_matmul_flops
 grouped_block_shape = _gmm.grouped_block_shape
 grouped_debug = _gmm.grouped_debug
+KERNEL_LAUNCHES = _gmm.KERNEL_LAUNCHES
+reset_launch_counts = _gmm.reset_launch_counts
 
 
 # ---------------------------------------------------------------------------

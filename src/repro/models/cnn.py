@@ -16,11 +16,12 @@ critical-path convs each run as ONE grouped Pallas kernel with bias+ReLU
 fused in-kernel, instead of six serial convs.  The algorithms-dict path
 (``forward(algorithms=...)``) remains as the serial fallback.
 
-The backward pass co-executes the mirrored fork/join: grouped groups
-differentiate through the grouped dw/db/dx kernels (their custom VJP),
-serial convs through the stride-aware im2col GEMM-view backward
-(``_conv_gemm_bwd`` — no XLA conv-transpose anywhere on the zoo path),
-and ``plan_cnn`` attaches the lowered grad CoGroups as
+The backward pass co-executes the mirrored fork/join: grouped (and
+join-absorbing ``grouped_concat``) groups differentiate through ONE
+combined dx/dw/db launch per grad CoGroup (``grouped_matmul_bwd``, their
+custom VJP), serial convs through the stride-aware im2col GEMM-view
+backward (``_conv_gemm_bwd`` — no XLA conv-transpose anywhere on the zoo
+path), and ``plan_cnn`` attaches the lowered grad CoGroups as
 ``plan.context["backward"]`` (``core.plan.backward_plan``).
 """
 from __future__ import annotations
@@ -337,7 +338,13 @@ def _plan_impls(params, cfg: CNNConfig, interpret=None):
         impls[f"{nm}/5x5"] = conv_impl(p["b5"], identity, f"{nm}/r5", h, w)
         impls[f"{nm}/join"] = OpImpl(
             deps=(f"{nm}/1x1", f"{nm}/3x3", f"{nm}/5x5", f"{nm}/pp"),
-            fn=lambda *ys, algorithm=None: jnp.concatenate(ys, axis=-1))
+            fn=lambda *ys, algorithm=None: jnp.concatenate(ys, axis=-1),
+            # 2D (M, sum N_g) -> NHWC view: what lets a grouped_concat
+            # group absorb this join — the grouped kernel's epilogue
+            # assembles the concat buffer and only this reshape runs out
+            # of kernel (a pure layout view, like gemm_reshape on convs)
+            gemm_reshape=lambda y2d, oh=h, ow=w: y2d.reshape(
+                -1, oh, ow, y2d.shape[-1]))
         dep = f"{nm}/join"
     return impls, dep
 
@@ -361,12 +368,20 @@ def forward_plan(params, cfg: CNNConfig, images, plan, *, mesh=None,
 
 def plan_cnn(cfg: CNNConfig, batch: int, *, mesh=None, concurrent=True,
              max_group: int = 4, hbm_budget: float | None = None,
-             vmem_budget: float | None = None, train: bool = False):
+             vmem_budget: float | None = None, train: bool = False,
+             fuse_concat: bool = True):
     """graph -> schedule -> executable plan for this CNN.
 
     Returns (Plan, Schedule).  This supersedes ``schedule_algorithms``: the
     plan carries the same per-op algorithm choices AND the per-group
     execution mode that makes the co-execution decisions real.
+    ``fuse_concat`` (default) absorbs each inception module's join into
+    the grouped launch feeding it (``grouped_concat`` groups — the
+    3x3/5x5 outputs land in the join buffer in-kernel, the 1x1/pool-proj
+    outputs copy in as passthrough slices, and no standalone concat op
+    remains on the fused path); ``fuse_concat=False`` keeps the
+    standalone joins (the unfused baseline the benchmarks compare
+    against).
 
     The mirrored backward plan (``core.plan.backward_plan``) is attached
     as ``plan.context["backward"]`` — the lowering/pricing of the grad
@@ -384,7 +399,8 @@ def plan_cnn(cfg: CNNConfig, batch: int, *, mesh=None, concurrent=True,
     g = build_graph(cfg, batch)
     sch = S.schedule(g, concurrent=concurrent, max_group=max_group,
                      train=train, **kw)
-    plan = planlib.lower(g, sch, mesh=mesh, train=train, **kw)
+    plan = planlib.lower(g, sch, mesh=mesh, train=train,
+                         fuse_concat=fuse_concat, **kw)
     plan.context.update({"cfg": cfg, "batch": batch})
     plan.context["backward"] = planlib.backward_plan(g, plan, **kw)
     return plan, sch

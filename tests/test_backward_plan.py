@@ -94,21 +94,23 @@ def test_backward_plan_googlenet_zero_xla():
     multi = [g for g in bwd.groups if len(g.ops) > 1]
     assert len(multi) >= 18    # 2 grad co-exec groups per inception module
     for g in multi:
-        assert g.mode in ("grouped", "stacked"), g
-    # the K×K critical-path conv grads co-execute in the grouped kernels
+        assert g.mode in ("grouped", "grouped_concat", "stacked"), g
+    # the K×K critical-path conv grads co-execute in ONE combined launch
+    # whose packing slices the joint cotangent (the absorbed join's grad)
     kxk = [g for g in multi
            if any(n.endswith("/3x3") or n.endswith("/5x5") for n in g.ops)]
-    assert kxk and all(g.mode == "grouped" for g in kxk), kxk
+    assert kxk and all(g.mode == "grouped_concat" for g in kxk), kxk
     # forward mode mirrors backward mode group-for-group
     for fg, bg in zip(reversed(plan.groups), bwd.groups):
-        if fg.mode in ("grouped", "stacked"):
+        if fg.mode in ("grouped", "grouped_concat", "stacked"):
             assert bg.mode == fg.mode, (fg, bg)
     assert bwd.makespan > 0
     # the train driver's exact lowering (train=True packing + per-direction
     # budget checks, conv backward workspace charged) holds zero-xla too
     plan_tr, _ = CNN.plan_cnn(get_config("googlenet"), batch=32, train=True)
     assert plan_tr.context["backward"].groups_of_mode("xla") == []
-    assert plan_tr.mode_counts().get("grouped", 0) >= 15
+    counts = plan_tr.mode_counts()
+    assert counts.get("grouped", 0) + counts.get("grouped_concat", 0) >= 15
 
 
 def test_backward_plan_budget_demotes_to_serial():
@@ -175,7 +177,8 @@ def test_full_plan_backward_matches_xla_reference(dtype, rtol, atol):
     forward — ragged shapes, a strided stem, f32 and bf16."""
     cfg = _tiny_cfg()
     plan, _ = CNN.plan_cnn(cfg, batch=2)
-    assert plan.mode_counts().get("grouped", 0) >= 1
+    counts = plan.mode_counts()
+    assert counts.get("grouped", 0) + counts.get("grouped_concat", 0) >= 1
     params = CNN.init_params(cfg, jax.random.PRNGKey(0), dtype=dtype)
     batch = {"images": jax.random.normal(jax.random.PRNGKey(1),
                                          (2, *cfg.img), dtype),

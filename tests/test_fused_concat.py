@@ -1,0 +1,371 @@
+"""Fused epilogue-concat (single-launch inception modules): kernel
+equivalence, the ONE combined dx/dw/db backward launch, join-absorption
+lowering, cost-model concat pricing, and full fused-plan gradchecks."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import kernels as K
+from repro.core import (Op, OpGraph, OpImpl, backward_plan, concat_profile,
+                        group_execution_time, group_execution_time_bwd,
+                        lower, profile, run_plan, serial_time)
+from repro.core.scheduler import CoGroup, Schedule
+from repro.kernels import ops as kops
+from repro.models import cnn as CNN
+from repro.models.cnn import CNNConfig, InceptionSpec
+
+# ragged branch sets: aligned, unaligned, K-ragged, singleton, quad
+RAGGED_SETS = [
+    [(128, 128), (128, 128)],
+    [(100, 60), (300, 129), (64, 16)],
+    [(64, 384), (192, 32)],
+    [(130, 250)],
+    [(64, 96), (64, 16), (576, 208), (400, 48)],
+]
+
+
+def _branches(m, shapes, dtype, key=0):
+    ks = jax.random.split(jax.random.PRNGKey(key), 3 * len(shapes))
+    xs = [jax.random.normal(ks[3 * i], (m, kg), dtype) * 0.3
+          for i, (kg, _) in enumerate(shapes)]
+    ws = [jax.random.normal(ks[3 * i + 1], (kg, ng), dtype) * 0.3
+          for i, (kg, ng) in enumerate(shapes)]
+    bs = [jax.random.normal(ks[3 * i + 2], (ng,), dtype)
+          for i, (_, ng) in enumerate(shapes)]
+    return xs, ws, bs
+
+
+def _layout(shapes, gap_after=None, lead=0):
+    """Concat layout: branch offsets (optionally a passthrough gap after
+    branch ``gap_after`` and a leading passthrough segment)."""
+    offs, off = [], lead
+    for i, (_, n) in enumerate(shapes):
+        offs.append(off)
+        off += n
+        if gap_after == i:
+            off += 37   # unaligned passthrough hole
+    return offs, off
+
+
+# ---------------------------------------------------------------------------
+# kernel equivalence
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("shapes", RAGGED_SETS)
+@pytest.mark.parametrize("dtype,tol", [(jnp.float32, 1e-5),
+                                       (jnp.bfloat16, 5e-2)])
+def test_concat_kernel_matches_reference(shapes, dtype, tol):
+    """Branch slices land at their true (unaligned) offsets in the join
+    buffer, bias+ReLU fused, vs the per-branch XLA scatter oracle."""
+    xs, ws, bs = _branches(77, shapes, dtype)
+    offs, total = _layout(shapes, gap_after=0, lead=19)
+    got = kops.grouped_matmul_concat(xs, ws, bs, offsets=offs, total=total,
+                                     relu=True)
+    want = K.grouped_matmul_concat_ref(xs, ws, bs, offsets=offs,
+                                       total=total, relu=True)
+    assert got.shape == (77, total) and got.dtype == dtype
+    for off, (_, n) in zip(offs, shapes):
+        np.testing.assert_allclose(
+            np.asarray(got[:, off:off + n], np.float32),
+            np.asarray(want[:, off:off + n], np.float32),
+            rtol=tol, atol=tol)
+
+
+def test_concat_kernel_no_bias_no_relu_and_jit():
+    shapes = [(100, 60), (300, 129), (64, 16)]
+    xs, ws, _ = _branches(50, shapes, jnp.float32)
+    offs, total = _layout(shapes)
+    got = jax.jit(lambda xs, ws: kops.grouped_matmul_concat(
+        xs, ws, offsets=offs, total=total))(xs, ws)
+    want = K.grouped_matmul_concat_ref(xs, ws, offsets=offs, total=total)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("shapes", RAGGED_SETS)
+@pytest.mark.parametrize("masked", [False, True])
+def test_combined_bwd_kernel_matches_reference(shapes, masked):
+    """ONE launch computes dx/dw/db for the whole ragged branch set, with
+    the ReLU cotangent mask folded into the dY packing."""
+    xs, ws, _ = _branches(77, shapes, jnp.float32)
+    ks = jax.random.split(jax.random.PRNGKey(9), 2 * len(shapes))
+    dys = [jax.random.normal(ks[2 * i], (77, n), jnp.float32)
+           for i, (_, n) in enumerate(shapes)]
+    mask = [jax.random.normal(ks[2 * i + 1], (77, n), jnp.float32)
+            for i, (_, n) in enumerate(shapes)] if masked else None
+    dxs, dws, dbs = kops.grouped_matmul_bwd(xs, ws, dys, mask)
+    rxs, rws, rbs = K.grouped_matmul_bwd_ref(xs, ws, dys, mask)
+    for a, b in zip(list(dxs) + list(dws) + list(dbs),
+                    list(rxs) + list(rws) + list(rbs)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=3e-4, atol=3e-4)
+
+
+def test_concat_vjp_is_one_combined_launch():
+    """Forward: one concat launch.  Pullback: exactly ONE combined
+    backward kernel — the launch count the plan's grad CoGroups ride."""
+    shapes = [(100, 60), (300, 129), (64, 16)]
+    xs, ws, bs = _branches(64, shapes, jnp.float32)
+    offs, total = _layout(shapes)
+
+    def loss(xs, ws, bs):
+        y = kops.grouped_matmul_concat(xs, ws, bs, offsets=offs,
+                                       total=total, relu=True)
+        return (y * y).sum()
+
+    kops.reset_launch_counts()
+    jax.grad(loss, argnums=(0, 1, 2))(xs, ws, bs)
+    assert kops.KERNEL_LAUNCHES.get("grouped_matmul_concat") == 1
+    assert kops.KERNEL_LAUNCHES.get("grouped_matmul_bwd") == 1
+    assert "grouped_matmul_dw" not in kops.KERNEL_LAUNCHES
+
+    # plain grouped pullback is a single combined launch too (was two)
+    kops.reset_launch_counts()
+    jax.grad(lambda xs, ws, bs: sum(
+        (y * y).sum() for y in K.grouped_matmul(xs, ws, bs, relu=True)),
+        argnums=(0, 1, 2))(xs, ws, bs)
+    assert kops.KERNEL_LAUNCHES.get("grouped_matmul_bwd") == 1
+
+
+def test_concat_vjp_matches_reference_grads():
+    shapes = [(64, 96), (64, 16), (576, 208)]
+    xs, ws, bs = _branches(33, shapes, jnp.float32)
+    offs, total = _layout(shapes, gap_after=1)
+
+    def loss(xs, ws, bs):
+        y = kops.grouped_matmul_concat(xs, ws, bs, offsets=offs,
+                                       total=total, relu=True)
+        sl = [y[:, o:o + n] for o, (_, n) in zip(offs, shapes)]
+        return sum((s * s * jnp.cos(s)).sum() for s in sl)
+
+    def loss_ref(xs, ws, bs):
+        ys = K.grouped_matmul_ref(xs, ws, bs, relu=True)
+        return sum((s * s * jnp.cos(s)).sum() for s in ys)
+
+    got = jax.grad(loss, argnums=(0, 1, 2))(xs, ws, bs)
+    want = jax.grad(loss_ref, argnums=(0, 1, 2))(xs, ws, bs)
+    for a, b in zip(jax.tree.leaves(got), jax.tree.leaves(want)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=2e-4, atol=2e-4)
+
+
+# ---------------------------------------------------------------------------
+# cost model: the concat term
+# ---------------------------------------------------------------------------
+
+def test_concat_pricing_no_longer_free():
+    """The join's read+write is an explicit term: unfused grouped + its
+    standalone join price ABOVE the fused epilogue-concat group, whose
+    rider covers only the passthrough columns — the modeled win the
+    benchmark's fused_concat column shows."""
+    m = 512
+    ops = [Op.make("a", "matmul", m=m, k=864, n=384),
+           Op.make("b", "matmul", m=m, k=200, n=64)]
+    join = Op.make("j", "pointwise", elements=m * 880)
+    profs = [profile(op, "mxu128") for op in ops]
+    mode_u, t_u = group_execution_time(ops, profs)
+    assert mode_u == "grouped"
+    mode_f, t_f = group_execution_time(ops, profs, join=join)
+    assert mode_f == "grouped_concat"
+    t_join = serial_time([profile(join, "vpu")])
+    assert t_f < t_u + t_join
+    # the rider prices exactly the passthrough columns' copy traffic
+    own = m * (384 + 64)
+    rider = concat_profile(join, m * 880 - own)
+    assert rider.hbm_bytes == 2 * (m * 880 - own) * join.dtype_bytes
+    assert rider.flops == 0.0
+    # full standalone concat: both sides of the join's element count
+    assert concat_profile(join).hbm_bytes == 2 * m * 880 * join.dtype_bytes
+
+    # backward: combined launch + sliced cotangent beats the unfused
+    # two-step (grouped bwd + standalone split)
+    mode_b, t_b = group_execution_time_bwd(
+        ops, mode="grouped_concat", join=join)
+    assert mode_b == "grouped_concat"
+    _, t_bu = group_execution_time_bwd(ops, mode="grouped")
+    from repro.core import backward_profiles
+    t_split = sum(p.time for p in backward_profiles(join, "vpu"))
+    assert t_b < t_bu + t_split
+
+
+# ---------------------------------------------------------------------------
+# lowering: join absorption
+# ---------------------------------------------------------------------------
+
+def _fork_join_graph():
+    g = OpGraph()
+    g.add(Op.make("src", "pointwise", elements=256 * 128))
+    g.add(Op.make("a", "matmul", m=256, k=128, n=384), ["src"])
+    g.add(Op.make("b", "matmul", m=256, k=128, n=32), ["src"])
+    g.add(Op.make("j", "pointwise", elements=256 * 416), ["a", "b"])
+    sch = Schedule([CoGroup(["src"], {"src": "vpu"}, 0.0),
+                    CoGroup(["a", "b"], {"a": "mxu128", "b": "mxu128"}, 1.0),
+                    CoGroup(["j"], {"j": "vpu"}, 0.0)])
+    return g, sch
+
+
+def test_lower_absorbs_join_into_grouped():
+    g, sch = _fork_join_graph()
+    plan = lower(g, sch)
+    assert [gr.mode for gr in plan.groups] == ["serial", "grouped_concat"]
+    cg = plan.groups[1]
+    assert cg.join == "j" and cg.ops == ("a", "b", "j")
+    assert set(plan.algorithms) == set(g.ops)          # join alg survives
+    # backward mirror: one grouped_concat grad group
+    bwd = backward_plan(g, plan)
+    assert bwd.groups[0].mode == "grouped_concat"
+    assert bwd.groups[0].join == "grad:j"
+    # opting out keeps the standalone join
+    plan_u = lower(g, sch, fuse_concat=False)
+    assert [gr.mode for gr in plan_u.groups] == ["serial", "grouped",
+                                                 "serial"]
+    assert plan.makespan < plan_u.makespan
+
+
+def test_lower_skips_absorption_with_outside_consumer():
+    """A branch consumed by anything besides the join keeps the
+    standalone concat (its output must materialize anyway)."""
+    g = OpGraph()
+    g.add(Op.make("src", "pointwise", elements=256 * 128))
+    g.add(Op.make("a", "matmul", m=256, k=128, n=384), ["src"])
+    g.add(Op.make("b", "matmul", m=256, k=128, n=32), ["src"])
+    g.add(Op.make("j", "pointwise", elements=256 * 416), ["a", "b"])
+    g.add(Op.make("tap", "pointwise", elements=256 * 384), ["a"])
+    sch = Schedule([CoGroup(["src"], {"src": "vpu"}, 0.0),
+                    CoGroup(["a", "b"], {"a": "mxu128", "b": "mxu128"}, 1.0),
+                    CoGroup(["j"], {"j": "vpu"}, 0.0),
+                    CoGroup(["tap"], {"tap": "vpu"}, 0.0)])
+    plan = lower(g, sch)
+    assert "grouped_concat" not in plan.mode_counts()
+
+
+def test_run_plan_grouped_concat_with_passthrough():
+    """Executor: the concat group assembles the join from its own kernel
+    slices plus a passthrough segment produced by an earlier op."""
+    g = OpGraph()
+    g.add(Op.make("src", "pointwise", elements=64 * 128))
+    g.add(Op.make("p", "matmul", m=64, k=128, n=48), ["src"])
+    # ragged widths (384 vs 33): stacked would pay pad-to-max, so the
+    # pair lowers grouped — the mode absorption requires
+    g.add(Op.make("a", "matmul", m=64, k=128, n=384), ["src"])
+    g.add(Op.make("b", "matmul", m=64, k=128, n=33), ["src"])
+    g.add(Op.make("j", "pointwise", elements=64 * 465), ["p", "a", "b"])
+    sch = Schedule([CoGroup(["src"], {"src": "vpu"}, 0.0),
+                    CoGroup(["p"], {"p": "mxu128"}, 0.0),
+                    CoGroup(["a", "b"], {"a": "mxu128", "b": "mxu128"}, 1.0),
+                    CoGroup(["j"], {"j": "vpu"}, 0.0)])
+    plan = lower(g, sch)
+    (cg,) = [gr for gr in plan.groups if gr.mode == "grouped_concat"]
+    assert cg.join == "j"
+    ks = jax.random.split(jax.random.PRNGKey(0), 4)
+    x = jax.random.normal(ks[0], (64, 128), jnp.float32) * 0.2
+    wp = jax.random.normal(ks[1], (128, 48), jnp.float32) * 0.2
+    wa = jax.random.normal(ks[2], (128, 384), jnp.float32) * 0.2
+    wb = jax.random.normal(ks[3], (128, 33), jnp.float32) * 0.2
+
+    def mk(w, relu=True):
+        return OpImpl(
+            deps=("src",),
+            fn=lambda x, algorithm=None, w=w: jax.nn.relu(x @ w),
+            gemm_x=lambda x: x, gemm_w=w,
+            gemm_post=lambda y: jax.nn.relu(y),
+            gemm_bias=jnp.zeros((w.shape[1],), jnp.float32),
+            gemm_relu=True, gemm_reshape=lambda y: y)
+
+    impls = {
+        "src": OpImpl(deps=("x0",), fn=lambda x, algorithm=None: x),
+        "p": mk(wp), "a": mk(wa), "b": mk(wb),
+        "j": OpImpl(deps=("p", "a", "b"),
+                    fn=lambda *ys, algorithm=None: jnp.concatenate(
+                        ys, axis=-1),
+                    gemm_reshape=lambda y2d: y2d),
+    }
+    env = run_plan(impls, {"x0": x}, plan)
+    want = jnp.concatenate([jax.nn.relu(x @ w) for w in (wp, wa, wb)],
+                           axis=-1)
+    np.testing.assert_allclose(np.asarray(env["j"]), np.asarray(want),
+                               rtol=2e-4, atol=2e-4)
+    # in-launch branch outputs are never materialized standalone
+    assert "a" not in env and "b" not in env and "p" in env
+
+    # missing split epilogue -> graceful per-op degrade, same value
+    impls_nofuse = dict(impls)
+    impls_nofuse["a"] = dataclasses.replace(impls["a"], gemm_bias=None)
+    env2 = run_plan(impls_nofuse, {"x0": x}, plan)
+    np.testing.assert_allclose(np.asarray(env2["j"]), np.asarray(want),
+                               rtol=2e-4, atol=2e-4)
+
+
+# ---------------------------------------------------------------------------
+# full fused plans: gradcheck vs the XLA reference
+# ---------------------------------------------------------------------------
+
+def _cfgs():
+    return {
+        # strided stem + one ragged module (unpooled)
+        "strided": CNNConfig(name="t1", img=(8, 8, 3), stem=((3, 8, 2),),
+                             modules=(InceptionSpec(16, 8, 24, 4, 8, 8),),
+                             pool_between=(), num_classes=5),
+        # two modules with an inter-module maxpool (pooled path: the
+        # second module's branches — and its join — read pooled input)
+        "pooled": CNNConfig(name="t2", img=(8, 8, 3), stem=((3, 8, 1),),
+                            modules=(InceptionSpec(16, 8, 24, 4, 8, 8),
+                                     InceptionSpec(8, 8, 16, 4, 8, 8)),
+                            pool_between=(1,), num_classes=5),
+    }
+
+
+@pytest.mark.parametrize("which", ["strided", "pooled"])
+@pytest.mark.parametrize("dtype,rtol,atol", [
+    (jnp.float32, 2e-3, 2e-3),
+    (jnp.bfloat16, 1e-1, 1e-1),
+])
+def test_fused_plan_gradcheck_vs_xla(which, dtype, rtol, atol):
+    """jax.grad through the FUSED plan (epilogue-concat forward, ONE
+    combined backward launch per grad CoGroup) against autodiff of the
+    plain XLA forward — ragged widths, strides, pooled and unpooled
+    modules, f32 and bf16."""
+    cfg = _cfgs()[which]
+    plan, _ = CNN.plan_cnn(cfg, batch=2)
+    assert plan.mode_counts().get("grouped_concat", 0) >= 1
+    assert not [g for g in plan.groups
+                if g.mode != "grouped_concat"
+                and any(n.endswith("/join") for n in g.ops)]
+    params = CNN.init_params(cfg, jax.random.PRNGKey(0), dtype=dtype)
+    batch = {"images": jax.random.normal(jax.random.PRNGKey(1),
+                                         (2, *cfg.img), dtype),
+             "labels": jax.random.randint(jax.random.PRNGKey(2), (2,), 0,
+                                          cfg.num_classes)}
+    (lp, _), gp = jax.value_and_grad(CNN.loss_fn, has_aux=True)(
+        params, cfg, batch, plan=plan)
+    (l0, _), g0 = jax.value_and_grad(CNN.loss_fn, has_aux=True)(
+        params, cfg, batch)
+    np.testing.assert_allclose(float(lp), float(l0), rtol=max(rtol, 1e-4))
+    for a, b in zip(jax.tree.leaves(g0), jax.tree.leaves(gp)):
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(b, np.float32),
+                                   rtol=rtol, atol=atol)
+
+
+def test_fused_plan_under_jit():
+    """jit(value_and_grad) on a full fused plan — the train driver's
+    exact path (PR 3 showed eager gradchecks can mask jit-linearize
+    failures)."""
+    cfg = _cfgs()["pooled"]
+    plan, _ = CNN.plan_cnn(cfg, batch=2, train=True)
+    assert plan.mode_counts().get("grouped_concat", 0) >= 1
+    params = CNN.init_params(cfg, jax.random.PRNGKey(0))
+    batch = {"images": jax.random.normal(jax.random.PRNGKey(1),
+                                         (2, *cfg.img), jnp.float32),
+             "labels": jax.random.randint(jax.random.PRNGKey(2), (2,), 0,
+                                          cfg.num_classes)}
+    vg = jax.value_and_grad(CNN.loss_fn, has_aux=True)
+    (lj, _), gj = jax.jit(lambda p: vg(p, cfg, batch, plan=plan))(params)
+    (le, _), ge = vg(params, cfg, batch, plan=plan)
+    np.testing.assert_allclose(float(lj), float(le), rtol=1e-5)
+    for a, b in zip(jax.tree.leaves(ge), jax.tree.leaves(gj)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-4, atol=1e-4)

@@ -272,8 +272,14 @@ def test_plan_cnn_googlenet_zero_xla_inception_groups():
     multi = [g for g in plan.groups if len(g.ops) > 1]
     assert len(multi) >= 18   # 2 co-exec groups per inception module
     for g in multi:
-        assert g.mode in ("grouped", "stacked", "fused", "spatial"), g
-    # the K×K critical-path convs co-execute instead of running serially
+        assert g.mode in ("grouped", "grouped_concat", "stacked", "fused",
+                          "spatial"), g
+    # the K×K critical-path convs co-execute instead of running serially —
+    # and their launch absorbs the module's join (fused epilogue-concat)
     kxk = [g for g in multi
            if any(n.endswith("/3x3") or n.endswith("/5x5") for n in g.ops)]
-    assert kxk and all(g.mode == "grouped" for g in kxk), kxk
+    assert kxk and all(g.mode == "grouped_concat" for g in kxk), kxk
+    # zero standalone join ops on the fused path
+    assert not [g for g in plan.groups
+                if g.mode != "grouped_concat"
+                and any(n.endswith("/join") for n in g.ops)]

@@ -29,12 +29,20 @@ def test_lower_googlenet_mode_mix():
     group falls back to XLA interleaving."""
     plan, _ = CNN.plan_cnn(get_config("googlenet"), batch=32)
     modes = plan.mode_counts()
-    assert modes.get("grouped", 0) >= 9, modes   # >= one per inception module
+    # >= one grouped-family launch per inception module, and every
+    # module's join absorbed into its grouped_concat launch
+    assert modes.get("grouped", 0) + modes.get("grouped_concat", 0) >= 9, \
+        modes
+    assert modes.get("grouped_concat", 0) == 9, modes
     assert modes.get("xla", 0) == 0, modes
     for g in plan.groups:
         if len(g.ops) > 1:
-            assert g.mode in ("grouped", "stacked"), g
-            assert all("join" not in n for n in g.ops)
+            assert g.mode in ("grouped", "grouped_concat", "stacked"), g
+            # a join rides a multi-op group only as an absorbed concat
+            if g.mode == "grouped_concat":
+                assert g.join and g.join in g.ops, g
+            else:
+                assert all("join" not in n for n in g.ops)
     # the schedule's algorithm choices survive lowering
     assert set(plan.algorithms) == set(
         CNN.build_graph(get_config("googlenet"), 32).ops)
@@ -72,7 +80,13 @@ def test_plan_makespan_and_algorithms_consistency():
     plan, sch = CNN.plan_cnn(cfg, batch=2)
     assert plan.makespan > 0
     assert plan.algorithms == sch.algorithms
-    assert len(plan.groups) == len(sch.groups)
+    # every absorbed join collapses its singleton group into the
+    # grouped_concat launch; nothing else changes group count
+    absorbed = plan.mode_counts().get("grouped_concat", 0)
+    assert len(plan.groups) == len(sch.groups) - absorbed
+    assert absorbed == len(cfg.modules)
+    plan_u, sch_u = CNN.plan_cnn(cfg, batch=2, fuse_concat=False)
+    assert len(plan_u.groups) == len(sch_u.groups)
 
 
 # ---------------------------------------------------------------------------
