@@ -74,6 +74,13 @@ def modeled_vs_executed_table(batch: int = 4, reps: int = 3):
     jitted end-to-end forward.  Modeled columns are TPU-v5e analytic
     seconds; executed columns are XLA-CPU wall time on this host — absolute
     scales differ, the serial/planned RATIO is the comparable quantity.
+    The grouped_pooled executed column carries the interpret emulation's
+    per-grid-step charge for every in-kernel pool tap (~9 extra steps per
+    pooled (i, kk) tile), which swamps the small reduced-net quads — the
+    hardware claim for the pool stage is the MODELED column (tap reads
+    pipeline under the GEMM steps; ROADMAP calibration item), and the
+    controlled pooled-vs-fused wall comparison lives in
+    ``branch_mode_bench`` behind ci.sh's POOLED_WALL_TOL.
     """
     from repro.configs import get_reduced
     from repro.models import cnn as CNN
@@ -124,9 +131,9 @@ def modeled_vs_executed_table(batch: int = 4, reps: int = 3):
 
 
 def branch_mode_bench(batch: int = 2, reps: int = 5):
-    """fused_concat vs grouped vs stacked vs serial wall time on one
-    ragged Inception module — forward AND backward — the branch-GEMM
-    benchmark.
+    """pooled vs fused_concat vs grouped vs stacked vs serial wall time
+    on one ragged Inception module — forward AND backward — the
+    branch-GEMM benchmark.
 
     The SAME CoGroups (the 1x1 quad and the im2col-viewed 3x3/5x5 pair)
     execute under each forced plan mode: ``serial`` launches the
@@ -137,7 +144,11 @@ def branch_mode_bench(batch: int = 2, reps: int = 5):
     join still a standalone concat op), and ``fused_concat`` is grouped
     with the join ABSORBED — the pair launch's epilogue writes straight
     into the join buffer (``grouped_concat`` groups, zero standalone
-    concat ops).
+    concat ops).  All four keep the pool-proj pre-pool as its standalone
+    ``reduce_window`` group; ``pooled`` additionally absorbs it into the
+    quad's launch (``grouped_pooled`` — the in-kernel pre-GEMM pool
+    stage, zero standalone pooling groups) and measures
+    launches-per-group forward AND backward with the eager counter.
 
     The backward pass is timed as the eager VJP pullback alone (forward
     residuals held fixed): serial pulls every conv back through its
@@ -153,7 +164,7 @@ def branch_mode_bench(batch: int = 2, reps: int = 5):
     """
     import dataclasses as _dc
 
-    from repro.core import (backward_profiles, gemm_shape,
+    from repro.core import (backward_profiles, gemm_profiles, gemm_shape,
                             group_execution_time, group_execution_time_bwd,
                             grouped_time, profile, serial_time, stacked_time)
     from repro.core.plan import Plan
@@ -168,8 +179,12 @@ def branch_mode_bench(batch: int = 2, reps: int = 5):
     params = CNN.init_params(cfg, jax.random.PRNGKey(0))
     x = jax.random.normal(jax.random.PRNGKey(1), (batch, *cfg.img),
                           jnp.float32) * 0.1
-    plan, _ = CNN.plan_cnn(cfg, batch, fuse_concat=False)
-    plan_fused, _ = CNN.plan_cnn(cfg, batch)
+    # unfused baselines keep the pool-proj pre-pool as the standalone
+    # reduce_window group every serial framework launches; the ``pooled``
+    # variant absorbs it into the quad's grouped launch
+    plan, _ = CNN.plan_cnn(cfg, batch, fuse_concat=False, fuse_pool=False)
+    plan_fused, _ = CNN.plan_cnn(cfg, batch, fuse_pool=False)
+    plan_pooled, _ = CNN.plan_cnn(cfg, batch)
 
     def modeled_times(forced):
         fwd = bwd = 0.0
@@ -186,18 +201,24 @@ def branch_mode_bench(batch: int = 2, reps: int = 5):
                     branch, gr.algorithms, mode="grouped_concat",
                     join=g.ops[gr.join])[1]
             elif len(ops) == 1 or gr.mode == "serial":
+                # singleton maxpool groups price their pool_profile row
+                # here — the standalone-launch term the pooled variant's
+                # absorbed groups zero out
                 fwd += serial_time(profs)
                 bwd += sum(
                     p.time for op in ops
                     for p in backward_profiles(op, gr.algorithms[op.name]))
             elif gr.mode == "stacked":
-                fwd += stacked_time(profs, [gemm_shape(op) for op in ops])
+                fwd += stacked_time(gemm_profiles(ops),
+                                    [gemm_shape(op) for op in ops])
                 bwd += group_execution_time_bwd(ops, gr.algorithms,
                                                 mode="stacked")[1]
             else:
-                fwd += grouped_time(profs)
-                bwd += group_execution_time_bwd(ops, gr.algorithms,
-                                                mode="grouped")[1]
+                fwd += grouped_time(ops)
+                bwd += group_execution_time_bwd(
+                    ops, gr.algorithms,
+                    mode=gr.mode if gr.mode == "grouped_pooled"
+                    else "grouped")[1]
         return fwd, bwd
 
     variants = {}
@@ -212,6 +233,10 @@ def branch_mode_bench(batch: int = 2, reps: int = 5):
         [gr if gr.mode == "grouped_concat" or len(gr.ops) == 1
          else _dc.replace(gr, mode="grouped")
          for gr in plan_fused.groups], dict(plan_fused.context))
+    # pooled == fused_concat plus pool absorption: the quad's launch pools
+    # the pool-proj lhs in-kernel (grouped_pooled), zero standalone
+    # reduce_window groups — the tentpole configuration, as lowered
+    variants["pooled"] = plan_pooled
 
     # warm every variant, then time them INTERLEAVED and keep the
     # per-variant minimum across reps: a load spike on this shared host
@@ -245,16 +270,32 @@ def branch_mode_bench(batch: int = 2, reps: int = 5):
         result[mode]["bwd_wall_us"] = round(result[mode]["bwd_wall_us"], 1)
         result[mode]["modeled_us"] = round(modeled * 1e6, 3)
         result[mode]["bwd_modeled_us"] = round(modeled_bwd * 1e6, 3)
-        if mode == "fused_concat":
-            # one combined dx+dw/db kernel per grouped-family grad CoGroup
+        if mode in ("fused_concat", "pooled"):
+            # one grouped-family kernel per co-exec group, forward AND
+            # backward (one combined dx+dw/db launch per grad CoGroup) —
+            # measured by the eager launch counter
             n_groups = sum(1 for gr in forced.groups
-                           if gr.mode in ("grouped", "grouped_concat"))
+                           if gr.mode in ("grouped", "grouped_concat",
+                                          "grouped_pooled"))
             f_vjp, ct = pullbacks[mode]
             reset_launch_counts()
             jax.block_until_ready(f_vjp(ct))
             launches = KERNEL_LAUNCHES.get("grouped_matmul_bwd", 0)
             result[mode]["bwd_launches_per_group"] = launches / max(
                 n_groups, 1)
+            reset_launch_counts()
+            CNN.forward_plan(params, cfg, x, forced)
+            fwd_names = ("grouped_matmul", "grouped_matmul_concat",
+                         "grouped_matmul_pooled",
+                         "grouped_matmul_pooled_concat")
+            result[mode]["fwd_launches_per_group"] = sum(
+                KERNEL_LAUNCHES.get(nm, 0) for nm in fwd_names) / max(
+                n_groups, 1)
+            # standalone reduce_window groups left in the plan (0 once
+            # pooling streams through the grouped launch)
+            result[mode]["standalone_pool_groups"] = sum(
+                1 for gr in forced.groups
+                if any(g.ops[n].kind == "maxpool" for n in gr.ops))
         rows.append({
             "table": "branch_gemm_modes", "mode": mode, "batch": batch,
             "us_per_call": result[mode]["wall_us"],

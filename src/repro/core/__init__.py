@@ -6,7 +6,8 @@ execution (stacked kernels intra-chip, spatial mesh partitioning inter-chip).
 from repro.core.graph import Op, OpGraph                      # noqa: F401
 from repro.core.cost_model import (                            # noqa: F401
     OpProfile, profile, op_time, backward_profiles, best_algorithm,
-    co_execution_time, concat_profile, gemm_shape, gemm_shape_bwd,
+    co_execution_time, concat_profile, gemm_profiles, gemm_shape,
+    gemm_shape_bwd, pool_profile,
     group_execution_time, group_execution_time_bwd, grouped_time, serial_time,
     spatial_time, stacked_time, supported_algorithms, xla_interleave_time,
     PEAK_FLOPS, HBM_BW, ICI_BW, VMEM_BYTES, HBM_BYTES,

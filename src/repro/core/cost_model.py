@@ -88,6 +88,7 @@ ALGORITHMS_BY_KIND = {
     "attention": ("flash", "materialized"),
     "ssd": ("chunked", "quadratic"),
     "pointwise": ("vpu",),
+    "maxpool": ("reduce_window",),
 }
 
 
@@ -191,6 +192,27 @@ def profile(op: Op, algorithm: str) -> OpProfile:
         return OpProfile(op.name, "vpu", 1.0 * e, 2.0 * e * eb, 0.0,
                          128 * 1024)
 
+    if op.kind == "maxpool":
+        # the standalone pooling primitive (cuDNN pooling / XLA
+        # reduce_window): each chain stage reads its input and writes the
+        # pooled output — pure VPU compares, pure HBM traffic.  A chained
+        # pool (pool-proj of a pooled inception module) materializes the
+        # intermediate stages as workspace.  This is the launch (and the
+        # pre-GEMM round-trip) the pooled grouped kernel absorbs; see
+        # ``pool_profile``.
+        n_, h, w, c = p["n"], p["h"], p["w"], p["c"]
+        flops = io = ws = 0.0
+        e_in = n_ * h * w * c
+        for i, (window, stride) in enumerate(p["chain"]):
+            h, w = -(-h // stride), -(-w // stride)
+            e_out = n_ * h * w * c
+            flops += float(window * window) * e_out
+            io += (e_in + e_out) * eb
+            if i < len(p["chain"]) - 1:
+                ws += e_out * eb
+            e_in = e_out
+        return OpProfile(op.name, "reduce_window", flops, io, ws, 128 * 1024)
+
     raise ValueError(f"unknown op kind {op.kind}")
 
 
@@ -266,14 +288,16 @@ def backward_profiles(op: Op, algorithm: str) -> list[OpProfile]:
     GEMM-view ops price as their two backward GEMMs (``gemm_shape_bwd``),
     each an aligned MXU matmul — the lowering the combined backward
     kernel's two phases execute.  pointwise grads are the same traffic shape (a concat
-    backward is a split), so the forward profile stands.  Remaining kinds
-    (attention/ssd) use the forward profile doubled — their backward does
-    roughly twice the forward work.
+    backward is a split), so the forward profile stands; a maxpool
+    backward is likewise ONE scatter pass of forward-equal traffic (dy
+    read, dx written through the argmax mask), not the doubled fallback.
+    Remaining kinds (attention/ssd) use the forward profile doubled —
+    their backward does roughly twice the forward work.
     """
     sb = gemm_shape_bwd(op)
     if sb is None:
         p = profile(op, algorithm)
-        return [p] if op.kind == "pointwise" else [p, p]
+        return [p] if op.kind in ("pointwise", "maxpool") else [p, p]
     profs = [profile(Op.make(f"{op.name}:{tag}", "matmul",
                              dtype_bytes=op.dtype_bytes, m=m, k=k, n=n),
                      "mxu128")
@@ -307,6 +331,53 @@ def concat_profile(join_op: Op, elements: float | None = None) -> OpProfile:
     e = join_op.p["elements"] if elements is None else elements
     return OpProfile(f"{join_op.name}:concat", "concat", 0.0,
                      2.0 * e * join_op.dtype_bytes, 0.0, 0.0)
+
+
+def pool_profile(op: Op) -> OpProfile:
+    """The branch maxpool as an explicit profile row — the term the cost
+    model used to leave invisible (the pre-GEMM ``reduce_window`` launch
+    ran outside every priced group).  Standalone (unfused) plans pay this
+    row as the pool op's own singleton group; when the pool is ABSORBED
+    into a pooled grouped launch the rider is ZERO — the tap reads stream
+    through the launch's existing lhs DMA and the pooled activation never
+    touches HBM, so the whole row disappears with the launch (same shape
+    as ``concat_profile``, whose fused rider keeps only the passthrough
+    columns).  Calibrating the zero-rider claim on real hardware rides
+    the ROADMAP's cost-model validation item."""
+    assert op.kind == "maxpool", op
+    return profile(op, "reduce_window")
+
+
+def gemm_profiles(ops: list[Op]) -> list[OpProfile]:
+    """Per-branch profiles of the GEMM lowering the grouped/stacked
+    kernels actually execute: each op priced as its aligned
+    ``gemm_shape`` matmul, with a K×K/strided conv additionally charged
+    the im2col patch workspace its view materializes (write + read) —
+    mirroring ``backward_profiles``'s treatment of the same lowering.
+
+    This replaces the old proxy (the scheduler-chosen per-op algorithm
+    profiles), which priced grouped groups at whatever algorithm the
+    SERIAL path would have picked — a direct-conv or winograd profile for
+    a kernel that always executes the GEMM lowering (the docstring-
+    acknowledged drift).  The patch buffer charges the C2 *budget* only,
+    not the time: packing/unpacking layout passes around the kernel are
+    fused by XLA and modeled as riding the launch's DMA throughout this
+    file — exactly how ``backward_profiles`` prices the same lowering."""
+    profs = []
+    for op in ops:
+        s = gemm_shape(op)
+        assert s is not None, op
+        m, k, n = s
+        pr = profile(Op.make(f"{op.name}:gemm", "matmul",
+                             dtype_bytes=op.dtype_bytes, m=m, k=k, n=n),
+                     "mxu128")
+        kh, kw = op.p.get("kh", 1), op.p.get("kw", 1)
+        stride = op.p.get("stride", 1)
+        if op.kind == "conv2d" and ((kh, kw) != (1, 1) or stride != 1):
+            ws = m * k * op.dtype_bytes
+            pr = dataclasses.replace(pr, workspace_bytes=pr.workspace_bytes + ws)
+        profs.append(pr)
+    return profs
 
 
 def _passthrough_elements(shapes, join_op: Op) -> float:
@@ -346,7 +417,8 @@ def group_execution_time_bwd(ops: list[Op], algorithms: dict | None = None,
     shapes = [gemm_shape(op) for op in ops]
     grouped_ok = (all(s is not None for s in shapes)
                   and len({s[0] for s in shapes}) == 1)
-    if grouped_ok and mode in ("grouped", "grouped_concat", "stacked", None):
+    if grouped_ok and mode in ("grouped", "grouped_pooled",
+                               "grouped_concat", "stacked", None):
         per_op = [bprofs(op) for op in ops]
         dxp = [p[0] for p in per_op]
         dwp = [p[1] for p in per_op]
@@ -369,7 +441,11 @@ def group_execution_time_bwd(ops: list[Op], algorithms: dict | None = None,
                          + stacked_time(dwp, dw_shapes))
             if mode == "stacked" or t_stacked <= t_grouped:
                 return "stacked", t_stacked
-        return "grouped", t_grouped
+        # a pooled forward mirrors to the SAME combined launch (the
+        # pooling cotangent mask rides its unpacking — zero rider, like
+        # the forward's pool_profile when fused)
+        return ("grouped_pooled" if mode == "grouped_pooled"
+                else "grouped"), t_grouped
     flat = [p for op in ops for p in bprofs(op)]
     return "xla", xla_interleave_time(flat)
 
@@ -395,18 +471,15 @@ def serial_time(profiles: list[OpProfile]) -> float:
     return sum(pr.time for pr in profiles)
 
 
-def grouped_time(profiles: list[OpProfile]) -> float:
+def grouped_time(ops: list[Op]) -> float:
     """Makespan of a grouped ragged branch GEMM (kernels/grouped_matmul):
     every branch runs only its own alignment-padded tiles, so there is no
-    padding-waste term — the group is pure co-execution.
-
-    Approximation: the group is priced at the profiles of the
-    scheduler-chosen per-op algorithms, used as a proxy for the GEMM
-    lowering the kernel actually executes (same MACs; the GEMM's patch
-    and packing traffic vs the chosen algorithm's own workspace traffic
-    is a wash this analytic model does not resolve).  Calibrating the
-    grouped/stacked pricing against hardware is a ROADMAP open item."""
-    return co_execution_time(profiles)
+    padding-waste term — the group is pure co-execution, priced directly
+    off the ``gemm_shape`` lowering the kernel executes
+    (``gemm_profiles``; was the scheduler-chosen per-op algorithm
+    profiles — a proxy whose drift the docstring used to acknowledge).
+    Calibrating against hardware stays a ROADMAP open item."""
+    return co_execution_time(gemm_profiles(ops))
 
 
 def stacked_time(profiles: list[OpProfile],
@@ -415,7 +488,10 @@ def stacked_time(profiles: list[OpProfile],
     every branch's MXU grid is inflated to the widest branch's aligned
     (K, N), so branch g pays round128(Kmax)*round128(Nmax) /
     (round128(K_g)*round128(N_g)) of its own compute.  (Memory traffic is
-    dominated by the shared-M inputs; padded tiles are modeled as noise.)"""
+    dominated by the shared-M inputs; padded tiles are modeled as noise.)
+    ``profiles`` should be the ``gemm_profiles`` of the branches — the
+    stacked kernel executes the same GEMM lowering the grouped one does,
+    just padded (``group_execution_time`` prices both arms off it)."""
     def al(d):
         return -(-d // 128) * 128
     kmax = max(al(k) for _, k, _ in shapes)
@@ -465,12 +541,15 @@ def group_execution_time(ops: list[Op], profiles: list[OpProfile],
     shapes = [gemm_shape(op) for op in ops]
     if all(s is not None for s in shapes) \
             and len({s[0] for s in shapes}) == 1:
+        # grouped/stacked price off the GEMM lowering the kernels execute
+        # (gemm_profiles), not the serial path's chosen algorithms
+        gprofs = gemm_profiles(ops)
         if join is not None:
             rider = concat_profile(join, _passthrough_elements(shapes, join))
-            return "grouped_concat", co_execution_time(profiles + [rider])
-        t_grouped = grouped_time(profiles)
+            return "grouped_concat", co_execution_time(gprofs + [rider])
+        t_grouped = co_execution_time(gprofs)
         if len({s[:2] for s in shapes}) == 1:   # uniform (M, K): stackable
-            t_stacked = stacked_time(profiles, shapes)
+            t_stacked = stacked_time(gprofs, shapes)
             if t_stacked <= t_grouped:
                 return "stacked", t_stacked
         return "grouped", t_grouped

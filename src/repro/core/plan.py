@@ -24,6 +24,18 @@ Modes (mirroring ``core/branch_parallel.py``):
             standalone join op disappears from the plan.  The grad group
             mirrors as ONE combined dx+dw/db launch whose packing slices
             the joint cotangent directly.
+  grouped_pooled — a grouped group that ABSORBS the maxpool op(s) feeding
+            its branches: the launch's offset table gains per-branch pool
+            descriptors and the kernel maxes raw-input tap tiles into a
+            VMEM pooled-lhs scratch before each M-block's GEMM steps
+            (``grouped_matmul_pooled``) — the pooled activation never
+            round-trips HBM and the standalone ``reduce_window`` launch
+            disappears from the plan.  A ``grouped_concat`` group absorbs
+            pools the same way (mode stays grouped_concat, its ``pools``
+            recorded), so a pool-proj branch rides the single
+            pool+GEMM+epilogue+concat launch.  The grad group mirrors as
+            the same ONE combined launch, the pooling cotangent scattered
+            through the first-argmax window mask in its unpacking.
   stacked — same-GEMM-shape branches fuse into ONE Pallas kernel with a
             branch grid axis (``kernels/branch_matmul.py``); heterogeneous
             output widths are padded to a common N and sliced back.  Kept
@@ -57,8 +69,8 @@ from repro.core import cost_model as cm
 from repro.core.graph import OpGraph
 from repro.core.scheduler import Schedule
 
-MODES = ("grouped", "grouped_concat", "stacked", "fused", "spatial",
-         "serial", "xla")
+MODES = ("grouped", "grouped_concat", "grouped_pooled", "stacked", "fused",
+         "spatial", "serial", "xla")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -70,6 +82,10 @@ class ExecGroup:
     modeled_time: float            # cost-model makespan under ``mode``
     reason: str = ""               # why ``mode`` was chosen (debugging)
     join: str = ""                 # grouped_concat: the absorbed join op
+    # absorbed maxpools: (branch op, pool op) pairs — the branch's lhs is
+    # pooled in-launch from the pool op's input (grouped_pooled, and
+    # grouped_concat groups whose branches pool)
+    pools: tuple[tuple[str, str], ...] = ()
 
     def __post_init__(self):
         if self.mode not in MODES:
@@ -152,7 +168,8 @@ def _absorb_concat_joins(graph: OpGraph,
     """
     out: list[ExecGroup | None] = list(groups)
     for idx, g in enumerate(out):
-        if g is None or g.mode != "grouped" or len(g.ops) < 2:
+        if g is None or g.mode not in ("grouped", "grouped_pooled") \
+                or len(g.ops) < 2:
             continue
         succs = {s for n in g.ops for s in graph.succ[n]}
         if len(succs) != 1:
@@ -182,15 +199,141 @@ def _absorb_concat_joins(graph: OpGraph,
         out[idx] = ExecGroup(
             "grouped_concat", g.ops + (jname,), algs, t,
             "fused epilogue-concat: branch slices land in the join "
-            "buffer in-kernel", join=jname)
+            "buffer in-kernel", join=jname, pools=g.pools)
         out[jidx] = None
+    return [g for g in out if g is not None]
+
+
+def _absorb_pools(graph: OpGraph, groups: list[ExecGroup], *,
+                  hbm_budget: float = cm.HBM_BYTES * 0.25,
+                  vmem_budget: float = cm.VMEM_BYTES) -> list[ExecGroup]:
+    """Stream standalone maxpool ops through the grouped launches that
+    consume them (the pool analogue of ``_absorb_concat_joins``).
+
+    A maxpool singleton group is absorbed when EVERY consumer of the pool
+    is a GEMM-viewed branch of a LATER grouped-family group and none of
+    those branches already pools another input — each consuming group
+    then gains a per-branch ``pools`` descriptor (its launch pools the
+    pool op's RAW input in-kernel: tap tiles maxed into the pooled-lhs
+    scratch, see ``kernels/grouped_matmul.py``) and the standalone
+    ``reduce_window`` group is dropped.  The fused rider is ZERO
+    (``cost_model.pool_profile`` — the tap reads stream through the
+    launch's existing lhs DMA and the pooled activation never touches
+    HBM), so absorption wins by exactly the pool group's makespan; a
+    consuming STACKED group is re-priced onto the grouped kernel (the
+    pad-to-max kernel has no pool stage), which must still beat keeping
+    the pool standalone.  Consumers may span several groups — an
+    inter-module pool feeding two launches is pooled by each (recomputed
+    taps instead of a materialized pooled tensor; recompute is free under
+    the rider model, the ROADMAP's hw-calibration caveat applies).
+
+    The pooled launch's footprint is re-checked against the C2 budgets
+    ``lower`` gated the unpooled group on: the tap-expanded X stack packs
+    up to ``POOL_TAP_LIMIT`` tap tiles per pooled lhs tile (extra HBM
+    workspace; past the limit the taps fold at pack time and add
+    nothing), and the pooled-lhs scratch claims VMEM — a pool whose
+    absorption would bust a consuming group's budget stays standalone."""
+    from repro.kernels.grouped_matmul import POOL_TAP_LIMIT
+    out: list[ExecGroup | None] = list(groups)
+    for idx, pg in enumerate(out):
+        if pg is None or len(pg.ops) != 1:
+            continue
+        (pname,) = pg.ops
+        pop = graph.ops.get(pname)
+        if pop is None or pop.kind != "maxpool":
+            continue
+        consumers = sorted(graph.succ[pname])
+        if not consumers:
+            continue
+        targets: dict[int, list[str]] = {}
+        ok = True
+        for c in consumers:
+            j = next((k for k, gg in enumerate(out)
+                      if gg is not None and c in gg.ops), None)
+            if (j is None or j <= idx
+                    or out[j].mode not in ("grouped", "grouped_pooled",
+                                           "grouped_concat", "stacked")
+                    or _gemm_shape(graph.ops[c]) is None
+                    # the branch must read the pool as its ONLY input (its
+                    # gemm_x maps each raw tap view single-argument) and a
+                    # branch can absorb at most one pool chain
+                    or graph.pred[c] != {pname}
+                    or any(b == c for b, _ in out[j].pools)):
+                ok = False
+                break
+            targets.setdefault(j, []).append(c)
+        if not ok:
+            continue
+        # price every affected group first — absorption is all-or-nothing
+        # across the pool's consumers (a partially absorbed pool would
+        # still have to launch standalone), and the win check aggregates:
+        # dropping the pool group saves its makespan exactly ONCE, so the
+        # SUM of repriced-group increases (stacked consumers moving onto
+        # the grouped kernel) must stay below it
+        def _tap_count(pool_op):
+            t = 1
+            for win, _s in pool_op.p["chain"]:
+                t *= win * win
+            return t if t <= POOL_TAP_LIMIT else 1   # past limit: pack fold
+
+        repriced: dict[int, ExecGroup] = {}
+        delta = 0.0
+        for j, branches in targets.items():
+            gg = out[j]
+            # C2 re-check on the WHOLE pooled launch: (taps-1) extra lhs
+            # tiles per pooled branch in the packed X stack (pools already
+            # absorbed into this group included) plus the pooled-lhs VMEM
+            # scratch (default 128^2 blocks); the workspace base takes the
+            # GEMM lowering's im2col patch buffers into account, matching
+            # the gate ``lower`` applied to the unpooled group
+            gops = [graph.ops[n] for n in gg.ops]
+            extra_ws, extra_vmem = 0.0, 0.0
+            for b, pn in list(gg.pools) + [(b, pname) for b in branches]:
+                s = _gemm_shape(graph.ops[b])
+                extra_ws += (_tap_count(graph.ops[pn]) - 1) \
+                    * s[0] * s[1] * graph.ops[b].dtype_bytes
+                extra_vmem = max(extra_vmem,
+                                 -(-s[1] // 128) * 128 * 128 * 4)
+            base = [cm.profile(graph.ops[n], gg.algorithms[n])
+                    for n in gg.ops]
+            ws_base = max(sum(p.workspace_bytes for p in base),
+                          sum(p.workspace_bytes
+                              for p in cm.gemm_profiles(gops)))
+            if (ws_base + extra_ws > hbm_budget
+                    or sum(p.vmem_bytes for p in base) + extra_vmem
+                    > vmem_budget):
+                ok = False
+                break
+            mode, t, reason = gg.mode, gg.modeled_time, gg.reason
+            if gg.mode == "stacked":
+                branch_ops = [graph.ops[n] for n in gg.ops]
+                t = cm.grouped_time(branch_ops)
+                mode = "grouped_pooled"
+                reason = ("pool absorption: stacked branches take the "
+                          "grouped kernel (the pooled lhs needs its "
+                          "pool stage)")
+                delta += t - gg.modeled_time
+            elif gg.mode == "grouped":
+                mode = "grouped_pooled"
+                reason = ("in-kernel pre-GEMM maxpool: pooled lhs "
+                          "streams from raw-input tap tiles")
+            algs = dict(gg.algorithms)
+            algs.update(pg.algorithms)   # the pool's choice survives
+            repriced[j] = ExecGroup(
+                mode, gg.ops, algs, t, reason, join=gg.join,
+                pools=gg.pools + tuple((b, pname) for b in branches))
+        if not ok or delta >= pg.modeled_time:
+            continue
+        for j, gg in repriced.items():
+            out[j] = gg
+        out[idx] = None
     return [g for g in out if g is not None]
 
 
 def lower(graph: OpGraph, schedule: Schedule, *, mesh=None,
           hbm_budget: float = cm.HBM_BYTES * 0.25,
           vmem_budget: float = cm.VMEM_BYTES, train: bool = False,
-          fuse_concat: bool = True) -> Plan:
+          fuse_concat: bool = True, fuse_pool: bool = True) -> Plan:
     """Lower a Schedule to an executable Plan.
 
     Mode choice per CoGroup: budget-infeasible or singleton -> serial;
@@ -198,10 +341,13 @@ def lower(graph: OpGraph, schedule: Schedule, *, mesh=None,
     single-chip mode (grouped ragged branch GEMM / stacked uniform-shape /
     fused complementary pair / xla interleave) at its modeled makespan,
     and a mesh upgrades same-output branches to ``spatial`` when the
-    chip-split beats every single-chip mode.  ``fuse_concat`` (default)
-    then absorbs each fork/join concat into the grouped launch feeding it
-    (``_absorb_concat_joins`` -> ``grouped_concat`` groups — zero
-    standalone join ops on the fused path).
+    chip-split beats every single-chip mode.  ``fuse_pool`` (default)
+    then streams each standalone maxpool through the grouped launch(es)
+    consuming it (``_absorb_pools`` -> ``grouped_pooled`` / pooled
+    groups — zero standalone ``reduce_window`` ops on the fused path),
+    and ``fuse_concat`` (default) absorbs each fork/join concat into the
+    grouped launch feeding it (``_absorb_concat_joins`` ->
+    ``grouped_concat`` groups — zero standalone join ops).
 
     ``train=True`` additionally checks the C2 budgets against the
     group's backward profiles (each direction on its own — forward and
@@ -226,6 +372,14 @@ def lower(graph: OpGraph, schedule: Schedule, *, mesh=None,
         profs = [cm.profile(op, cg.algorithms[op.name]) for op in ops]
         feasible = (sum(p.workspace_bytes for p in profs) <= hbm_budget
                     and sum(p.vmem_bytes for p in profs) <= vmem_budget)
+        if feasible and len(ops) > 1 \
+                and all(_gemm_shape(op) is not None for op in ops):
+            # a grouped/stacked-family group executes the GEMM lowering,
+            # whose im2col patch buffers are the workspace the C2 gate
+            # must see (the chosen-algorithm profiles above price the
+            # SERIAL fallback's footprint — e.g. direct conv, ws=0)
+            feasible = sum(p.workspace_bytes
+                           for p in cm.gemm_profiles(ops)) <= hbm_budget
         if train and feasible:
             # forward and backward are separate sequential launches whose
             # footprints never co-reside: each direction must fit the
@@ -249,6 +403,9 @@ def lower(graph: OpGraph, schedule: Schedule, *, mesh=None,
                     reason = "branches fit the mesh model axis"
         groups.append(ExecGroup(mode, tuple(cg.ops), dict(cg.algorithms),
                                 t, reason))
+    if fuse_pool:
+        groups = _absorb_pools(graph, groups, hbm_budget=hbm_budget,
+                               vmem_budget=vmem_budget)
     if fuse_concat:
         groups = _absorb_concat_joins(graph, groups)
     return Plan(groups, context={"mesh": mesh})
@@ -278,6 +435,13 @@ def backward_plan(graph: OpGraph, plan: Plan, *,
                            joint cotangent is sliced straight into its
                            packing, so the standalone join backward
                            (split) disappears with its forward.
+      grouped_pooled -> grouped_pooled   the same combined launch; pooled
+                           branches' lhs fold at pack time and the
+                           pooling cotangent scatters through the
+                           first-argmax window mask in the unpacking, so
+                           the standalone pool backward disappears with
+                           its forward (absorbed pools mirror as
+                           ``grad:`` pools on the grad group).
       stacked -> stacked   ``branch_matmul``'s VJP runs the stacked
                            kernel on the backward GEMMs.
       serial  -> serial    per-op VJPs (convs take the stride-aware
@@ -298,6 +462,9 @@ def backward_plan(graph: OpGraph, plan: Plan, *,
         "grouped": "mirror: ONE combined masked-dx + dw/db launch",
         "grouped_concat": "mirror: ONE combined launch, joint cotangent "
                           "sliced straight into its packing",
+        "grouped_pooled": "mirror: ONE combined launch, pooling cotangent "
+                          "scattered through the argmax mask in its "
+                          "unpacking",
         "stacked": "mirror: stacked kernel VJP on the backward GEMMs",
         "serial": "per-op VJPs",
         "fused": "fused VJP pulls back per-op",
@@ -319,7 +486,7 @@ def backward_plan(graph: OpGraph, plan: Plan, *,
                 branch_ops, g.algorithms, mode="grouped_concat",
                 join=graph.ops[g.join])
             reason = _REASON[mode]
-        elif g.mode in ("grouped", "stacked") and feasible:
+        elif g.mode in ("grouped", "grouped_pooled", "stacked") and feasible:
             mode, t = cm.group_execution_time_bwd(ops, g.algorithms,
                                                   mode=g.mode)
             reason = _REASON[mode]
@@ -329,12 +496,14 @@ def backward_plan(graph: OpGraph, plan: Plan, *,
         else:
             mode, t = "serial", sum(p.time for p in bprofs)
             reason = ("budget-infeasible (C2 fallback)"
-                      if g.mode in ("grouped", "grouped_concat", "stacked")
+                      if g.mode in ("grouped", "grouped_concat",
+                                    "grouped_pooled", "stacked")
                       else _REASON[g.mode])
         groups.append(ExecGroup(
             mode, tuple(f"grad:{n}" for n in g.ops),
             {f"grad:{n}": a for n, a in g.algorithms.items()}, t, reason,
-            join=f"grad:{g.join}" if g.join else ""))
+            join=f"grad:{g.join}" if g.join else "",
+            pools=tuple((f"grad:{b}", f"grad:{p}") for b, p in g.pools)))
     return Plan(groups, context={"forward": plan})
 
 
@@ -367,6 +536,12 @@ class OpImpl:
           grouped fallback — providing both must be equivalent.
       stream_z/stream_post — the op as ``post(silu(z).sum(0))`` with
           z (R, C) from the deps: the streamed branch of fused mode.
+      pool_chain — maxpool ops only: the ((window, stride), ...) chain.
+          What lets a grouped launch ABSORB the pool (grouped_pooled /
+          pooled grouped_concat): the executor expands the pool's raw
+          input into tap views (``kernels.pool_tap_views``) and the
+          consuming branch's ``gemm_x`` maps each view; ``fn`` stays the
+          standalone ``reduce_window`` chain (serial/degrade baseline).
     """
     deps: tuple[str, ...]
     fn: Callable[..., Any]
@@ -379,6 +554,7 @@ class OpImpl:
     gemm_reshape: Callable[..., Any] | None = None
     stream_z: Callable[..., Any] | None = None
     stream_post: Callable[..., Any] | None = None
+    pool_chain: tuple | None = None
 
 
 def _dep_args(impl: OpImpl, env: dict):
@@ -416,6 +592,54 @@ def _grouped_runnable(group: ExecGroup, impls, pending) -> bool:
         return False
     return _grouped_fusable(impls, group.ops) or all(
         impls[n].gemm_post is not None for n in group.ops)
+
+
+def _pools_runnable(group: ExecGroup, impls, env) -> bool:
+    """Every absorbed pool has a chain-carrying impl whose raw input is
+    already materialized — else the group degrades (the pools run
+    standalone via their ``fn`` and the branches read them normally)."""
+    for _b, p in group.pools:
+        pimpl = impls.get(p)
+        if pimpl is None or pimpl.pool_chain is None \
+                or len(pimpl.deps) != 1 or pimpl.deps[0] not in env:
+            return False
+    return True
+
+
+def _branch_lhs(group: ExecGroup, impls, env, names):
+    """Per-branch GEMM lhs: a plain 2D array, or — for a pool-absorbed
+    branch — the tuple of raw-input tap views (each mapped through the
+    branch's own ``gemm_x``) the pooled launch maxes in-kernel.
+
+    Tap views are built ONCE per absorbed pool op and shared by every
+    branch pooling it (the memo role the deleted ``memo1`` pre-transform
+    helper played, now at tap granularity).  A chain whose expansion
+    exceeds ``POOL_TAP_LIMIT`` folds HERE, before the per-tap ``gemm_x``
+    mapping — max commutes with the gather/reshape views, so folding
+    early is value- and gradient-identical while never materializing the
+    (e.g. 81-view) expansion the kernel wrapper would immediately fold
+    anyway."""
+    from repro.kernels.grouped_matmul import (POOL_TAP_LIMIT,
+                                              pool_from_taps,
+                                              pool_tap_views)
+    pools = dict(group.pools)
+    views: dict[str, Any] = {}
+    xs = []
+    for n in names:
+        impl = impls[n]
+        if n in pools:
+            pname = pools[n]
+            if pname not in views:
+                pimpl = impls[pname]
+                vs = pool_tap_views(env[pimpl.deps[0]], pimpl.pool_chain)
+                views[pname] = pool_from_taps(vs) \
+                    if len(vs) > POOL_TAP_LIMIT else vs
+            v = views[pname]
+            xs.append(impl.gemm_x(v) if not isinstance(v, list)
+                      else tuple(impl.gemm_x(t) for t in v))
+        else:
+            xs.append(impl.gemm_x(*_dep_args(impl, env)))
+    return xs
 
 
 def _grouped_concat_runnable(group: ExecGroup, impls, env, pending) -> bool:
@@ -484,25 +708,31 @@ def _shared_x_wide(impls, names) -> bool:
 
 def _run_grouped(group: ExecGroup, impls: dict[str, OpImpl], env: dict,
                  interpret):
-    from repro.kernels.ops import grouped_matmul  # ragged, fused epilogue
+    # ragged, fused epilogue; pooled branches hand the launch their tap
+    # views and the kernel's pool stage folds them (grouped_matmul_pooled
+    # delegates to the plain grouped kernel when nothing pools)
+    from repro.kernels.ops import grouped_matmul_pooled
     names = group.ops
+    pools = dict(group.pools)
     ws = [impls[n].gemm_w for n in names]
     fusable = _grouped_fusable(impls, names)
-    if len(names) > 1 and _shared_x_wide(impls, names):
+    if len(names) > 1 and _shared_x_wide(impls, names) \
+            and len({pools.get(n) for n in names}) == 1:
         # uniform-K branches over one X: concatenate weights along N into
         # ONE wide GEMM — the shared input is read once instead of G
         # times, and the wide GEMM's VJP keeps the backward deduped too
         # (one dx, one wide dw/db, split by the concat's own pullback).
-        i0 = impls[names[0]]
-        x = i0.gemm_x(*_dep_args(i0, env))
+        # Branches pooling the SAME pool op dedup too: one tap set, one
+        # in-kernel pool stage for the whole wide GEMM.
+        x = _branch_lhs(group, impls, env, names[:1])[0]
         if fusable:
-            (y,) = grouped_matmul(
+            (y,) = grouped_matmul_pooled(
                 [x], [jnp.concatenate(ws, axis=1)],
                 [jnp.concatenate([impls[n].gemm_bias for n in names])],
                 relu=True, interpret=interpret)
         else:
-            (y,) = grouped_matmul([x], [jnp.concatenate(ws, axis=1)],
-                                  interpret=interpret)
+            (y,) = grouped_matmul_pooled([x], [jnp.concatenate(ws, axis=1)],
+                                         interpret=interpret)
         off = 0
         for n, w in zip(names, ws):
             sl = y[:, off:off + w.shape[1]]
@@ -510,14 +740,15 @@ def _run_grouped(group: ExecGroup, impls: dict[str, OpImpl], env: dict,
                 else impls[n].gemm_post(sl)
             off += w.shape[1]
         return
-    xs = [impls[n].gemm_x(*_dep_args(impls[n], env)) for n in names]
+    xs = _branch_lhs(group, impls, env, names)
     if fusable:
-        ys = grouped_matmul(xs, ws, [impls[n].gemm_bias for n in names],
-                            relu=True, interpret=interpret)
+        ys = grouped_matmul_pooled(xs, ws,
+                                   [impls[n].gemm_bias for n in names],
+                                   relu=True, interpret=interpret)
         for n, y in zip(names, ys):
             env[n] = impls[n].gemm_reshape(y)
     else:
-        ys = grouped_matmul(xs, ws, interpret=interpret)
+        ys = grouped_matmul_pooled(xs, ws, interpret=interpret)
         for n, y in zip(names, ys):
             env[n] = impls[n].gemm_post(y)
 
@@ -534,7 +765,7 @@ def _run_grouped_concat(group: ExecGroup, impls: dict[str, OpImpl], env: dict,
     materializing them would be exactly the per-branch round-trip this
     mode deletes)."""
     from repro.kernels.ops import (grouped_block_shape,
-                                   grouped_matmul_concat)
+                                   grouped_matmul_pooled_concat)
     jimpl = impls[group.join]
     branches = [n for n in group.ops if n != group.join]
     offs: dict[str, int] = {}
@@ -545,19 +776,21 @@ def _run_grouped_concat(group: ExecGroup, impls: dict[str, OpImpl], env: dict,
         offs[d], widths[d] = off, w
         off += w
     order = [d for d in jimpl.deps if d in branches]
-    xs = [impls[n].gemm_x(*_dep_args(impls[n], env)) for n in order]
+    xs = _branch_lhs(group, impls, env, order)
     ws = [impls[n].gemm_w for n in order]
+    x0 = xs[0][0] if isinstance(xs[0], tuple) else xs[0]
     # the PADDED join buffer (compact=False): branch g's true columns sit
     # at the cumulative padded base, so the join assembles as ONE
     # concatenate of passthrough segments and (maximal) buffer slices —
     # strictly less copying than per-branch outputs + a standalone concat
-    y2d = grouped_matmul_concat(
+    # (pooled branches ride the same launch via their tap views)
+    y2d = grouped_matmul_pooled_concat(
         xs, ws, [impls[n].gemm_bias for n in order],
         offsets=[offs[n] for n in order], total=off, relu=True,
         compact=False, interpret=interpret)
     bn = grouped_block_shape(
-        xs[0].shape[0], [(w.shape[0], w.shape[1]) for w in ws],
-        xs[0].dtype).bn
+        x0.shape[0], [(w.shape[0], w.shape[1]) for w in ws],
+        x0.dtype).bn
     pbase = {}
     base = 0
     for n, w in zip(order, ws):
@@ -627,11 +860,13 @@ def run_plan(impls: dict[str, OpImpl], env: dict, plan: Plan, *,
         if not pending:
             continue
         executed = group.mode
-        if group.mode == "grouped" and _grouped_runnable(group, impls,
-                                                         pending):
+        if group.mode in ("grouped", "grouped_pooled") \
+                and _grouped_runnable(group, impls, pending) \
+                and _pools_runnable(group, impls, env):
             _run_grouped(group, impls, env, interpret)
         elif group.mode == "grouped_concat" and _grouped_concat_runnable(
-                group, impls, env, pending):
+                group, impls, env, pending) \
+                and _pools_runnable(group, impls, env):
             _run_grouped_concat(group, impls, env, interpret)
         elif group.mode == "stacked" and _stacked_runnable(group, impls,
                                                            pending):
@@ -647,6 +882,21 @@ def run_plan(impls: dict[str, OpImpl], env: dict, plan: Plan, *,
             # degraded path for co-execution groups (see docstring).
             if group.mode not in ("serial", "xla"):
                 executed = f"{group.mode}->xla"
+            # a degraded pooled group must first materialize its absorbed
+            # pools (the plan dropped their standalone groups): run each
+            # pool op's fn — the reduce_window baseline — so the branch
+            # fns can read their declared deps
+            for _b, p in group.pools:
+                if p in env:
+                    continue
+                pimpl = impls.get(p)
+                if pimpl is None:
+                    raise KeyError(
+                        f"absorbed pool op {p!r} has no OpImpl: a degraded "
+                        f"pooled group runs the pool's fn to materialize "
+                        f"its branches' input — pool ops ride group.pools "
+                        f"(not group.ops), so bind an impl for {p!r} too")
+                env[p] = pimpl.fn(*_dep_args(pimpl, env))
             for name in pending:
                 impl = impls[name]
                 alg = group.algorithms.get(name) if group.mode == "serial" \

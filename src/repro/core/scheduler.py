@@ -84,8 +84,21 @@ def schedule(graph: OpGraph, *, max_group: int = 4,
     groups: list[CoGroup] = []
 
     while ready:
+        pool_ready = [n for n in ready
+                      if graph.ops[n].kind == "maxpool"]
         if not concurrent:
             chosen = [ready.pop(0)]
+        elif pool_ready:
+            # Pooling primitives launch immediately as singletons: they
+            # gate the fork's GEMM branches (draining them first exposes
+            # the full branch width to the packer — else the pool-proj
+            # conv surfaces one level late and misses its quad), and no
+            # co-execution kernel runs a reduce_window — a maxpool's
+            # co-execution story is ABSORPTION into the consuming grouped
+            # launch, decided at lowering (plan._absorb_pools), never XLA
+            # interleave.
+            chosen = [pool_ready[0]]
+            ready.remove(pool_ready[0])
         else:
             # Greedy pack: seed with the most critical ready op, then add
             # ready ops while the modeled group time improves on serial and

@@ -4,6 +4,9 @@ from repro.kernels.ops import (  # noqa: F401
     grouped_matmul, grouped_matmul_bwd, grouped_matmul_bwd_ref,
     grouped_matmul_concat, grouped_matmul_concat_ref,
     grouped_matmul_dw, grouped_matmul_dw_ref,
+    grouped_matmul_pooled, grouped_matmul_pooled_ref,
+    grouped_matmul_pooled_concat, grouped_matmul_pooled_concat_ref,
+    pool_tap_views, pool_from_taps,
     grouped_matmul_flops, grouped_matmul_ref, grouped_block_shape,
     grouped_debug, matmul, ssd, KERNEL_LAUNCHES, reset_launch_counts,
     ATTENTION_ALGORITHMS, CONV2D_ALGORITHMS, MATMUL_ALGORITHMS, SSD_ALGORITHMS,

@@ -41,6 +41,18 @@ output buffers, their tile-stack unpacks, and the standalone
 column gather (identity for bn-aligned widths) yields the true
 ``[M, sum N_g]`` join.
 
+``grouped_matmul_pooled`` / ``grouped_matmul_pooled_concat`` stream a
+branch's maxpool through the SAME launch as an in-kernel pre-GEMM stage:
+the offset table gains a per-branch pool descriptor (rows 6-9 — derived
+from the branch's (window, stride) chain) and the packed X stack holds,
+for pooled branches, the pool-window *tap views* of the RAW input
+(``pool_tap_views`` — shifted slices, pure layout like the im2col view,
+never a ``reduce_window``).  Pool steps max tap tiles into a VMEM
+pooled-lhs scratch; the GEMM steps of that M-block then draw their lhs
+from the scratch — the pooled activation never round-trips HBM and the
+standalone pooling launch disappears (cuDNN's pooling primitive, and the
+last pre-GEMM round-trip of an inception module).
+
 ``grouped_matmul_dw`` is the mirrored backward-weight kernel: G
 *transposed* GEMMs dw_g = x_g^T @ dy_g with per-branch (K_g, N_g)
 outputs sharing the M contraction, db_g = sum_M dy_g reduced in the same
@@ -509,6 +521,417 @@ def grouped_matmul_concat_ref(xs, ws, bs=None, *, offsets, total: int,
     for y, off in zip(ys, offsets):
         out = jax.lax.dynamic_update_slice(out, y, (0, off))
     return out
+
+
+# ---------------------------------------------------------------------------
+# pooled grouped launch: in-kernel maxpool as a pre-GEMM stage
+# ---------------------------------------------------------------------------
+
+def _tap_views_one(x, window: int, stride: int):
+    """One SAME-padded maxpool stage as ``window**2`` shifted views of
+    ``x`` (NHWC): view ``(dh, dw)`` holds, at output position (oh, ow),
+    the input element the pool window reads at tap (dh, dw) — out-of-image
+    taps are -inf (the max monoid identity, exactly ``reduce_window``'s
+    SAME padding).  A pure pad+strided-slice layout pass: no
+    ``reduce_window``, no compute beyond the pad."""
+    b, h, w, c = x.shape
+    oh, ow = -(-h // stride), -(-w // stride)
+    ph = max((oh - 1) * stride + window - h, 0)
+    pw = max((ow - 1) * stride + window - w, 0)
+    plh, plw = ph // 2, pw // 2
+    xp = jnp.pad(x, ((0, 0), (plh, ph - plh), (plw, pw - plw), (0, 0)),
+                 constant_values=-np.inf)
+    return [xp[:, dh:dh + (oh - 1) * stride + 1:stride,
+               dw:dw + (ow - 1) * stride + 1:stride, :]
+            for dh in range(window) for dw in range(window)]
+
+
+def pool_tap_views(x, chain):
+    """A maxpool *chain* ``((window, stride), ...)`` applied to NHWC ``x``
+    as a flat list of shifted views whose elementwise max IS the pooled
+    output: ``max_t views[t] == maxpool_chain(x)``.
+
+    Views are ordered so that a first-max-wins fold reproduces the
+    cotangent routing of the XLA oracle exactly (``reduce_window``'s max
+    grad sends ties to the first maximal tap in window scan order; for a
+    chain, the OUTER pool's scatter runs first, so its taps are the major
+    axis of the composed order)."""
+    views = [x]
+    for window, stride in chain:
+        exp = [_tap_views_one(v, window, stride) for v in views]
+        ntap = window * window
+        views = [exp[i][e] for e in range(ntap) for i in range(len(exp))]
+    return views
+
+
+def pool_from_taps(taps):
+    """Left-fold ``where(isnan(v) | (v > acc), v, acc)`` over tap views:
+    values equal ``reduce_window`` max — including NaN propagation (a
+    NaN tap poisons its windows, as XLA's max does; a bare ``v > acc``
+    select would silently drop it) — and the select routing makes
+    autodiff send tie cotangents to the FIRST maximal tap: bit-identical
+    gradients to the XLA oracle on finite inputs (``lax.max``'s
+    balanced-eq tie splitting would not be; under NaNs gradients are
+    meaningless either way)."""
+    acc = taps[0]
+    for v in taps[1:]:
+        acc = jnp.where(jnp.isnan(v) | (v > acc), v, acc)
+    return acc
+
+
+def pool_cotangent_taps(taps, pooled, d_pooled):
+    """Scatter the pooled-lhs cotangent back onto the tap views through
+    the first-argmax window mask: tap t receives ``d_pooled`` where it
+    equals the pooled max AND no earlier tap does — the mask the combined
+    backward launch's unpacking pass applies (elementwise, like the ReLU
+    cotangent mask folded into its dY packing)."""
+    assigned = jnp.zeros(pooled.shape, jnp.bool_)
+    outs = []
+    for v in taps:
+        take = (v == pooled) & ~assigned
+        assigned = assigned | take
+        outs.append(jnp.where(take, d_pooled, jnp.zeros_like(d_pooled)))
+    return outs
+
+
+def _gmm_pooled_kernel(tab_ref, x_ref, w_ref, b_ref, o_ref,
+                       acc_ref, pool_ref, *, relu: bool):
+    """``_gmm_kernel`` plus the in-kernel pre-GEMM pool stage.  Pool steps
+    (row 6) max one tap tile of the raw input into the pooled-lhs VMEM
+    scratch slot ``ps`` (row 8; row 7 marks the first tap, which seeds the
+    slot); GEMM steps with row 9 set draw their lhs from that slot instead
+    of the X ref.  Everything else is the unmodified grouped step."""
+    t = pl.program_id(0)
+    is_pool = tab_ref[6, t] == 1
+    ps = tab_ref[8, t]
+
+    @pl.when(is_pool)
+    def _pool():
+        tile = x_ref[...].astype(jnp.float32)
+
+        @pl.when(tab_ref[7, t] == 1)
+        def _seed():
+            pool_ref[ps] = tile
+
+        @pl.when(tab_ref[7, t] == 0)
+        def _max():
+            # same NaN-propagating select as pool_from_taps (lax.max may
+            # drop a NaN acc against a later finite tap on some backends)
+            cur = pool_ref[ps]
+            pool_ref[ps] = jnp.where(jnp.isnan(tile) | (tile > cur),
+                                     tile, cur)
+
+    @pl.when(~is_pool)
+    def _gemm():
+        @pl.when(tab_ref[3, t] == 1)
+        def _init():
+            acc_ref[...] = jnp.zeros_like(acc_ref)
+
+        x = x_ref[...]
+        x = jnp.where(tab_ref[9, t] == 1,
+                      pool_ref[ps].astype(x.dtype), x)
+        acc_ref[...] += jnp.dot(x, w_ref[...],
+                                preferred_element_type=jnp.float32)
+
+        @pl.when(tab_ref[4, t] == 1)
+        def _store():
+            y = acc_ref[...] + b_ref[...].astype(jnp.float32)
+            if relu:
+                y = jnp.maximum(y, 0.0)
+            o_ref[...] = y.astype(o_ref.dtype)
+
+
+@functools.lru_cache(maxsize=512)
+def _plan_tiles_pooled(m_blocks: int, kbs: tuple[int, ...],
+                       nbs: tuple[int, ...], taps: tuple[int, ...],
+                       concat: bool):
+    """Offset table for the pooled grouped grid — the per-branch pool
+    descriptor the tentpole adds to the scalar-prefetch table.  ``taps[g]``
+    is the branch's pool-window tap count (1 = unpooled; window and stride
+    live in the tap-slot layout the packing derives from the branch's
+    (window, stride) chain).  Branch g's packed X region holds, for every
+    (row-block i, k-block kk), its ``taps[g]`` tap tiles consecutively;
+    before an M-block's GEMM steps, one pool step per (kk, tap) maxes the
+    taps into the pooled-lhs scratch slot kk.  ``concat=True`` lays output
+    slots out as the join's padded panel layout, m-outermost
+    (``_plan_tiles_concat``).  Rows:
+
+        row 0  xt     slot into the packed X stack (pool step: the tap
+                      tile; unpooled GEMM step: the lhs tile; pooled GEMM
+                      step: the tile's first tap — fetched, unused)
+        row 1  wt     slot into the packed W tile stack
+        row 2  bj     col-block index into the packed bias
+        row 3  first  1 on a tile's first k-step (zero the accumulator)
+        row 4  last   1 on a tile's last k-step (epilogue + store)
+        row 5  ot     output slot (pool steps: the upcoming tile's slot —
+                      never stored, keeps the revisit window stable)
+        row 6  pool   1 = pool step (max a tap tile into scratch)
+        row 7  pfirst 1 on a tile's first tap (seed the scratch slot)
+        row 8  ps     pooled-lhs scratch slot (the tile's k-block index)
+        row 9  upool  1 = GEMM step draws its lhs from the scratch
+    """
+    rows: list[list[int]] = [[] for _ in range(10)]
+    # cbases doubles as the bias col-block offset: the packed bias and
+    # the concat panel share one column-block numbering (like
+    # _plan_tiles_concat's single accumulator)
+    xbases, wbases, obases, cbases = [], [], [], []
+    xb = wb = ob = cb = 0
+    for nkb, npb, tp in zip(kbs, nbs, taps):
+        xbases.append(xb)
+        wbases.append(wb)
+        obases.append(ob)
+        cbases.append(cb)
+        xb += m_blocks * nkb * tp
+        wb += nkb * npb
+        ob += m_blocks * npb
+        cb += npb
+    ncbt = cb
+
+    def emit(g, i):
+        nkb, npb, tp = kbs[g], nbs[g], taps[g]
+        pooled = tp > 1
+        first_ot = (i * ncbt + cbases[g]) if concat else (obases[g] + i * npb)
+        if pooled:
+            for kk in range(nkb):
+                for t in range(tp):
+                    rows[0].append(xbases[g] + (i * nkb + kk) * tp + t)
+                    rows[1].append(wbases[g])
+                    rows[2].append(cbases[g])
+                    rows[3].append(0)
+                    rows[4].append(0)
+                    rows[5].append(first_ot)
+                    rows[6].append(1)
+                    rows[7].append(1 if t == 0 else 0)
+                    rows[8].append(kk)
+                    rows[9].append(0)
+        for j in range(npb):
+            for kk in range(nkb):
+                rows[0].append(xbases[g] + (i * nkb + kk) * tp)
+                rows[1].append(wbases[g] + kk * npb + j)
+                rows[2].append(cbases[g] + j)
+                rows[3].append(1 if kk == 0 else 0)
+                rows[4].append(1 if kk == nkb - 1 else 0)
+                rows[5].append((i * ncbt + cbases[g] + j) if concat
+                               else (obases[g] + i * npb + j))
+                rows[6].append(0)
+                rows[7].append(0)
+                # unpooled steps still read the scratch (both select arms
+                # are fetched) — pin them to slot 0, always in bounds
+                rows[8].append(kk if pooled else 0)
+                rows[9].append(1 if pooled else 0)
+
+    if concat:
+        for i in range(m_blocks):
+            for g in range(len(kbs)):
+                emit(g, i)
+    else:
+        for g in range(len(kbs)):
+            for i in range(m_blocks):
+                emit(g, i)
+    return np.array(rows, np.int32)
+
+
+# A single pool window keeps its taps as in-kernel pool steps; a chained
+# pool (e.g. the (3,2)+(3,1) pool-proj of a pooled module) expands to
+# window1^2 * window2^2 = 81 views, and 81 pool grid steps per (i, kk)
+# tile cost more than they save (on hardware: more steps than the GEMM
+# they feed; on the interpret emulation: each is a fully-charged grid
+# step).  Past the limit the taps fold at PACK time instead — an
+# elementwise max fused into the tile-stack layout pass, still zero
+# reduce_window, still one launch, same VJP (the backward folds at pack
+# time in all cases).  Heuristic knob in the grouped_block_shape spirit.
+POOL_TAP_LIMIT = 16
+
+
+def _branch_taps(xs, tap_limit: int | None = None):
+    """Normalize xs entries: an array is one tap (unpooled); a list/tuple
+    of tap arrays is a pooled branch — folded at pack time when its tap
+    count exceeds ``tap_limit``.  Returns (tap lists, tap counts)."""
+    limit = POOL_TAP_LIMIT if tap_limit is None else tap_limit
+    tls, tns = [], []
+    for x in xs:
+        if isinstance(x, (list, tuple)):
+            assert len(x) >= 1
+            assert all(t.shape == x[0].shape for t in x)
+            if len(x) > limit:
+                tls.append([pool_from_taps(list(x))])
+                tns.append(1)
+            else:
+                tls.append(list(x))
+                tns.append(len(x))
+        else:
+            tls.append([x])
+            tns.append(1)
+    return tls, tns
+
+
+def _pooled_launch(xs, ws, bs, *, relu, concat, offsets=None, total=None,
+                   compact=True, bm=None, bn=None, bk=None, interpret=False,
+                   tap_limit=None):
+    """Shared implementation of the pooled grouped launch (plain and
+    fused-concat output layouts)."""
+    g = len(xs)
+    assert g == len(ws) and g >= 1
+    assert bs is None or len(bs) == g
+    tls, tns = _branch_taps(xs, tap_limit)
+    m = tls[0][0].shape[0]
+    assert all(t.shape[0] == m for tl in tls for t in tl)
+    assert all(tl[0].shape[1] == w.shape[0] for tl, w in zip(tls, ws))
+    ns = [w.shape[1] for w in ws]
+    if concat:
+        assert offsets is not None and total is not None \
+            and len(offsets) == g
+        segs = sorted(zip(offsets, ns))
+        assert all(o1 >= o0 + n0 for (o0, n0), (o1, _)
+                   in zip(segs, segs[1:])) \
+            and segs[-1][0] + segs[-1][1] <= total, (offsets, ns, total)
+    if bm is None or bn is None or bk is None:
+        blocks = grouped_block_shape(
+            m, [(w.shape[0], w.shape[1]) for w in ws], tls[0][0].dtype)
+        bm, bn, bk = bm or blocks.bm, bn or blocks.bn, bk or blocks.bk
+    mp = _round_up(m, bm)
+    mb = mp // bm
+    kps = [_round_up(tl[0].shape[1], bk) for tl in tls]
+    nps = [_round_up(n, bn) for n in ns]
+    nsum = sum(nps)
+
+    # X stack: branch g's region holds, tile by tile, its taps
+    # consecutively — (i, kk)-tile slots [base + (i*nkb + kk)*taps, +taps)
+    parts = []
+    for tl, kp in zip(tls, kps):
+        stacks = [_tile_stack(
+            jnp.pad(t, ((0, mp - m), (0, kp - t.shape[1]))), bm, bk)
+            for t in tl]
+        if len(stacks) == 1:
+            parts.append(stacks[0])
+        else:
+            # interleave taps per tile: (T_tiles, taps, bm, bk) flattened
+            parts.append(jnp.stack(stacks, axis=1).reshape(-1, bm, bk))
+    xpk = jnp.concatenate(parts, axis=0)
+    wpk = jnp.concatenate(
+        [_tile_stack(jnp.pad(w, ((0, kp - w.shape[0]),
+                                 (0, np_ - w.shape[1]))), bk, bn)
+         for w, kp, np_ in zip(ws, kps, nps)], axis=0).astype(xpk.dtype)
+    if bs is None:
+        bpk = jnp.zeros((1, nsum), xpk.dtype)
+    else:
+        bpk = jnp.concatenate(
+            [jnp.pad(b, (0, np_ - b.shape[0]))
+             for b, np_ in zip(bs, nps)]).reshape(1, nsum).astype(xpk.dtype)
+
+    name = "grouped_matmul_pooled_concat" if concat \
+        else "grouped_matmul_pooled"
+    _count_launch(name)
+    tab = _device_table(
+        _plan_tiles_pooled,
+        mb, tuple(kp // bk for kp in kps), tuple(np_ // bn for np_ in nps),
+        tuple(tns), concat)
+    nkb_pool = max((kp // bk for kp, tn in zip(kps, tns) if tn > 1),
+                   default=1)
+    o_tiles = mb * sum(np_ // bn for np_ in nps)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(tab.shape[1],),
+        in_specs=[
+            pl.BlockSpec((None, bm, bk), lambda t, tab: (tab[0, t], 0, 0)),
+            pl.BlockSpec((None, bk, bn), lambda t, tab: (tab[1, t], 0, 0)),
+            pl.BlockSpec((1, bn), lambda t, tab: (0, tab[2, t])),
+        ],
+        out_specs=pl.BlockSpec((None, bm, bn),
+                               lambda t, tab: (tab[5, t], 0, 0)),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32),
+                        pltpu.VMEM((nkb_pool, bm, bk), jnp.float32)],
+    )
+    out = pl.pallas_call(
+        functools.partial(_gmm_pooled_kernel, relu=relu),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((o_tiles, bm, bn), tls[0][0].dtype),
+        interpret=interpret,
+    )(tab, xpk, wpk, bpk)
+
+    if concat:
+        ncbt = sum(np_ // bn for np_ in nps)
+        y2 = out.reshape(mb, ncbt, bm, bn).transpose(0, 2, 1, 3)
+        y2 = y2.reshape(mp, ncbt * bn)[:m]
+        if not compact:
+            return y2
+        idx = _concat_gather_index(tuple(int(o) for o in offsets),
+                                  tuple(ns), tuple(nps), int(total))
+        return jnp.take(y2, idx, axis=1)
+    outs, obase = [], 0
+    for w, np_ in zip(ws, nps):
+        npb = np_ // bn
+        tiles = out[obase:obase + mb * npb]
+        y = tiles.reshape(mb, npb, bm, bn).transpose(0, 2, 1, 3)
+        outs.append(y.reshape(mp, np_)[:m, :w.shape[1]])
+        obase += mb * npb
+    return outs
+
+
+def grouped_matmul_pooled(xs, ws, bs=None, *, relu: bool = False,
+                          bm: int | None = None, bn: int | None = None,
+                          bk: int | None = None, interpret: bool = False,
+                          tap_limit: int | None = None):
+    """[maxpool(x_g) @ w_g (+ b_g) (+ ReLU)] for ragged (K_g, N_g) in ONE
+    launch, the maxpool computed IN-KERNEL as a pre-GEMM stage.
+
+    ``xs[g]`` is either an (M, K_g) array (unpooled branch — a plain
+    grouped lhs) or a sequence of (M, K_g) *tap views* of the raw input
+    (``pool_tap_views``): the kernel maxes the tap tiles into a VMEM
+    pooled-lhs scratch per the table's pool descriptor, so the pooled
+    activation never materializes in HBM and no standalone pooling launch
+    remains.  Branches whose tap count exceeds ``tap_limit`` (default
+    ``POOL_TAP_LIMIT``) fold at pack time instead — see the constant's
+    comment.  With no pooled branch this is exactly ``grouped_matmul``.
+    Returns G arrays (M, N_g).
+    """
+    if all(not isinstance(x, (list, tuple)) for x in xs):
+        return grouped_matmul(xs, ws, bs, relu=relu, bm=bm, bn=bn, bk=bk,
+                              interpret=interpret)
+    return _pooled_launch(xs, ws, bs, relu=relu, concat=False,
+                          bm=bm, bn=bn, bk=bk, interpret=interpret,
+                          tap_limit=tap_limit)
+
+
+def grouped_matmul_pooled_concat(xs, ws, bs=None, *, offsets, total: int,
+                                 relu: bool = False, compact: bool = True,
+                                 bm: int | None = None, bn: int | None = None,
+                                 bk: int | None = None,
+                                 interpret: bool = False,
+                                 tap_limit: int | None = None):
+    """``grouped_matmul_concat`` with the in-kernel pool stage: pooled
+    branches' epilogues land in the join's [M, total] layout like every
+    other branch — one launch covers pooling, GEMMs, bias+ReLU AND the
+    concat.  ``xs``/``compact`` semantics as in the pooled/concat
+    wrappers.  With no pooled branch this is ``grouped_matmul_concat``."""
+    if all(not isinstance(x, (list, tuple)) for x in xs):
+        return grouped_matmul_concat(xs, ws, bs, offsets=offsets,
+                                     total=total, relu=relu,
+                                     compact=compact, bm=bm, bn=bn, bk=bk,
+                                     interpret=interpret)
+    return _pooled_launch(xs, ws, bs, relu=relu, concat=True,
+                          offsets=offsets, total=total, compact=compact,
+                          bm=bm, bn=bn, bk=bk, interpret=interpret,
+                          tap_limit=tap_limit)
+
+
+def grouped_matmul_pooled_ref(xs, ws, bs=None, *, relu: bool = False):
+    """Per-branch XLA oracle: fold each branch's taps, then plain GEMMs."""
+    tls, tns = _branch_taps(xs)
+    flat = [pool_from_taps(tl) if tn > 1 else tl[0]
+            for tl, tn in zip(tls, tns)]
+    return grouped_matmul_ref(flat, ws, bs, relu=relu)
+
+
+def grouped_matmul_pooled_concat_ref(xs, ws, bs=None, *, offsets,
+                                     total: int, relu: bool = False):
+    """Oracle for the pooled concat layout (uncovered columns zero)."""
+    tls, tns = _branch_taps(xs)
+    flat = [pool_from_taps(tl) if tn > 1 else tl[0]
+            for tl, tn in zip(tls, tns)]
+    return grouped_matmul_concat_ref(flat, ws, bs, offsets=offsets,
+                                     total=total, relu=relu)
 
 
 # ---------------------------------------------------------------------------

@@ -299,6 +299,141 @@ def _concat_bwd(offsets, total, relu, compact, interpret, res, g):
 
 _concat_vjp.defvjp(_concat_fwd, _concat_bwd)
 
+
+# ---------------------------------------------------------------------------
+# pooled grouped launch (in-kernel maxpool pre-GEMM stage)
+# ---------------------------------------------------------------------------
+
+def grouped_matmul_pooled(xs, ws, bs=None, *, relu: bool = False,
+                          interpret: bool | None = None):
+    """Grouped ragged branch GEMMs with each pooled branch's maxpool
+    computed IN-KERNEL as a pre-GEMM stage (``xs[g]`` a sequence of
+    ``pool_tap_views`` tap arrays) — ONE launch covers pooling, GEMMs and
+    the bias+ReLU epilogue; no standalone pooling kernel remains.
+
+    Differentiable: the custom VJP emits exactly ONE combined backward
+    launch (``grouped_matmul_bwd`` — masked dx + dw/db), with the pooled
+    branches' lhs folded at pack time and the pooling cotangent scattered
+    back through the first-argmax window mask in the unpacking pass
+    (elementwise, like the ReLU cotangent mask folded into the packing —
+    gradients match the XLA ``reduce_window`` oracle bit-for-bit,
+    tie-breaking included)."""
+    interpret = default_interpret() if interpret is None else interpret
+    xs_t = tuple(tuple(x) if isinstance(x, (list, tuple)) else x
+                 for x in xs)
+    return _pooled_vjp(xs_t, tuple(ws),
+                       None if bs is None else tuple(bs), relu, interpret)
+
+
+def grouped_matmul_pooled_concat(xs, ws, bs=None, *, offsets, total: int,
+                                 relu: bool = False, compact: bool = True,
+                                 interpret: bool | None = None):
+    """The fused epilogue-concat grouped GEMM with the in-kernel pool
+    stage: pooling + GEMMs + bias/ReLU + the join assembly in ONE launch
+    (``kernels/grouped_matmul.py::grouped_matmul_pooled_concat``).  Same
+    ``offsets``/``total``/``compact`` semantics as
+    ``grouped_matmul_concat``; the custom VJP slices the joint cotangent
+    and emits ONE combined backward launch, scattering pooled branches'
+    cotangents through their argmax masks in its unpacking."""
+    interpret = default_interpret() if interpret is None else interpret
+    xs_t = tuple(tuple(x) if isinstance(x, (list, tuple)) else x
+                 for x in xs)
+    return _pooled_concat_vjp(xs_t, tuple(ws),
+                              None if bs is None else tuple(bs),
+                              tuple(int(o) for o in offsets), int(total),
+                              relu, compact, interpret)
+
+
+def _pooled_flatten(xs):
+    """(plain lhs per branch, {branch: folded pooled lhs}) — the pack-time
+    fold the forward kernel performs in its pool stage."""
+    flat, pooled = [], {}
+    for i, x in enumerate(xs):
+        if isinstance(x, tuple):
+            pooled[i] = _gmm.pool_from_taps(list(x))
+            flat.append(pooled[i])
+        else:
+            flat.append(x)
+    return flat, pooled
+
+
+def _pooled_scatter(xs, pooled, dxs):
+    """Route each pooled branch's lhs cotangent back onto its taps."""
+    outs = []
+    for i, x in enumerate(xs):
+        if isinstance(x, tuple):
+            outs.append(tuple(_gmm.pool_cotangent_taps(
+                list(x), pooled[i], dxs[i])))
+        else:
+            outs.append(dxs[i])
+    return tuple(outs)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4))
+def _pooled_vjp(xs, ws, bs, relu, interpret):
+    return tuple(_gmm.grouped_matmul_pooled(list(xs), ws, bs, relu=relu,
+                                            interpret=interpret))
+
+
+def _pooled_fwd(xs, ws, bs, relu, interpret):
+    ys = _pooled_vjp(xs, ws, bs, relu, interpret)
+    return ys, (xs, ws, bs, ys if relu else None)
+
+
+def _pooled_bwd(relu, interpret, res, gs):
+    xs, ws, bs, ys = res
+    flat, pooled = _pooled_flatten(xs)
+    dys = [g.astype(f.dtype) for g, f in zip(gs, flat)]
+    mask = list(ys) if relu else None
+    dxs, dws, dbs = _gmm.grouped_matmul_bwd(flat, ws, dys, mask,
+                                            interpret=interpret)
+    dws = tuple(dw.astype(w.dtype) for dw, w in zip(dws, ws))
+    dbs = None if bs is None else tuple(
+        db.astype(b.dtype) for db, b in zip(dbs, bs))
+    return _pooled_scatter(xs, pooled, dxs), dws, dbs
+
+
+_pooled_vjp.defvjp(_pooled_fwd, _pooled_bwd)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6, 7))
+def _pooled_concat_vjp(xs, ws, bs, offsets, total, relu, compact,
+                       interpret):
+    return _gmm.grouped_matmul_pooled_concat(
+        list(xs), ws, bs, offsets=offsets, total=total, relu=relu,
+        compact=compact, interpret=interpret)
+
+
+def _pooled_concat_fwd(xs, ws, bs, offsets, total, relu, compact,
+                       interpret):
+    y = _pooled_concat_vjp(xs, ws, bs, offsets, total, relu, compact,
+                           interpret)
+    return y, (xs, ws, bs, y if relu else None)
+
+
+def _pooled_concat_bwd(offsets, total, relu, compact, interpret, res, g):
+    xs, ws, bs, y = res
+    flat, pooled = _pooled_flatten(xs)
+    offs = _concat_offsets(flat, ws, offsets, compact)
+    dys = [g[:, off:off + w.shape[1]].astype(f.dtype)
+           for off, w, f in zip(offs, ws, flat)]
+    mask = [y[:, off:off + w.shape[1]]
+            for off, w in zip(offs, ws)] if relu else None
+    dxs, dws, dbs = _gmm.grouped_matmul_bwd(flat, ws, dys, mask,
+                                            interpret=interpret)
+    dws = tuple(dw.astype(w.dtype) for dw, w in zip(dws, ws))
+    dbs = None if bs is None else tuple(
+        db.astype(b.dtype) for db, b in zip(dbs, bs))
+    return _pooled_scatter(xs, pooled, dxs), dws, dbs
+
+
+_pooled_concat_vjp.defvjp(_pooled_concat_fwd, _pooled_concat_bwd)
+
+pool_tap_views = _gmm.pool_tap_views
+pool_from_taps = _gmm.pool_from_taps
+grouped_matmul_pooled_ref = _gmm.grouped_matmul_pooled_ref
+grouped_matmul_pooled_concat_ref = _gmm.grouped_matmul_pooled_concat_ref
+
 grouped_matmul_ref = _gmm.grouped_matmul_ref
 grouped_matmul_dw_ref = _gmm.grouped_matmul_dw_ref
 grouped_matmul_bwd_ref = _gmm.grouped_matmul_bwd_ref

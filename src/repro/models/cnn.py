@@ -160,6 +160,15 @@ def maxpool(x, k=3, stride=2):
         (1, stride, stride, 1), "SAME")
 
 
+def maxpool_chain(x, chain):
+    """A ``((window, stride), ...)`` maxpool chain via ``reduce_window`` —
+    the standalone pooling primitive the serial/unfused paths launch (and
+    the baseline the pooled grouped launch absorbs)."""
+    for k, s in chain:
+        x = maxpool(x, k, s)
+    return x
+
+
 def _conv_init(key, kh, cin, cout, dtype):
     w = L.normal_init(key, (kh, kh, cin, cout), (kh * kh * cin) ** -0.5,
                       dtype)
@@ -249,21 +258,20 @@ def loss_fn(params, cfg: CNNConfig, batch, *, plan=None, **kw):
 def _plan_impls(params, cfg: CNNConfig, interpret=None):
     """``core.plan.OpImpl`` binding for every ``build_graph`` op.
 
-    Mirrors the shape walk of ``build_graph``; the inter-module maxpools
-    (which the op graph folds into its shape bookkeeping) are closed over
-    the consuming branches, memoized so each runs once per forward even
-    in eager execution.  Returns (impls, name of the final join op).
+    Mirrors the shape walk of ``build_graph``.  The maxpools are explicit
+    graph ops now, so each pool impl carries its ``pool_chain`` (what the
+    pooled grouped launch absorbs) and an ``fn`` running the standalone
+    ``reduce_window`` chain (the serial/unfused baseline); the pool-proj
+    conv reads its pre-pool op's output directly.  Returns (impls, name
+    of the final join op).
     """
     from repro.core.plan import OpImpl
-
-    def identity(x):
-        return x
 
     impls: dict = {}
     h, w = cfg.img[:2]
     dep = "input"
 
-    def conv_impl(pb, in_t, dep, oh, ow, stride=1):
+    def conv_impl(pb, dep, oh, ow, stride=1):
         """OpImpl with the conv's GEMM views: a 1x1 conv is a channel
         matmul; a K×K conv is its im2col view (M = B*OH*OW, K = C*KH*KW)
         — the cuDNN GEMM lowering, which is what lets the 3x3/5x5
@@ -272,14 +280,15 @@ def _plan_impls(params, cfg: CNNConfig, interpret=None):
         The bias+ReLU epilogue is split out (gemm_bias/gemm_relu/
         gemm_reshape) so the grouped kernel can fuse it in-kernel;
         gemm_post keeps the equivalent out-of-kernel epilogue for
-        stacked/fused modes."""
+        stacked/fused modes.  ``gemm_x`` is a pure function of the dep
+        value — for a pool-absorbed branch the executor applies it to
+        each raw-input tap view instead of the materialized pooled dep."""
         kh, kw, cin, _ = pb["w"].shape
         # (KH, KW, C, K) -> (C, KH, KW, K) -> (C*KH*KW, K): matches the
         # (C, KH, KW) feature order of conv_general_dilated_patches.
         wmat = pb["w"].transpose(2, 0, 1, 3).reshape(cin * kh * kw, -1)
 
-        def gemm_x(x, in_t=in_t, kh=kh, kw=kw, cin=cin, s=stride):
-            x = in_t(x)
+        def gemm_x(x, kh=kh, kw=kw, cin=cin, s=stride):
             if (kh, kw) == (1, 1) and s == 1:
                 return x.reshape(-1, cin)
             return _im2col(x, kh, kw, s).reshape(-1, cin * kh * kw)
@@ -292,50 +301,49 @@ def _plan_impls(params, cfg: CNNConfig, interpret=None):
 
         return OpImpl(
             deps=(dep,),
-            fn=lambda x, algorithm="xla", pb=pb, in_t=in_t, s=stride: conv(
-                in_t(x), pb["w"], pb["b"], stride=s, algorithm=algorithm,
+            fn=lambda x, algorithm="xla", pb=pb, s=stride: conv(
+                x, pb["w"], pb["b"], stride=s, algorithm=algorithm,
                 interpret=interpret),
             gemm_x=gemm_x,
-            # branches whose pre-transform object AND filter geometry
-            # coincide produce the identical x2d -> wide-GEMM dedup
-            gemm_x_key=("conv_x", id(in_t), kh, kw, stride, cin),
+            # branches whose dep AND filter geometry coincide produce the
+            # identical x2d -> wide-GEMM dedup (deps equality carries the
+            # input identity now that pools are explicit ops)
+            gemm_x_key=("conv_x", kh, kw, stride, cin),
             gemm_w=wmat,
             gemm_post=gemm_post,
             gemm_bias=pb["b"],
             gemm_relu=True,
             gemm_reshape=gemm_reshape)
 
-    def memo1(fn):
-        """Share one computed value across the four branch impls that
-        close over it: within a forward every branch applies ``pre`` to
-        the same module input, so the inter-module maxpool runs once —
-        not once per branch — even in eager (un-CSE'd) execution."""
-        cell: list = []
-
-        def wrapped(x):
-            if not cell:
-                cell.append(fn(x))
-            return cell[0]
-        return wrapped
+    def pool_impl(dep, chain):
+        return OpImpl(
+            deps=(dep,),
+            fn=lambda x, algorithm=None, chain=chain: maxpool_chain(
+                x, chain),
+            pool_chain=tuple(chain))
 
     for i, (pb, (k, out, s)) in enumerate(zip(params["stem"], cfg.stem)):
         h, w = -(-h // s), -(-w // s)
-        impls[f"stem{i}"] = conv_impl(pb, identity, dep, h, w, stride=s)
+        impls[f"stem{i}"] = conv_impl(pb, dep, h, w, stride=s)
         dep = f"stem{i}"
 
     for i, p in enumerate(params["modules"]):
         pooled = i in cfg.pool_between
-        if pooled:
-            h, w = -(-h // 2), -(-w // 2)
-        pre = memo1(lambda x: maxpool(x, 3, 2)) if pooled else identity
         nm = f"inc{i}"
-        impls[f"{nm}/1x1"] = conv_impl(p["b1"], pre, dep, h, w)
-        impls[f"{nm}/r3"] = conv_impl(p["r3"], pre, dep, h, w)
-        impls[f"{nm}/r5"] = conv_impl(p["r5"], pre, dep, h, w)
-        impls[f"{nm}/pp"] = conv_impl(
-            p["pp"], lambda x, pre=pre: maxpool(pre(x), 3, 1), dep, h, w)
-        impls[f"{nm}/3x3"] = conv_impl(p["b3"], identity, f"{nm}/r3", h, w)
-        impls[f"{nm}/5x5"] = conv_impl(p["b5"], identity, f"{nm}/r5", h, w)
+        if pooled:
+            impls[f"{nm}/pool"] = pool_impl(dep, ((3, 2),))
+            impls[f"{nm}/pppool"] = pool_impl(dep, ((3, 2), (3, 1)))
+            bdep = f"{nm}/pool"
+            h, w = -(-h // 2), -(-w // 2)
+        else:
+            impls[f"{nm}/pppool"] = pool_impl(dep, ((3, 1),))
+            bdep = dep
+        impls[f"{nm}/1x1"] = conv_impl(p["b1"], bdep, h, w)
+        impls[f"{nm}/r3"] = conv_impl(p["r3"], bdep, h, w)
+        impls[f"{nm}/r5"] = conv_impl(p["r5"], bdep, h, w)
+        impls[f"{nm}/pp"] = conv_impl(p["pp"], f"{nm}/pppool", h, w)
+        impls[f"{nm}/3x3"] = conv_impl(p["b3"], f"{nm}/r3", h, w)
+        impls[f"{nm}/5x5"] = conv_impl(p["b5"], f"{nm}/r5", h, w)
         impls[f"{nm}/join"] = OpImpl(
             deps=(f"{nm}/1x1", f"{nm}/3x3", f"{nm}/5x5", f"{nm}/pp"),
             fn=lambda *ys, algorithm=None: jnp.concatenate(ys, axis=-1),
@@ -369,7 +377,7 @@ def forward_plan(params, cfg: CNNConfig, images, plan, *, mesh=None,
 def plan_cnn(cfg: CNNConfig, batch: int, *, mesh=None, concurrent=True,
              max_group: int = 4, hbm_budget: float | None = None,
              vmem_budget: float | None = None, train: bool = False,
-             fuse_concat: bool = True):
+             fuse_concat: bool = True, fuse_pool: bool = True):
     """graph -> schedule -> executable plan for this CNN.
 
     Returns (Plan, Schedule).  This supersedes ``schedule_algorithms``: the
@@ -381,7 +389,11 @@ def plan_cnn(cfg: CNNConfig, batch: int, *, mesh=None, concurrent=True,
     outputs copy in as passthrough slices, and no standalone concat op
     remains on the fused path); ``fuse_concat=False`` keeps the
     standalone joins (the unfused baseline the benchmarks compare
-    against).
+    against).  ``fuse_pool`` (default) likewise streams every maxpool op
+    through the grouped launch that consumes it (``_absorb_pools`` ->
+    ``grouped_pooled`` / pooled ``grouped_concat`` groups — zero
+    standalone ``reduce_window`` launches on the fused path);
+    ``fuse_pool=False`` keeps the pooling primitives standalone.
 
     The mirrored backward plan (``core.plan.backward_plan``) is attached
     as ``plan.context["backward"]`` — the lowering/pricing of the grad
@@ -400,7 +412,7 @@ def plan_cnn(cfg: CNNConfig, batch: int, *, mesh=None, concurrent=True,
     sch = S.schedule(g, concurrent=concurrent, max_group=max_group,
                      train=train, **kw)
     plan = planlib.lower(g, sch, mesh=mesh, train=train,
-                         fuse_concat=fuse_concat, **kw)
+                         fuse_concat=fuse_concat, fuse_pool=fuse_pool, **kw)
     plan.context.update({"cfg": cfg, "batch": batch})
     plan.context["backward"] = planlib.backward_plan(g, plan, **kw)
     return plan, sch
@@ -411,6 +423,14 @@ def plan_cnn(cfg: CNNConfig, batch: int, *, mesh=None, concurrent=True,
 # ---------------------------------------------------------------------------
 
 def build_graph(cfg: CNNConfig, batch: int) -> OpGraph:
+    """Op-level DAG with the pooling primitives EXPLICIT: the inter-module
+    maxpool (``inc{i}/pool``) and each pool-proj pre-pool
+    (``inc{i}/pppool``) are ``maxpool`` ops — the separate launched
+    primitives they are in a cuDNN-style framework, and the ops the plan
+    layer's ``_absorb_pools`` streams into the grouped launches.  The
+    pool-proj pre-pool reads the RAW module input with its COMPOSED chain
+    ((3,2)+(3,1) for pooled modules), so the four branch convs of a
+    module still share one ready level (the quad the scheduler packs)."""
     g = OpGraph()
     h, w, c = cfg.img
     g.add(Op.make("input", "pointwise", elements=batch * h * w * c))
@@ -421,21 +441,31 @@ def build_graph(cfg: CNNConfig, batch: int) -> OpGraph:
         dep = f"stem{i}"
         h, w, c = -(-h // s), -(-w // s), out
     for i, m in enumerate(cfg.modules):
-        if i in cfg.pool_between:
-            h, w = -(-h // 2), -(-w // 2)
         nm = f"inc{i}"
+        pooled = i in cfg.pool_between
+        if pooled:
+            g.add(Op.make(f"{nm}/pool", "maxpool", n=batch, h=h, w=w, c=c,
+                          chain=((3, 2),)), [dep])
+            pp_chain = ((3, 2), (3, 1))
+        else:
+            pp_chain = ((3, 1),)
+        g.add(Op.make(f"{nm}/pppool", "maxpool", n=batch, h=h, w=w, c=c,
+                      chain=pp_chain), [dep])
+        branch_dep = f"{nm}/pool" if pooled else dep
+        if pooled:
+            h, w = -(-h // 2), -(-w // 2)
         g.add(Op.make(f"{nm}/1x1", "conv2d", n=batch, h=h, w=w, c=c, kh=1,
-                      kw=1, k=m.n1, stride=1), [dep])
+                      kw=1, k=m.n1, stride=1), [branch_dep])
         g.add(Op.make(f"{nm}/r3", "conv2d", n=batch, h=h, w=w, c=c, kh=1,
-                      kw=1, k=m.r3, stride=1), [dep])
+                      kw=1, k=m.r3, stride=1), [branch_dep])
         g.add(Op.make(f"{nm}/3x3", "conv2d", n=batch, h=h, w=w, c=m.r3,
                       kh=3, kw=3, k=m.n3, stride=1), [f"{nm}/r3"])
         g.add(Op.make(f"{nm}/r5", "conv2d", n=batch, h=h, w=w, c=c, kh=1,
-                      kw=1, k=m.r5, stride=1), [dep])
+                      kw=1, k=m.r5, stride=1), [branch_dep])
         g.add(Op.make(f"{nm}/5x5", "conv2d", n=batch, h=h, w=w, c=m.r5,
                       kh=5, kw=5, k=m.n5, stride=1), [f"{nm}/r5"])
         g.add(Op.make(f"{nm}/pp", "conv2d", n=batch, h=h, w=w, c=c, kh=1,
-                      kw=1, k=m.pp, stride=1), [dep])
+                      kw=1, k=m.pp, stride=1), [f"{nm}/pppool"])
         g.add(Op.make(f"{nm}/join", "pointwise",
                       elements=batch * h * w * m.out),
               [f"{nm}/1x1", f"{nm}/3x3", f"{nm}/5x5", f"{nm}/pp"])

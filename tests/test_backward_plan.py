@@ -94,23 +94,28 @@ def test_backward_plan_googlenet_zero_xla():
     multi = [g for g in bwd.groups if len(g.ops) > 1]
     assert len(multi) >= 18    # 2 grad co-exec groups per inception module
     for g in multi:
-        assert g.mode in ("grouped", "grouped_concat", "stacked"), g
+        assert g.mode in ("grouped", "grouped_concat", "grouped_pooled",
+                          "stacked"), g
     # the K×K critical-path conv grads co-execute in ONE combined launch
     # whose packing slices the joint cotangent (the absorbed join's grad)
     kxk = [g for g in multi
            if any(n.endswith("/3x3") or n.endswith("/5x5") for n in g.ops)]
     assert kxk and all(g.mode == "grouped_concat" for g in kxk), kxk
-    # forward mode mirrors backward mode group-for-group
+    # forward mode mirrors backward mode group-for-group (pools included)
     for fg, bg in zip(reversed(plan.groups), bwd.groups):
-        if fg.mode in ("grouped", "grouped_concat", "stacked"):
+        if fg.mode in ("grouped", "grouped_concat", "grouped_pooled",
+                       "stacked"):
             assert bg.mode == fg.mode, (fg, bg)
+        assert bg.pools == tuple(
+            (f"grad:{b}", f"grad:{p}") for b, p in fg.pools), (fg, bg)
     assert bwd.makespan > 0
     # the train driver's exact lowering (train=True packing + per-direction
     # budget checks, conv backward workspace charged) holds zero-xla too
     plan_tr, _ = CNN.plan_cnn(get_config("googlenet"), batch=32, train=True)
     assert plan_tr.context["backward"].groups_of_mode("xla") == []
     counts = plan_tr.mode_counts()
-    assert counts.get("grouped", 0) + counts.get("grouped_concat", 0) >= 15
+    assert counts.get("grouped", 0) + counts.get("grouped_concat", 0) \
+        + counts.get("grouped_pooled", 0) >= 18
 
 
 def test_backward_plan_budget_demotes_to_serial():
@@ -178,7 +183,8 @@ def test_full_plan_backward_matches_xla_reference(dtype, rtol, atol):
     cfg = _tiny_cfg()
     plan, _ = CNN.plan_cnn(cfg, batch=2)
     counts = plan.mode_counts()
-    assert counts.get("grouped", 0) + counts.get("grouped_concat", 0) >= 1
+    assert counts.get("grouped", 0) + counts.get("grouped_concat", 0) \
+        + counts.get("grouped_pooled", 0) >= 1
     params = CNN.init_params(cfg, jax.random.PRNGKey(0), dtype=dtype)
     batch = {"images": jax.random.normal(jax.random.PRNGKey(1),
                                          (2, *cfg.img), dtype),
@@ -321,13 +327,14 @@ def test_shared_x_dedup_lowers_to_one_wide_gemm(monkeypatch):
     wb = jax.random.normal(k3, (128, 32), jnp.float32) * 0.1
 
     calls = []
-    orig = kops.grouped_matmul
+    orig = kops.grouped_matmul_pooled   # the executor's entry point
+    # (delegates to the plain grouped kernel when nothing pools)
 
     def spy(xs, ws, bs=None, **kw):
         calls.append(len(list(xs)))
         return orig(xs, ws, bs, **kw)
 
-    monkeypatch.setattr(kops, "grouped_matmul", spy)
+    monkeypatch.setattr(kops, "grouped_matmul_pooled", spy)
 
     def impls(wa, wb, key):
         return {

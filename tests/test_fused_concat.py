@@ -304,16 +304,21 @@ def test_run_plan_grouped_concat_with_passthrough():
 # ---------------------------------------------------------------------------
 
 def _cfgs():
+    # sized so the 3x3/5x5 pair still wins co-execution under the
+    # gemm_shape-based pricing (an 8x8 module is too small for the
+    # scheduler's 2% improvement bar — the pair would run serial)
     return {
         # strided stem + one ragged module (unpooled)
-        "strided": CNNConfig(name="t1", img=(8, 8, 3), stem=((3, 8, 2),),
-                             modules=(InceptionSpec(16, 8, 24, 4, 8, 8),),
+        "strided": CNNConfig(name="t1", img=(12, 12, 3),
+                             stem=((3, 12, 2),),
+                             modules=(InceptionSpec(16, 12, 24, 4, 8, 8),),
                              pool_between=(), num_classes=5),
         # two modules with an inter-module maxpool (pooled path: the
-        # second module's branches — and its join — read pooled input)
-        "pooled": CNNConfig(name="t2", img=(8, 8, 3), stem=((3, 8, 1),),
-                            modules=(InceptionSpec(16, 8, 24, 4, 8, 8),
-                                     InceptionSpec(8, 8, 16, 4, 8, 8)),
+        # second module's branches — and its join — read pooled input,
+        # and the whole quad absorbs the inter-module pool)
+        "pooled": CNNConfig(name="t2", img=(16, 16, 3), stem=((3, 16, 1),),
+                            modules=(InceptionSpec(16, 16, 32, 4, 8, 8),
+                                     InceptionSpec(16, 16, 32, 4, 8, 8)),
                             pool_between=(1,), num_classes=5),
     }
 

@@ -272,8 +272,8 @@ def test_plan_cnn_googlenet_zero_xla_inception_groups():
     multi = [g for g in plan.groups if len(g.ops) > 1]
     assert len(multi) >= 18   # 2 co-exec groups per inception module
     for g in multi:
-        assert g.mode in ("grouped", "grouped_concat", "stacked", "fused",
-                          "spatial"), g
+        assert g.mode in ("grouped", "grouped_concat", "grouped_pooled",
+                          "stacked", "fused", "spatial"), g
     # the K×K critical-path convs co-execute instead of running serially —
     # and their launch absorbs the module's join (fused epilogue-concat)
     kxk = [g for g in multi
@@ -283,3 +283,9 @@ def test_plan_cnn_googlenet_zero_xla_inception_groups():
     assert not [g for g in plan.groups
                 if g.mode != "grouped_concat"
                 and any(n.endswith("/join") for n in g.ops)]
+    # and zero standalone maxpool (reduce_window) groups: pooling streams
+    # through the quad launches (the pool-proj pre-pool everywhere, the
+    # inter-module pool on pooled modules)
+    assert not [g for g in plan.groups
+                if any(n.endswith("/pool") or n.endswith("/pppool")
+                       for n in g.ops)]

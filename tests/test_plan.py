@@ -29,21 +29,26 @@ def test_lower_googlenet_mode_mix():
     group falls back to XLA interleaving."""
     plan, _ = CNN.plan_cnn(get_config("googlenet"), batch=32)
     modes = plan.mode_counts()
-    # >= one grouped-family launch per inception module, and every
-    # module's join absorbed into its grouped_concat launch
-    assert modes.get("grouped", 0) + modes.get("grouped_concat", 0) >= 9, \
-        modes
+    # two grouped-family launches per inception module: the pooled quad
+    # and the join-absorbing pair — and zero standalone pooling groups
+    assert modes.get("grouped", 0) + modes.get("grouped_concat", 0) \
+        + modes.get("grouped_pooled", 0) >= 18, modes
     assert modes.get("grouped_concat", 0) == 9, modes
+    assert modes.get("grouped_pooled", 0) == 9, modes
     assert modes.get("xla", 0) == 0, modes
     for g in plan.groups:
         if len(g.ops) > 1:
-            assert g.mode in ("grouped", "grouped_concat", "stacked"), g
+            assert g.mode in ("grouped", "grouped_concat",
+                              "grouped_pooled", "stacked"), g
             # a join rides a multi-op group only as an absorbed concat
             if g.mode == "grouped_concat":
                 assert g.join and g.join in g.ops, g
             else:
                 assert all("join" not in n for n in g.ops)
-    # the schedule's algorithm choices survive lowering
+        assert all(not n.endswith("/pool") and not n.endswith("/pppool")
+                   for n in g.ops), g
+    # the schedule's algorithm choices survive lowering (absorbed pool
+    # ops keep their entries on the absorbing groups)
     assert set(plan.algorithms) == set(
         CNN.build_graph(get_config("googlenet"), 32).ops)
 
@@ -81,11 +86,15 @@ def test_plan_makespan_and_algorithms_consistency():
     assert plan.makespan > 0
     assert plan.algorithms == sch.algorithms
     # every absorbed join collapses its singleton group into the
-    # grouped_concat launch; nothing else changes group count
+    # grouped_concat launch, every absorbed maxpool its reduce_window
+    # group into the consuming launch; nothing else changes group count
     absorbed = plan.mode_counts().get("grouped_concat", 0)
-    assert len(plan.groups) == len(sch.groups) - absorbed
+    g = CNN.build_graph(cfg, 2)
+    n_pools = sum(1 for op in g.ops.values() if op.kind == "maxpool")
+    assert len(plan.groups) == len(sch.groups) - absorbed - n_pools
     assert absorbed == len(cfg.modules)
-    plan_u, sch_u = CNN.plan_cnn(cfg, batch=2, fuse_concat=False)
+    plan_u, sch_u = CNN.plan_cnn(cfg, batch=2, fuse_concat=False,
+                                 fuse_pool=False)
     assert len(plan_u.groups) == len(sch_u.groups)
 
 
@@ -98,7 +107,7 @@ def test_execute_plan_matches_forward():
     the planned execution path is the same function as the plain forward."""
     cfg = get_reduced("googlenet")
     plan, _ = CNN.plan_cnn(cfg, batch=2)
-    assert plan.mode_counts().get("stacked", 0) >= 1
+    assert plan.mode_counts().get("grouped_pooled", 0) >= 1
     params = CNN.init_params(cfg, jax.random.PRNGKey(0))
     x = jax.random.normal(jax.random.PRNGKey(1), (2, *cfg.img), jnp.float32)
     want = CNN.forward(params, cfg, x)

@@ -1,0 +1,616 @@
+"""Pooled grouped launch (maxpool streamed through the grouped kernel):
+tap-view semantics, kernel equivalence, the single combined backward
+launch, pool absorption lowering + degrade, pool_profile pricing, and the
+zero-reduce_window end state on googlenet."""
+import dataclasses
+import importlib
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import kernels as K
+from repro.configs import get_config, get_reduced
+from repro.core import (Op, OpGraph, OpImpl, backward_plan, lower,
+                        pool_profile, profile, run_plan, serial_time)
+from repro.core.scheduler import CoGroup, Schedule
+from repro.kernels import ops as kops
+from repro.models import cnn as CNN
+from repro.models.cnn import maxpool, maxpool_chain
+
+gmm = importlib.import_module("repro.kernels.grouped_matmul")
+
+RAGGED_SETS = [
+    [(None, 60), (100, 129)],            # pooled + plain, unaligned
+    [(None, 16)],                        # pooled singleton
+    [(None, 96), (64, 16), (None, 208)],  # two pooled branches
+]
+
+
+def _pooled_branches(b, h, w, c, shapes, dtype, chain=((3, 1),), key=0):
+    """Branch set over a (B, H, W, C) activation: K_g=None branches pool
+    the activation with ``chain`` (tap views in, like the executor hands
+    the kernel); others take an independent (M, K_g) lhs."""
+    m_raw = b * h * w
+    oh, ow = h, w
+    for win, s in chain:
+        oh, ow = -(-oh // s), -(-ow // s)
+    m = b * oh * ow
+    ks = jax.random.split(jax.random.PRNGKey(key), 3 * len(shapes) + 1)
+    x4 = jnp.maximum(jax.random.normal(ks[-1], (b, h, w, c), dtype), 0)
+    taps = tuple(t.reshape(-1, c) for t in K.pool_tap_views(x4, chain))
+    xs, ws, bs = [], [], []
+    for i, (kg, ng) in enumerate(shapes):
+        if kg is None:
+            xs.append(taps)
+            kg = c
+        else:
+            xs.append(jax.random.normal(ks[3 * i], (m, kg), dtype) * 0.3)
+        ws.append(jax.random.normal(ks[3 * i + 1], (kg, ng), dtype) * 0.3)
+        bs.append(jax.random.normal(ks[3 * i + 2], (ng,), dtype))
+    return x4, xs, ws, bs, m
+
+
+# ---------------------------------------------------------------------------
+# tap views: the pool-as-layout decomposition
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("chain", [((3, 1),), ((3, 2),), ((3, 2), (3, 1))])
+def test_pool_tap_views_match_reduce_window(chain):
+    """max over the tap views == reduce_window maxpool chain, forward AND
+    gradient — including the first-argmax tie routing on ReLU-zero-heavy
+    inputs (odd extents exercise the asymmetric SAME padding)."""
+    x = jnp.maximum(jax.random.normal(jax.random.PRNGKey(0), (2, 7, 6, 3)),
+                    0.0)
+    want = maxpool_chain(x, chain)
+    got = K.pool_from_taps(K.pool_tap_views(x, chain))
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+    wt = jnp.arange(1, want.size + 1, dtype=jnp.float32).reshape(want.shape)
+    g_ref = jax.grad(lambda x: (maxpool_chain(x, chain) * wt).sum())(x)
+    g_tap = jax.grad(lambda x: (K.pool_from_taps(
+        K.pool_tap_views(x, chain)) * wt).sum())(x)
+    np.testing.assert_array_equal(np.asarray(g_tap), np.asarray(g_ref))
+
+
+def test_pool_from_taps_propagates_nan_like_reduce_window():
+    """A NaN upstream must poison its pool windows on the fused path
+    exactly as the reduce_window baseline does — a bare `v > acc` select
+    would silently drop it, making the two documented-equivalent paths
+    diverge precisely when someone is debugging a NaN."""
+    x = jnp.maximum(jax.random.normal(jax.random.PRNGKey(0), (1, 5, 5, 2)),
+                    0.0)
+    x = x.at[0, 2, 3, 1].set(jnp.nan)
+    want = maxpool(x, 3, 1)
+    got = K.pool_from_taps(K.pool_tap_views(x, ((3, 1),)))
+    np.testing.assert_array_equal(np.isnan(np.asarray(got)),
+                                  np.isnan(np.asarray(want)))
+    finite = ~np.isnan(np.asarray(want))
+    np.testing.assert_array_equal(np.asarray(got)[finite],
+                                  np.asarray(want)[finite])
+    # and through the kernel's in-kernel fold (the pool scratch uses the
+    # same NaN-aware select); the GEMM then spreads a pooled NaN across
+    # its output row (NaN * 0 = NaN), so the row pattern is the check
+    taps = [t.reshape(-1, 2) for t in K.pool_tap_views(x, ((3, 1),))]
+    w = jnp.eye(2, dtype=jnp.float32)
+    (y,) = gmm.grouped_matmul_pooled([taps], [w], interpret=True)
+    rows = np.isnan(np.asarray(want).reshape(-1, 2)).any(axis=1)
+    np.testing.assert_array_equal(np.isnan(np.asarray(y)).any(axis=1), rows)
+    np.testing.assert_array_equal(np.isnan(np.asarray(y)).all(axis=1), rows)
+
+
+def test_pool_cotangent_taps_first_argmax():
+    taps = [jnp.array([[1., 0.], [0., 2.]]), jnp.array([[1., 3.], [0., 2.]])]
+    pooled = K.pool_from_taps(taps)
+    d = jnp.ones((2, 2))
+    d0, d1 = gmm.pool_cotangent_taps(taps, pooled, d)
+    # ties (both rows of col 0, and (1,1)) go wholly to the FIRST maximal
+    # tap, never split — only (0,1) belongs to tap 1 outright
+    np.testing.assert_array_equal(np.asarray(d0),
+                                  np.array([[1., 0.], [1., 1.]]))
+    np.testing.assert_array_equal(np.asarray(d1),
+                                  np.array([[0., 1.], [0., 0.]]))
+
+
+# ---------------------------------------------------------------------------
+# kernel equivalence
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("shapes", RAGGED_SETS)
+@pytest.mark.parametrize("dtype,tol", [(jnp.float32, 1e-5),
+                                       (jnp.bfloat16, 5e-2)])
+def test_pooled_kernel_matches_reference(shapes, dtype, tol):
+    """The in-kernel pool stage (tap tiles maxed into the pooled-lhs
+    scratch) + ragged GEMMs + fused bias/ReLU vs the XLA oracle."""
+    _, xs, ws, bs, m = _pooled_branches(2, 7, 6, 20, shapes, dtype)
+    got = kops.grouped_matmul_pooled(xs, ws, bs, relu=True)
+    want = K.grouped_matmul_pooled_ref(xs, ws, bs, relu=True)
+    for y, yw, (_, ng) in zip(got, want, shapes):
+        assert y.shape == (m, ng) and y.dtype == dtype
+        np.testing.assert_allclose(np.asarray(y, np.float32),
+                                   np.asarray(yw, np.float32),
+                                   rtol=tol, atol=tol)
+
+
+@pytest.mark.parametrize("chain", [((3, 2),), ((3, 2), (3, 1))])
+@pytest.mark.parametrize("tap_limit", [None, 1000])
+def test_pooled_kernel_strided_and_chained(chain, tap_limit):
+    """Stride-2 and composed pools (the inter-module maxpool and the
+    pool-proj of a pooled module) stream through the same launch — both
+    with the in-kernel pool stage (tap_limit=1000 forces it even for the
+    81-view chain) and with the pack-time fold the POOL_TAP_LIMIT
+    heuristic applies to pathological tap counts (tap_limit=None)."""
+    x4, xs, ws, bs, m = _pooled_branches(2, 8, 8, 16, [(None, 40)],
+                                         jnp.float32, chain=chain)
+    (got,) = gmm.grouped_matmul_pooled(xs, ws, bs, relu=True,
+                                       interpret=True, tap_limit=tap_limit)
+    pooled = maxpool_chain(x4, chain).reshape(-1, 16)
+    want = jax.nn.relu(pooled @ ws[0] + bs[0])
+    assert got.shape[0] == m
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_pooled_concat_kernel_matches_reference():
+    """Pooling + GEMMs + epilogue + the join assembly in ONE launch."""
+    shapes = [(None, 60), (100, 129), (None, 16)]
+    _, xs, ws, bs, m = _pooled_branches(2, 7, 6, 20, shapes, jnp.float32)
+    offs, total = [19, 98, 260], 300     # unaligned offsets + gaps
+    got = kops.grouped_matmul_pooled_concat(xs, ws, bs, offsets=offs,
+                                            total=total, relu=True)
+    want = K.grouped_matmul_pooled_concat_ref(xs, ws, bs, offsets=offs,
+                                              total=total, relu=True)
+    assert got.shape == (m, total)
+    for off, (_, n) in zip(offs, shapes):
+        np.testing.assert_allclose(np.asarray(got[:, off:off + n]),
+                                   np.asarray(want[:, off:off + n]),
+                                   rtol=1e-5, atol=1e-5)
+
+
+def test_pooled_delegates_when_nothing_pools():
+    """All-plain branch sets take the unmodified grouped kernel (same
+    launch counter, no pool descriptor overhead)."""
+    xs = [jax.random.normal(jax.random.PRNGKey(i), (50, k)) * 0.3
+          for i, k in enumerate((100, 300))]
+    ws = [jax.random.normal(jax.random.PRNGKey(9 + i), (k, n)) * 0.3
+          for i, (k, n) in enumerate(((100, 60), (300, 129)))]
+    kops.reset_launch_counts()
+    got = kops.grouped_matmul_pooled(xs, ws)
+    assert kops.KERNEL_LAUNCHES.get("grouped_matmul") == 1
+    assert "grouped_matmul_pooled" not in kops.KERNEL_LAUNCHES
+    for y, yw in zip(got, K.grouped_matmul_ref(xs, ws)):
+        np.testing.assert_allclose(np.asarray(y), np.asarray(yw),
+                                   rtol=1e-5, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# VJP: one combined backward launch, oracle-exact gradients
+# ---------------------------------------------------------------------------
+
+def test_pooled_vjp_is_one_combined_launch():
+    shapes = [(None, 60), (100, 129)]
+    _, xs, ws, bs, _ = _pooled_branches(2, 6, 6, 12, shapes, jnp.float32)
+
+    def loss(xs, ws, bs):
+        ys = kops.grouped_matmul_pooled(xs, ws, bs, relu=True)
+        return sum((y * y).sum() for y in ys)
+
+    kops.reset_launch_counts()
+    jax.grad(loss, argnums=(0, 1, 2))(xs, ws, bs)
+    assert kops.KERNEL_LAUNCHES.get("grouped_matmul_pooled") == 1
+    assert kops.KERNEL_LAUNCHES.get("grouped_matmul_bwd") == 1
+    assert "grouped_matmul_dw" not in kops.KERNEL_LAUNCHES
+
+
+@pytest.mark.parametrize("dtype,tol", [(jnp.float32, 3e-4),
+                                       (jnp.bfloat16, 5e-2)])
+def test_pooled_vjp_matches_reference_grads(dtype, tol):
+    """Gradients through the pooled launch vs autodiff of the XLA
+    reduce_window oracle — the pooled-input cotangent must match EXACTLY
+    on ties (ReLU zeros make window ties the common case, and the
+    first-argmax scatter mirrors reduce_window's select semantics)."""
+    b, h, w, c = 2, 6, 6, 12
+    x4 = jnp.maximum(jax.random.normal(jax.random.PRNGKey(0), (b, h, w, c),
+                                       dtype), 0)
+    w0 = jax.random.normal(jax.random.PRNGKey(1), (c, 40), dtype) * 0.3
+    b0 = jax.random.normal(jax.random.PRNGKey(2), (40,), dtype)
+    x1 = jax.random.normal(jax.random.PRNGKey(3), (b * h * w, 70),
+                           dtype) * 0.3
+    w1 = jax.random.normal(jax.random.PRNGKey(4), (70, 33), dtype) * 0.3
+    b1 = jax.random.normal(jax.random.PRNGKey(5), (33,), dtype)
+
+    def loss(x4, x1, ws, bs):
+        taps = tuple(t.reshape(-1, c)
+                     for t in K.pool_tap_views(x4, ((3, 1),)))
+        ys = kops.grouped_matmul_pooled([taps, x1], ws, bs, relu=True)
+        return sum((y.astype(jnp.float32) ** 2).sum() for y in ys)
+
+    def loss_ref(x4, x1, ws, bs):
+        p = maxpool(x4, 3, 1).reshape(-1, c)
+        ys = K.grouped_matmul_ref([p, x1], ws, bs, relu=True)
+        return sum((y.astype(jnp.float32) ** 2).sum() for y in ys)
+
+    got = jax.grad(loss, argnums=(0, 1, 2, 3))(x4, x1, (w0, w1), (b0, b1))
+    want = jax.grad(loss_ref, argnums=(0, 1, 2, 3))(x4, x1, (w0, w1),
+                                                    (b0, b1))
+    for a, bb in zip(jax.tree.leaves(got), jax.tree.leaves(want)):
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(bb, np.float32),
+                                   rtol=tol, atol=tol)
+
+
+def test_pooled_concat_vjp_under_jit():
+    shapes = [(None, 60), (100, 33)]
+    _, xs, ws, bs, _ = _pooled_branches(2, 6, 6, 12, shapes, jnp.float32)
+
+    def loss(xs, ws, bs):
+        y = kops.grouped_matmul_pooled_concat(
+            xs, ws, bs, offsets=(0, 60), total=93, relu=True)
+        return (y * y).sum()
+
+    got = jax.jit(jax.grad(loss, argnums=(0, 1, 2)))(xs, ws, bs)
+    eag = jax.grad(loss, argnums=(0, 1, 2))(xs, ws, bs)
+    for a, b in zip(jax.tree.leaves(got), jax.tree.leaves(eag)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-4, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# cost model: the pool term
+# ---------------------------------------------------------------------------
+
+def test_pool_profile_prices_the_standalone_launch():
+    op = Op.make("p", "maxpool", n=2, h=16, w=16, c=64, chain=((3, 2),))
+    pr = pool_profile(op)
+    e_in, e_out = 2 * 16 * 16 * 64, 2 * 8 * 8 * 64
+    assert pr.hbm_bytes == (e_in + e_out) * op.dtype_bytes
+    assert pr.flops == 9.0 * e_out
+    assert pr.workspace_bytes == 0.0
+    # a chained pool materializes the intermediate as workspace
+    op2 = Op.make("p2", "maxpool", n=2, h=16, w=16, c=64,
+                  chain=((3, 2), (3, 1)))
+    pr2 = pool_profile(op2)
+    assert pr2.workspace_bytes == e_out * op.dtype_bytes
+    assert pr2.hbm_bytes > pr.hbm_bytes
+
+
+def test_fused_pool_zeroes_the_term():
+    """The absorbed plan is cheaper than the unfused one by at least the
+    standalone pool rows (the fused rider is zero)."""
+    cfg = get_reduced("googlenet")
+    plan_f, _ = CNN.plan_cnn(cfg, batch=2)
+    plan_u, _ = CNN.plan_cnn(cfg, batch=2, fuse_pool=False)
+    g = CNN.build_graph(cfg, 2)
+    pool_terms = sum(
+        pool_profile(op).time for op in g.ops.values()
+        if op.kind == "maxpool")
+    assert pool_terms > 0
+    assert plan_f.makespan <= plan_u.makespan - pool_terms * 0.99
+
+
+# ---------------------------------------------------------------------------
+# lowering: pool absorption
+# ---------------------------------------------------------------------------
+
+def _pool_fork_graph(consumer_mode="grouped"):
+    """src -> pool -> two ragged (or uniform, for the stacked case)
+    matmul branches."""
+    g = OpGraph()
+    g.add(Op.make("src", "pointwise", elements=256 * 128))
+    g.add(Op.make("pl", "maxpool", n=4, h=8, w=8, c=128, chain=((3, 1),)),
+          ["src"])
+    widths = (384, 32) if consumer_mode == "grouped" else (128, 128)
+    g.add(Op.make("a", "matmul", m=256, k=128, n=widths[0]), ["pl"])
+    g.add(Op.make("b", "matmul", m=256, k=128, n=widths[1]), ["pl"])
+    sch = Schedule([
+        CoGroup(["src"], {"src": "vpu"}, 0.0),
+        CoGroup(["pl"], {"pl": "reduce_window"}, 0.0),
+        CoGroup(["a", "b"], {"a": "mxu128", "b": "mxu128"}, 1.0),
+    ])
+    return g, sch
+
+
+def test_lower_absorbs_pool_into_grouped():
+    g, sch = _pool_fork_graph()
+    plan = lower(g, sch)
+    assert [gr.mode for gr in plan.groups] == ["serial", "grouped_pooled"]
+    pg = plan.groups[1]
+    assert sorted(pg.pools) == [("a", "pl"), ("b", "pl")]
+    # backward mirror: same combined launch, grad:-prefixed pools
+    bwd = backward_plan(g, plan)
+    assert bwd.groups[0].mode == "grouped_pooled"
+    assert sorted(bwd.groups[0].pools) == [("grad:a", "grad:pl"),
+                                           ("grad:b", "grad:pl")]
+    # opting out keeps the standalone reduce_window group
+    plan_u = lower(g, sch, fuse_pool=False)
+    assert [gr.mode for gr in plan_u.groups] == ["serial", "serial",
+                                                 "grouped"]
+    assert plan.makespan < plan_u.makespan
+
+
+def test_lower_pool_absorption_flips_stacked_to_grouped():
+    """Uniform-shape consumers would lower stacked — absorbing the pool
+    moves them onto the grouped kernel (the pad-to-max kernel has no pool
+    stage), which must still beat stacked + the standalone pool."""
+    g, sch = _pool_fork_graph(consumer_mode="stacked")
+    plan_u = lower(g, sch, fuse_pool=False)
+    assert plan_u.groups[-1].mode == "stacked"
+    plan = lower(g, sch)
+    assert plan.groups[-1].mode == "grouped_pooled"
+    assert len(plan.groups) == 2         # pool group absorbed
+
+
+def test_lower_pool_absorbed_by_multiple_groups():
+    """A pool whose consumers span TWO grouped groups replicates into
+    both (each launch pools its own taps) — the standalone group is
+    dropped once and the aggregate win check credits its saving once."""
+    g = OpGraph()
+    g.add(Op.make("src", "pointwise", elements=256 * 128))
+    g.add(Op.make("pl", "maxpool", n=4, h=8, w=8, c=128, chain=((3, 1),)),
+          ["src"])
+    for n, w1, w2 in (("a", 384, 32), ("c", 200, 72)):
+        g.add(Op.make(n, "matmul", m=256, k=128, n=w1), ["pl"])
+        g.add(Op.make(n + "2", "matmul", m=256, k=128, n=w2), ["pl"])
+    sch = Schedule([
+        CoGroup(["src"], {"src": "vpu"}, 0.0),
+        CoGroup(["pl"], {"pl": "reduce_window"}, 0.0),
+        CoGroup(["a", "a2"], {"a": "mxu128", "a2": "mxu128"}, 1.0),
+        CoGroup(["c", "c2"], {"c": "mxu128", "c2": "mxu128"}, 1.0),
+    ])
+    plan = lower(g, sch)
+    pooled = plan.groups_of_mode("grouped_pooled")
+    assert len(pooled) == 2
+    assert all(len(gr.pools) == 2 for gr in pooled)
+    assert not any(gr.ops == ("pl",) for gr in plan.groups)
+
+
+def test_run_plan_degrade_missing_pool_impl_raises_clearly():
+    """A degraded pooled group whose absorbed pool op has NO impl at all
+    fails with an explicit error naming the missing binding (not a bare
+    KeyError from deep inside the branch fn)."""
+    plan, impls, x, _ = _exec_fixture()
+    impls_nopool = {n: im for n, im in impls.items() if n != "pl"}
+    with pytest.raises(KeyError, match="absorbed pool op 'pl' has no"):
+        run_plan(impls_nopool, {"x0": x}, plan)
+
+
+def test_lower_pool_absorption_respects_c2_budget():
+    """The pooled launch's tap-expanded X stack is extra workspace the C2
+    gate must see: under a budget the unpooled grouped group fits but the
+    tap expansion does not, the pool stays a standalone launch."""
+    g, sch = _pool_fork_graph()
+    # mxu128 matmul profiles carry zero workspace, so the unpooled group
+    # always fits; the 8 extra tap tiles per lhs tile do not
+    plan = lower(g, sch, hbm_budget=1e3)
+    assert any(gr.ops == ("pl",) for gr in plan.groups)
+    assert "grouped_pooled" not in plan.mode_counts()
+    plan_ok = lower(g, sch)
+    assert "grouped_pooled" in plan_ok.mode_counts()
+
+
+def test_lower_pool_absorption_budget_accumulates_across_pools():
+    """A group absorbing a SECOND pool must count the first pool's
+    tap-expansion in its footprint: under a budget that fits one
+    absorption but not two, the second pool stays standalone."""
+    g = OpGraph()
+    g.add(Op.make("src", "pointwise", elements=256 * 128))
+    g.add(Op.make("p1", "maxpool", n=4, h=8, w=8, c=128, chain=((3, 1),)),
+          ["src"])
+    g.add(Op.make("p2", "maxpool", n=4, h=8, w=8, c=128, chain=((3, 1),)),
+          ["src"])
+    g.add(Op.make("a", "matmul", m=256, k=128, n=384), ["p1"])
+    g.add(Op.make("b", "matmul", m=256, k=128, n=32), ["p2"])
+    sch = Schedule([
+        CoGroup(["src"], {"src": "vpu"}, 0.0),
+        CoGroup(["p1"], {"p1": "reduce_window"}, 0.0),
+        CoGroup(["p2"], {"p2": "reduce_window"}, 0.0),
+        CoGroup(["a", "b"], {"a": "mxu128", "b": "mxu128"}, 1.0),
+    ])
+    # one pool's tap expansion is 8 * 256*128*2B = 512KiB
+    one_pool = 8 * 256 * 128 * 2
+    plan = lower(g, sch, hbm_budget=1.5 * one_pool)
+    pooled = plan.groups_of_mode("grouped_pooled")
+    assert len(pooled) == 1 and len(pooled[0].pools) == 1
+    assert sum(1 for gr in plan.groups
+               if gr.ops in (("p1",), ("p2",))) == 1
+    # a roomier budget takes both
+    plan2 = lower(g, sch, hbm_budget=3 * one_pool)
+    assert len(plan2.groups_of_mode("grouped_pooled")[0].pools) == 2
+
+
+def test_lower_keeps_pool_with_non_groupable_consumer():
+    """A pool with any consumer outside a grouped-family group stays a
+    standalone launch (absorption is all-or-nothing)."""
+    g = OpGraph()
+    g.add(Op.make("src", "pointwise", elements=256 * 128))
+    g.add(Op.make("pl", "maxpool", n=4, h=8, w=8, c=128, chain=((3, 1),)),
+          ["src"])
+    g.add(Op.make("a", "matmul", m=256, k=128, n=384), ["pl"])
+    g.add(Op.make("tap", "pointwise", elements=256 * 128), ["pl"])
+    sch = Schedule([
+        CoGroup(["src"], {"src": "vpu"}, 0.0),
+        CoGroup(["pl"], {"pl": "reduce_window"}, 0.0),
+        CoGroup(["a"], {"a": "mxu128"}, 1.0),
+        CoGroup(["tap"], {"tap": "vpu"}, 0.0),
+    ])
+    plan = lower(g, sch)
+    assert any(gr.ops == ("pl",) for gr in plan.groups)
+    assert not any(gr.pools for gr in plan.groups)
+
+
+def test_googlenet_single_launch_per_module_with_pooling():
+    """The tentpole end state on FULL googlenet: every inception module
+    lowers to exactly two grouped-family launches per direction (the quad
+    with its pooling absorbed + the join-absorbing pair) — zero
+    standalone maxpool groups, zero standalone joins, zero XLA
+    fallbacks, forward and backward."""
+    plan, _ = CNN.plan_cnn(get_config("googlenet"), batch=32, train=True)
+    counts = plan.mode_counts()
+    assert counts.get("grouped_pooled") == 9       # one pooled quad/module
+    assert counts.get("grouped_concat") == 9       # one concat pair/module
+    assert plan.groups_of_mode("xla") == []
+    assert not [g for g in plan.groups
+                if any(n.endswith("/pool") or n.endswith("/pppool")
+                       for n in g.ops)]
+    assert not [g for g in plan.groups
+                if g.mode != "grouped_concat"
+                and any(n.endswith("/join") for n in g.ops)]
+    # every pool-proj branch pools in-launch; pooled modules pool the
+    # whole quad (the inter-module maxpool absorbed too)
+    quads = plan.groups_of_mode("grouped_pooled")
+    assert all(any(b.endswith("/pp") for b, _ in g.pools) for g in quads)
+    assert sum(1 for g in quads if len(g.pools) == 4) == 3  # pool_between
+    bwd = plan.context["backward"]
+    bcounts = bwd.mode_counts()
+    assert bcounts.get("grouped_pooled") == 9
+    assert bcounts.get("grouped_concat") == 9
+    assert bwd.groups_of_mode("xla") == []
+    assert all(g.pools for g in bwd.groups_of_mode("grouped_pooled"))
+
+
+# ---------------------------------------------------------------------------
+# execution: pooled groups run, degrade, and match the reference
+# ---------------------------------------------------------------------------
+
+def _exec_fixture():
+    g, sch = _pool_fork_graph()
+    plan = lower(g, sch)
+    assert plan.groups[-1].mode == "grouped_pooled"
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    x = jnp.maximum(jax.random.normal(ks[0], (4, 8, 8, 128)), 0) * 0.5
+    wa = jax.random.normal(ks[1], (128, 384), jnp.float32) * 0.1
+    wb = jax.random.normal(ks[2], (128, 32), jnp.float32) * 0.1
+
+    def conv1x1(w):
+        return OpImpl(
+            deps=("pl",),
+            fn=lambda x, algorithm=None, w=w: jax.nn.relu(
+                x.reshape(-1, 128) @ w).reshape(4, 8, 8, -1),
+            gemm_x=lambda x: x.reshape(-1, 128), gemm_w=w,
+            gemm_post=lambda y: jax.nn.relu(y),
+            gemm_bias=jnp.zeros((w.shape[1],), jnp.float32),
+            gemm_relu=True,
+            gemm_reshape=lambda y: y.reshape(4, 8, 8, -1))
+
+    impls = {
+        "src": OpImpl(deps=("x0",), fn=lambda x, algorithm=None: x),
+        "pl": OpImpl(deps=("src",),
+                     fn=lambda x, algorithm=None: maxpool(x, 3, 1),
+                     pool_chain=((3, 1),)),
+        "a": conv1x1(wa), "b": conv1x1(wb),
+    }
+    want_pool = maxpool(x, 3, 1).reshape(-1, 128)
+    want = {"a": jax.nn.relu(want_pool @ wa).reshape(4, 8, 8, -1),
+            "b": jax.nn.relu(want_pool @ wb).reshape(4, 8, 8, -1)}
+    return plan, impls, x, want
+
+
+def test_run_plan_grouped_pooled_executes_in_one_launch():
+    plan, impls, x, want = _exec_fixture()
+    kops.reset_launch_counts()
+    timings: dict = {}
+    env = run_plan(impls, {"x0": x}, plan, timings=timings)
+    # ONE pooled grouped kernel, and the pooled activation is never
+    # materialized in the env (no standalone reduce_window ran)
+    assert kops.KERNEL_LAUNCHES.get("grouped_matmul_pooled") == 1
+    assert "pl" not in env
+    assert "grouped_pooled" in timings
+    for n in ("a", "b"):
+        np.testing.assert_allclose(np.asarray(env[n]), np.asarray(want[n]),
+                                   rtol=2e-4, atol=2e-4)
+
+
+def test_run_plan_grouped_pooled_degrades_gracefully():
+    """A missing pool_chain (fn-only pool impl) degrades the group to the
+    per-op path: the pool materializes via its reduce_window fn, values
+    match, and the timing key records the degrade."""
+    plan, impls, x, want = _exec_fixture()
+    impls_nochain = dict(impls)
+    impls_nochain["pl"] = dataclasses.replace(impls["pl"], pool_chain=None)
+    timings: dict = {}
+    env = run_plan(impls_nochain, {"x0": x}, plan, timings=timings)
+    assert "grouped_pooled->xla" in timings
+    assert "pl" in env                    # the standalone pool ran
+    for n in ("a", "b"):
+        np.testing.assert_allclose(np.asarray(env[n]), np.asarray(want[n]),
+                                   rtol=2e-4, atol=2e-4)
+
+
+def test_run_plan_pooled_wide_dedup_single_tap_set():
+    """Uniform-K branches pooling the SAME pool op dedup into one wide
+    pooled GEMM: one tap set, one in-kernel pool stage."""
+    plan, impls, x, want = _exec_fixture()
+    impls = {n: (dataclasses.replace(im, gemm_x_key=("shared", 128))
+                 if n in ("a", "b") else im) for n, im in impls.items()}
+    kops.reset_launch_counts()
+    env = run_plan(impls, {"x0": x}, plan)
+    assert kops.KERNEL_LAUNCHES.get("grouped_matmul_pooled") == 1
+    for n in ("a", "b"):
+        np.testing.assert_allclose(np.asarray(env[n]), np.asarray(want[n]),
+                                   rtol=2e-4, atol=2e-4)
+
+
+def test_grouped_pooled_gradcheck_through_run_plan():
+    plan, impls_base, x, _ = _exec_fixture()
+    ks = jax.random.split(jax.random.PRNGKey(7), 2)
+    wa = jax.random.normal(ks[0], (128, 384), jnp.float32) * 0.1
+    wb = jax.random.normal(ks[1], (128, 32), jnp.float32) * 0.1
+
+    def build(wa, wb):
+        import dataclasses as dc
+        impls = dict(impls_base)
+        impls["a"] = dc.replace(impls_base["a"], gemm_w=wa)
+        impls["b"] = dc.replace(impls_base["b"], gemm_w=wb)
+        return impls
+
+    def loss(x, wa, wb):
+        env = run_plan(build(wa, wb), {"x0": x}, plan)
+        return (env["a"] ** 2).sum() + (env["b"] ** 2).sum()
+
+    def loss_ref(x, wa, wb):
+        p = maxpool(x, 3, 1).reshape(-1, 128)
+        return (jax.nn.relu(p @ wa) ** 2).sum() \
+            + (jax.nn.relu(p @ wb) ** 2).sum()
+
+    got = jax.grad(loss, argnums=(0, 1, 2))(x, wa, wb)
+    want = jax.grad(loss_ref, argnums=(0, 1, 2))(x, wa, wb)
+    for a, b in zip(jax.tree.leaves(got), jax.tree.leaves(want)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-3, atol=1e-3)
+
+
+# ---------------------------------------------------------------------------
+# the full fused plan has no reduce_window anywhere
+# ---------------------------------------------------------------------------
+
+def _jaxpr_primitives(jaxpr, acc):
+    for e in jaxpr.eqns:
+        acc.add(str(e.primitive))
+        for v in e.params.values():
+            if hasattr(v, "jaxpr"):
+                _jaxpr_primitives(v.jaxpr, acc)
+            if isinstance(v, (list, tuple)):
+                for vv in v:
+                    if hasattr(vv, "jaxpr"):
+                        _jaxpr_primitives(vv.jaxpr, acc)
+    return acc
+
+
+def test_fused_plan_jaxpr_has_zero_reduce_window():
+    """The acceptance criterion at the strongest level: the traced fused
+    forward contains NO reduce_window primitive at any nesting depth —
+    pooling exists only as the kernel's pool stage (tap-view layout ops
+    around the launch).  The unfused plan keeps them (the baseline)."""
+    cfg = get_reduced("googlenet")     # has an inter-module pool
+    plan, _ = CNN.plan_cnn(cfg, batch=2)
+    params = CNN.init_params(cfg, jax.random.PRNGKey(0))
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, *cfg.img), jnp.float32)
+    jx = jax.make_jaxpr(lambda p, x: CNN.forward_plan(p, cfg, x, plan))(
+        params, x)
+    prims = _jaxpr_primitives(jx.jaxpr, set())
+    assert not [p for p in prims if "reduce_window" in p], prims
+    plan_u, _ = CNN.plan_cnn(cfg, batch=2, fuse_pool=False)
+    jx_u = jax.make_jaxpr(lambda p, x: CNN.forward_plan(p, cfg, x, plan_u))(
+        params, x)
+    prims_u = _jaxpr_primitives(jx_u.jaxpr, set())
+    assert [p for p in prims_u if "reduce_window" in p]

@@ -5,8 +5,10 @@ import numpy as np
 import pytest  # noqa: F401
 from conftest import given, settings, st  # hypothesis, or skip-stubs
 
+from repro import kernels as K
 from repro.core import Op, OpGraph, schedule
 from repro.data import SyntheticLM
+from repro.kernels import ops as kops
 from repro.models import layers as L
 from repro.roofline.analyze import HloModule
 
@@ -57,6 +59,118 @@ def test_concurrent_never_slower_than_serial(n, seed):
     serial = schedule(g, concurrent=False).makespan
     conc = schedule(g, concurrent=True).makespan
     assert conc <= serial * 1.001
+
+
+# ---------------------------------------------------------------------------
+# grouped kernel family: generated ragged branch sets vs the XLA oracle
+# ---------------------------------------------------------------------------
+
+# unaligned K/N widths straddling the 128 block boundary, odd M rows,
+# both dtypes — the corners hand-picked RAGGED_SETS enumerations miss
+_MS = (33, 77, 130)
+_KS = (17, 64, 100, 129, 300)
+_NS = (16, 60, 129, 208)
+_DTYPES = ("float32", "bfloat16")
+
+
+def _gen_branch_set(m, kidx, nidx, g, dtype, seed=0):
+    """Deterministic ragged branch set from index choices (shared by the
+    hypothesis strategies and the seeded fallback sweep)."""
+    dt = jnp.dtype(dtype)
+    ks = jax.random.split(jax.random.PRNGKey(seed), 3 * g)
+    shapes = [(_KS[(kidx + i) % len(_KS)], _NS[(nidx + i) % len(_NS)])
+              for i in range(g)]
+    xs = [jax.random.normal(ks[3 * i], (m, kg), dt) * 0.3
+          for i, (kg, _) in enumerate(shapes)]
+    ws = [jax.random.normal(ks[3 * i + 1], (kg, ng), dt) * 0.3
+          for i, (kg, ng) in enumerate(shapes)]
+    bs = [jax.random.normal(ks[3 * i + 2], (ng,), dt)
+          for i, (_, ng) in enumerate(shapes)]
+    return shapes, xs, ws, bs
+
+
+def _tol(dtype):
+    return 1e-4 if dtype == "float32" else 6e-2
+
+
+def _check_grouped_family(m, kidx, nidx, g, dtype, seed):
+    """Forward + VJP equivalence of grouped / grouped_concat /
+    grouped_pooled against the per-branch XLA oracle on one generated
+    branch set."""
+    shapes, xs, ws, bs = _gen_branch_set(m, kidx, nidx, g, dtype, seed)
+    tol = _tol(dtype)
+
+    def close(a, b):
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(b, np.float32),
+                                   rtol=tol, atol=tol)
+
+    # grouped forward
+    got = K.grouped_matmul(xs, ws, bs, relu=True)
+    want = K.grouped_matmul_ref(xs, ws, bs, relu=True)
+    for a, b in zip(got, want):
+        close(a, b)
+
+    # grouped_concat forward (gap after branch 0 exercises passthrough)
+    offs, off = [], 7
+    for _, n in shapes:
+        offs.append(off)
+        off += n + 3
+    y = kops.grouped_matmul_concat(xs, ws, bs, offsets=offs, total=off,
+                                   relu=True)
+    yref = K.grouped_matmul_concat_ref(xs, ws, bs, offsets=offs, total=off,
+                                       relu=True)
+    for o, (_, n) in zip(offs, shapes):
+        close(y[:, o:o + n], yref[:, o:o + n])
+
+    # grouped_pooled forward: branch 0's lhs becomes a pooled activation
+    # (tap views of a (1, m, K0, 1)-shaped NHWC raw input -> same M)
+    x4 = xs[0].reshape(1, m, shapes[0][0], 1)
+    taps = tuple(t.reshape(m, shapes[0][0])
+                 for t in K.pool_tap_views(x4, ((3, 1),)))
+    xs_p = [taps] + xs[1:]
+    got = kops.grouped_matmul_pooled(xs_p, ws, bs, relu=True)
+    want = K.grouped_matmul_pooled_ref(xs_p, ws, bs, relu=True)
+    for a, b in zip(got, want):
+        close(a, b)
+
+    # VJP equivalence on the grouped path (pooled branch included)
+    def loss(fn):
+        return lambda xs, ws, bs: sum(
+            (y.astype(jnp.float32) ** 2).sum()
+            for y in fn(xs, ws, bs, relu=True))
+
+    ga = jax.grad(loss(kops.grouped_matmul_pooled),
+                  argnums=(0, 1, 2))(xs_p, ws, bs)
+    gb = jax.grad(loss(K.grouped_matmul_pooled_ref),
+                  argnums=(0, 1, 2))(xs_p, ws, bs)
+    for a, b in zip(jax.tree.leaves(ga), jax.tree.leaves(gb)):
+        close(a, b)
+
+
+@settings(max_examples=6, deadline=None)
+@given(m=st.sampled_from(_MS), kidx=st.integers(0, len(_KS) - 1),
+       nidx=st.integers(0, len(_NS) - 1), g=st.integers(1, 4),
+       dtype=st.sampled_from(_DTYPES), seed=st.integers(0, 100))
+def test_grouped_family_matches_oracle_property(m, kidx, nidx, g, dtype,
+                                                seed):
+    """Hypothesis sweep: any ragged branch set (mixed K/N, unaligned
+    widths, f32/bf16) runs the grouped family to the same values and
+    gradients as the per-branch XLA oracle."""
+    _check_grouped_family(m, kidx, nidx, g, dtype, seed)
+
+
+@pytest.mark.parametrize("m,kidx,nidx,g,dtype,seed", [
+    (33, 0, 1, 2, "float32", 3),
+    (77, 2, 0, 3, "bfloat16", 5),
+    (130, 4, 3, 1, "float32", 7),
+    (64, 1, 2, 4, "float32", 11),
+])
+def test_grouped_family_matches_oracle_seeded(m, kidx, nidx, g, dtype,
+                                              seed):
+    """Deterministic slice of the property sweep — runs even on hosts
+    without hypothesis (where the @given test skips)."""
+    _check_grouped_family(m, kidx, nidx, g, dtype, seed)
 
 
 # ---------------------------------------------------------------------------
