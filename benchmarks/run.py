@@ -27,7 +27,9 @@ Wall times are XLA-CPU (this host); modeled columns are TPU-v5e analytic.
 Besides the CSV, writes ``BENCH_plan.json`` (machine-readable perf
 baseline: branch-GEMM mode wall/modeled times forward+backward, googlenet
 forward/backward mode counts and modeled train-step makespan, the
-plan_makespan rows).  ``--smoke`` runs a seconds-scale subset (fewer
+cross-module-streaming column — chained-plan mode counts, modeled
+makespans and traced-jaxpr ``googlenet_launches`` per direction for the
+default AND ``chain_modules=True`` plans — and the plan_makespan rows).  ``--smoke`` runs a seconds-scale subset (fewer
 reps, no plan_makespan; same batch=2 module — batch 1 is unrepresentative
 of the grouped-vs-stacked backward) and writes ``BENCH_plan.smoke.json``
 instead
@@ -149,6 +151,45 @@ def main(smoke: bool = False) -> None:
         "backward": bwd_plan.makespan,
         "train_step": plan.makespan + bwd_plan.makespan,
     }
+
+    # cross-module streaming: the chained plan's column next to the
+    # default — modeled makespans (both directions) and the traced-jaxpr
+    # launch counts the ci.sh launch-ceiling gate pins.  Counts are
+    # batch-invariant (plan structure, not data), so the trace runs at
+    # batch 2 to keep the smoke pass seconds-scale.
+    import jax
+    import jax.numpy as jnp
+    from repro.core import launch_count as launch_lc
+    gcfg = get_config("googlenet")
+    plan_c, _ = CNN.plan_cnn(gcfg, batch=32, train=True, chain_modules=True)
+    bwd_c = plan_c.context["backward"]
+    bench_json["googlenet_chained_mode_counts"] = plan_c.mode_counts()
+    bench_json["googlenet_chained_makespan_modeled_s"] = {
+        "forward": plan_c.makespan,
+        "backward": bwd_c.makespan,
+        "train_step": plan_c.makespan + bwd_c.makespan,
+    }
+    bench_json["googlenet_chained_modeled_ok"] = (
+        plan_c.makespan < plan.makespan and bwd_c.makespan < bwd_plan.makespan)
+
+    cparams = CNN.init_params(gcfg, jax.random.PRNGKey(0))
+    cbatch = {"images": jnp.zeros((2,) + gcfg.img, jnp.float32),
+              "labels": jnp.zeros((2,), jnp.int32)}
+    pc2, _ = CNN.plan_cnn(gcfg, batch=2, train=True, chain_modules=True)
+    pu2, _ = CNN.plan_cnn(gcfg, batch=2, train=True)
+    launches = {}
+    for lname, lplan in (("default", pu2), ("chained", pc2)):
+        def _loss(p, b, _pl=lplan):
+            return CNN.loss_fn(p, gcfg, b, plan=_pl)[0]
+        fwd = launch_lc.count_launches(_loss, cparams, cbatch)
+        both = launch_lc.count_grad_launches(_loss, cparams, cbatch)
+        launches[lname] = {
+            "per_forward": fwd["total"],
+            "per_backward": max(both["total"] - fwd["total"], 0),
+            "pallas_per_forward": fwd.get("pallas_call", 0),
+            "grad_trace_total": both["total"],
+        }
+    bench_json["googlenet_launches"] = launches
 
     if not smoke:
         _emit(stacked_branch_gemm_bench())

@@ -38,7 +38,15 @@ make bench-smoke
 #     item).  The backward wall is the SAME combined launch either way
 #     (only the tap fold differs), so it gets the tight
 #     POOLED_BWD_WALL_TOL;
-#   - googlenet's backward plan lowers with zero XLA fallbacks.
+#   - googlenet's backward plan lowers with zero XLA fallbacks;
+#   - cross-module streaming: the chained googlenet forward stays under
+#     LAUNCH_CEILING_CHAINED_FWD counting EVERY surviving launch-like
+#     primitive (pallas_call + conv + reduce_window + concatenate in the
+#     traced jaxpr — the honest total, not just our kernels), the default
+#     plan's pallas count stays under LAUNCH_CEILING_UNCHAINED_PALLAS,
+#     the chained trace is strictly cheaper than the default in both
+#     directions, and the chained modeled makespan beats the unchained
+#     one forward AND backward (googlenet_chained_modeled_ok).
 python - <<'PY'
 import json
 
@@ -50,6 +58,11 @@ BWD_WALL_TOL = 1.0
 FUSED_WALL_TOL = 1.10
 POOLED_WALL_TOL = 1.5
 POOLED_BWD_WALL_TOL = 1.15
+# Launch ceilings (keep in sync with tests/test_chained.py): chained
+# googlenet forward = 10 launches today, ceiling 12; default plan = 21
+# pallas kernels today, ceiling 22.
+LAUNCH_CEILING_CHAINED_FWD = 12
+LAUNCH_CEILING_UNCHAINED_PALLAS = 22
 
 d = json.load(open("BENCH_plan.smoke.json"))
 bg = d["branch_gemm"]["bwd_wall_us"]
@@ -85,5 +98,17 @@ assert fg["pooled_fwd_launches_per_group"] == 1, fg
 assert fg["pooled_bwd_launches_per_group"] == 1, fg
 assert fg["pooled_standalone_pool_groups"] == 0, fg
 assert d["googlenet_standalone_pool_groups"] == 0, d
+
+# cross-module streaming launch ceilings + modeled ordering
+l = d["googlenet_launches"]
+assert l["chained"]["per_forward"] <= LAUNCH_CEILING_CHAINED_FWD, l
+assert l["default"]["pallas_per_forward"] <= LAUNCH_CEILING_UNCHAINED_PALLAS, l
+assert l["chained"]["per_forward"] < l["default"]["per_forward"], l
+assert l["chained"]["grad_trace_total"] < l["default"]["grad_trace_total"], l
+assert d["googlenet_chained_modeled_ok"], \
+    f"chained modeled makespan not ahead: " \
+    f"{d['googlenet_chained_makespan_modeled_s']} vs " \
+    f"{d['googlenet_makespan_modeled_s']}"
 print("smoke guardrails ok:", fg["wall_us"], bg)
+print("launch ceilings ok:", l)
 PY

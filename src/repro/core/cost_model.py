@@ -577,3 +577,72 @@ def spatial_time(profiles: list[OpProfile], chips: int,
         max(pr.compute_time / c, pr.memory_time / c)
         for pr, c in zip(profiles, split)
     )
+
+
+# ---------------------------------------------------------------------------
+# chained launches (cross-module streaming)
+# ---------------------------------------------------------------------------
+
+def chained_profiles(ops: list[Op], ring=frozenset()) -> list[OpProfile]:
+    """``gemm_profiles`` with ring-consumer branches repriced for the
+    chained launch: a branch whose lhs streams from the in-kernel VMEM
+    ring (its producer runs one wave ahead in the SAME launch) never
+    reads its input activation from HBM and never materializes an im2col
+    patch buffer — drop the M*K lhs read from traffic and the patch
+    workspace from the C2 budget.  Every other term (weights, bias,
+    output write) stands: chained outputs still land in HBM as the next
+    launch's panel operands."""
+    ring = frozenset(ring)
+    profs = []
+    for op, pr in zip(ops, gemm_profiles(ops)):
+        if op.name in ring:
+            s = gemm_shape(op)
+            assert s is not None, op
+            m, k, _ = s
+            lhs = m * k * op.dtype_bytes
+            pr = dataclasses.replace(
+                pr,
+                hbm_bytes=max(pr.hbm_bytes - lhs, 0.0),
+                workspace_bytes=max(pr.workspace_bytes - lhs, 0.0))
+        profs.append(pr)
+    return profs
+
+
+def chained_time(phase_ops: list[list[Op]], ring=frozenset()) -> float:
+    """Modeled makespan of ONE chained launch over ``phase_ops`` (one op
+    list per phase, Shi-et-al.-style honest pricing rather than
+    assertion): the union co-executes like one big grouped launch —
+    MXU work and HBM traffic serialize across ALL branches of ALL
+    phases, compute overlapping memory — with ring consumers' lhs
+    traffic dropped (``chained_profiles``) and NO concat rider (the next
+    launch consumes the padded panels in place via its lhs-source
+    descriptors).  On top rides the pipeline-FILL term the wave schedule
+    costs: a P-phase chain runs mb + P - 1 waves for mb row blocks, so
+    the steady-state makespan stretches by (P-1)/(mb+P-1)."""
+    ops = [op for ph in phase_ops for op in ph]
+    t = co_execution_time(chained_profiles(ops, ring))
+    m = max(gemm_shape(op)[0] for op in ops)
+    mb = max(-(-m // 128), 1)
+    nph = len(phase_ops)
+    return t * (1.0 + (nph - 1) / (mb + nph - 1))
+
+
+def chained_time_bwd(phase_ops: list[list[Op]],
+                     algorithms: dict | None = None) -> float:
+    """Backward makespan of a chained launch: the VJP mirrors the chain
+    in REVERSE phase order with one combined grouped launch (masked dx +
+    dw/db) per phase — phases cannot backward-co-execute with each other
+    because a ring consumer's lhs cotangent feeds the producer phase's
+    dy.  Ring consumers' lhs is recomputed from the residual panels
+    (HBM reads the forward skipped), so no traffic is dropped here —
+    the backward win is launch count and the vanished join split, not
+    bytes."""
+    algs = algorithms or {}
+    total = 0.0
+    for ops in phase_ops:
+        per = [backward_profiles(op, algs.get(op.name)
+                                 or best_algorithm(op)[0])
+               for op in ops]
+        total += co_execution_time([p[0] for p in per]
+                                   + [p[1] for p in per])
+    return total

@@ -36,6 +36,17 @@ Modes (mirroring ``core/branch_parallel.py``):
             pool+GEMM+epilogue+concat launch.  The grad group mirrors as
             the same ONE combined launch, the pooling cotangent scattered
             through the first-argmax window mask in its unpacking.
+  grouped_chained — cross-MODULE streaming (opt-in via
+            ``lower(chain_modules=True)``): a module's quad group, the
+            concat-pair riding on its reductions, and stem conv runs
+            merge into ONE launch running their phases in a lag-1 wave
+            schedule (``grouped_matmul_chained``).  Phase p+1 branches
+            ring-consume phase p's freshly computed row blocks from VMEM
+            (K*K convs as K^2 shifted tap-GEMMs), the join never
+            materializes — the launch's padded panels flow to the NEXT
+            chained launch as a ``ChainPanels`` value addressed in place
+            by panel lhs-source descriptors — and the grad group mirrors
+            as one combined dx+dw/db launch per phase in reverse order.
   stacked — same-GEMM-shape branches fuse into ONE Pallas kernel with a
             branch grid axis (``kernels/branch_matmul.py``); heterogeneous
             output widths are padded to a common N and sliced back.  Kept
@@ -63,14 +74,15 @@ from __future__ import annotations
 import dataclasses
 from typing import Any, Callable
 
+import jax
 import jax.numpy as jnp
 
 from repro.core import cost_model as cm
 from repro.core.graph import OpGraph
 from repro.core.scheduler import Schedule
 
-MODES = ("grouped", "grouped_concat", "grouped_pooled", "stacked", "fused",
-         "spatial", "serial", "xla")
+MODES = ("grouped", "grouped_concat", "grouped_pooled", "grouped_chained",
+         "stacked", "fused", "spatial", "serial", "xla")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -86,10 +98,37 @@ class ExecGroup:
     # pooled in-launch from the pool op's input (grouped_pooled, and
     # grouped_concat groups whose branches pool)
     pools: tuple[tuple[str, str], ...] = ()
+    # grouped_chained: the launch's phase structure — one tuple of op
+    # names per phase (the join, if any, rides ``join`` and appears in
+    # ``ops`` but not in ``chain``).  Phase p+1 branches whose producer
+    # sits in phase p consume it through the in-kernel VMEM ring.
+    chain: tuple[tuple[str, ...], ...] = ()
 
     def __post_init__(self):
         if self.mode not in MODES:
             raise ValueError(f"unknown mode {self.mode}")
+
+
+@dataclasses.dataclass
+class ChainPanels:
+    """The composite value a chained launch leaves in ``env``: the padded
+    per-phase output panels of ``grouped_matmul_chained`` plus the
+    (panel, col-block base, true width) segment layout of the logical
+    join, in join order.  The next chained launch consumes it IN PLACE
+    (panel lhs-source descriptors, or a per-segment pooled fold) — no
+    concat, no reshape; any non-chained consumer materializes it to NHWC
+    through ``_env_val`` (one concatenate: exactly the join the chain
+    otherwise deleted)."""
+    panels: tuple                       # padded (Mp, ncb*blk) arrays
+    segments: tuple[tuple[int, int, int], ...]   # (panel, col block, n)
+    m: int                              # true rows (B*H*W)
+    h: int
+    w: int
+    blk: int = 128
+
+    @property
+    def width(self) -> int:
+        return sum(n for _, _, n in self.segments)
 
 
 @dataclasses.dataclass
@@ -330,10 +369,206 @@ def _absorb_pools(graph: OpGraph, groups: list[ExecGroup], *,
     return [g for g in out if g is not None]
 
 
+def _chain_feasible(graph: OpGraph, phase0: list[str], branches: list[str],
+                    join: str, *, block: int = 128) -> bool:
+    """Geometry/topology gates for merging a quad group (phase 0) with the
+    grouped_concat pair (phase 1) feeding off it into ONE chained launch:
+
+      * every phase-1 branch is a stride-1 conv whose single producer is a
+        phase-0 op and whose halo fits the ring window — the kernel loads
+        row blocks i-1/i/i+1 into a (3*bm, blk) window and slices at
+        bm+delta, so |delta| = (kh//2)*W + kw//2 must stay <= bm (= block);
+      * phase-0 ops read no phase-0 op (the wave schedule runs a phase's
+        branches at the same lag — intra-phase chaining has no ring slot);
+      * nothing escapes the launch: every phase-0 output is consumed only
+        by phase-1 branches or the join, and the join reads only in-launch
+        branches (the ChainPanels segments must all come from this launch);
+      * one shared GEMM M across every branch of both phases (the wave
+        schedule advances all phases over the same row blocks).
+    """
+    qset, bset = set(phase0), set(branches)
+    for b in branches:
+        op = graph.ops.get(b)
+        preds = graph.pred[b]
+        if (op is None or op.kind != "conv2d"
+                or op.p.get("stride", 1) != 1
+                or len(preds) != 1 or not preds <= qset):
+            return False
+        halo = (op.p.get("kh", 1) // 2) * op.p["w"] + op.p.get("kw", 1) // 2
+        if halo > block:
+            return False
+    for n in phase0:
+        if graph.pred[n] & qset:
+            return False
+        if not graph.succ[n] <= bset | {join}:
+            return False
+    if not graph.pred[join] <= qset | bset:
+        return False
+    ms = {(_gemm_shape(graph.ops[n]) or (None,))[0] for n in phase0 + branches}
+    return None not in ms and len(ms) == 1
+
+
+def _chain_budgets_ok(graph: OpGraph, phases: list[list[str]], ring, *,
+                      hbm_budget: float, vmem_budget: float,
+                      block: int = 128) -> bool:
+    """C2 re-check on the chained launch: the HBM workspace of its
+    chained-priced GEMM lowering (ring consumers drop their patch buffer —
+    their lhs never exists outside VMEM) plus the launch's ring scratch
+    against the VMEM budget: 3 wave slots per ring column, the (3*bm, blk)
+    shift window and the f32 accumulator."""
+    ops = [graph.ops[n] for ph in phases for n in ph]
+    profs = cm.chained_profiles(ops, ring)
+    if sum(p.workspace_bytes for p in profs) > hbm_budget:
+        return False
+    allnames = {m for ph in phases for m in ph}
+    consumed: set[str] = set()
+    for ph in phases:
+        for n in ph:
+            if n in ring:
+                consumed |= graph.pred[n] & allnames
+    nring = sum(-(-graph.ops[n].p["k"] // block) for n in consumed)
+    eb = max(op.dtype_bytes for op in ops)
+    ring_vmem = (3 * nring + 3) * block * block * eb + block * block * 4
+    return sum(p.vmem_bytes for p in profs) + ring_vmem <= vmem_budget
+
+
+def _chain_modules(graph: OpGraph, groups: list[ExecGroup], *,
+                   hbm_budget: float = cm.HBM_BYTES * 0.25,
+                   vmem_budget: float = cm.VMEM_BYTES,
+                   block: int = 128) -> list[ExecGroup]:
+    """Chain grouped launches ACROSS module boundaries (the cross-module
+    streaming pass, after ``_absorb_pools`` + ``_absorb_concat_joins``).
+
+    Two rewrites, both producing ``grouped_chained`` groups that execute
+    as ONE ``grouped_matmul_chained`` launch (kernels/grouped_matmul.py)
+    running their phases in a lag-1 wave schedule — phase p+1 consumes
+    phase p's freshly computed row blocks from an in-kernel VMEM ring,
+    never touching HBM for that lhs:
+
+      A. a quad group (grouped/grouped_pooled — e.g. an inception module's
+         1x1/r3/r5/pp) merges with the grouped_concat pair riding on its
+         reductions (3x3/5x5 + join) into a two-phase launch.  The join
+         vanishes entirely: the launch's padded per-phase panels ARE the
+         module output (a ``ChainPanels`` value), consumed in place by the
+         next chained launch via panel lhs-source descriptors — the
+         concat/copy the epilogue-concat mode still paid is gone.
+      B. maximal runs of singleton serial conv groups (the stem) fold into
+         one multi-phase launch, each conv a phase ring-consuming its
+         predecessor — K*K convs stream as K^2 shifted tap-GEMMs.
+
+    Gates: ``_chain_feasible`` (topology + ring-halo geometry),
+    ``_chain_budgets_ok`` (C2), and a strict modeled win vs the groups
+    merged (``cost_model.chained_time`` — co-execution over all phases
+    with ring lhs traffic dropped, stretched by the wave-schedule fill
+    factor).  Impl-level requirements (bias+ReLU epilogue, chain_geom)
+    are the executor's to verify — a chained group whose bindings don't
+    carry them degrades per-op like every other mode."""
+    out: list[ExecGroup | None] = list(groups)
+    # --- pass A: quad + pair -> one two-phase chained launch -------------
+    for idx in range(len(out)):
+        q = out[idx]
+        if q is None or q.mode not in ("grouped", "grouped_pooled"):
+            continue
+        match = None
+        for jdx in range(idx + 1, len(out)):
+            pg = out[jdx]
+            if pg is None or pg.mode != "grouped_concat" or not pg.join:
+                continue
+            branches = [n for n in pg.ops if n != pg.join]
+            if {p for n in branches for p in graph.pred[n]} <= set(q.ops):
+                match = (jdx, pg, branches)
+                break
+        if match is None:
+            continue
+        jdx, pg, branches = match
+        if not _chain_feasible(graph, list(q.ops), branches, pg.join,
+                               block=block):
+            continue
+        phases = [list(q.ops), branches]
+        ring = frozenset(branches)
+        if not _chain_budgets_ok(graph, phases, ring,
+                                 hbm_budget=hbm_budget,
+                                 vmem_budget=vmem_budget, block=block):
+            continue
+        phase_ops = [[graph.ops[n] for n in ph] for ph in phases]
+        t = cm.chained_time(phase_ops, ring)
+        if t >= q.modeled_time + pg.modeled_time:
+            continue
+        algs = dict(q.algorithms)
+        algs.update(pg.algorithms)
+        out[idx] = ExecGroup(
+            "grouped_chained", q.ops + pg.ops, algs, t,
+            "cross-module chain: reduction outputs stream to the K*K "
+            "convs through the VMEM ring and the module output stays a "
+            "panel composite (no join, no concat)",
+            join=pg.join, pools=q.pools + pg.pools,
+            chain=(tuple(q.ops), tuple(branches)))
+        out[jdx] = None
+    out = [g for g in out if g is not None]
+    # --- pass B: serial conv runs -> one multi-phase chained launch ------
+    sidx: dict[str, int] = {}
+    for i, g in enumerate(out):
+        if g.mode == "serial" and len(g.ops) == 1:
+            op = graph.ops.get(g.ops[0])
+            if op is not None and op.kind == "conv2d" \
+                    and _gemm_shape(op) is not None:
+                sidx[g.ops[0]] = i
+    dead: set[int] = set()
+    used: set[str] = set()
+    for name in list(sidx):
+        if name in used:
+            continue
+        run = [name]
+        cur = name
+        while True:
+            succ = graph.succ[cur]
+            if len(succ) != 1:
+                break
+            (nxt,) = succ
+            if nxt not in sidx or nxt in used or graph.pred[nxt] != {cur}:
+                break
+            opn = graph.ops[nxt]
+            if opn.p.get("stride", 1) != 1:
+                break
+            halo = (opn.p.get("kh", 1) // 2) * opn.p["w"] \
+                + opn.p.get("kw", 1) // 2
+            if halo > block:
+                break
+            if _gemm_shape(opn)[0] != _gemm_shape(graph.ops[cur])[0]:
+                break
+            run.append(nxt)
+            cur = nxt
+        used.update(run)
+        if len(run) < 2:
+            continue
+        phases = [[n] for n in run]
+        ring = frozenset(run[1:])
+        if not _chain_budgets_ok(graph, phases, ring,
+                                 hbm_budget=hbm_budget,
+                                 vmem_budget=vmem_budget, block=block):
+            continue
+        phase_ops = [[graph.ops[n]] for n in run]
+        t = cm.chained_time(phase_ops, ring)
+        base = sum(out[sidx[n]].modeled_time for n in run)
+        if t >= base:
+            continue
+        algs: dict[str, str] = {}
+        for n in run:
+            algs.update(out[sidx[n]].algorithms)
+        out[sidx[run[0]]] = ExecGroup(
+            "grouped_chained", tuple(run), algs, t,
+            "serial-conv chain: each conv a phase ring-consuming its "
+            "predecessor (K*K convs as K^2 shifted tap-GEMMs)",
+            chain=tuple((n,) for n in run))
+        dead.update(sidx[n] for n in run[1:])
+    return [g for i, g in enumerate(out) if g is not None and i not in dead]
+
+
 def lower(graph: OpGraph, schedule: Schedule, *, mesh=None,
           hbm_budget: float = cm.HBM_BYTES * 0.25,
           vmem_budget: float = cm.VMEM_BYTES, train: bool = False,
-          fuse_concat: bool = True, fuse_pool: bool = True) -> Plan:
+          fuse_concat: bool = True, fuse_pool: bool = True,
+          chain_modules: bool = False) -> Plan:
     """Lower a Schedule to an executable Plan.
 
     Mode choice per CoGroup: budget-infeasible or singleton -> serial;
@@ -408,6 +643,12 @@ def lower(graph: OpGraph, schedule: Schedule, *, mesh=None,
                                vmem_budget=vmem_budget)
     if fuse_concat:
         groups = _absorb_concat_joins(graph, groups)
+    if chain_modules:
+        # cross-module streaming (opt-in): chain the absorbed launches —
+        # quad + concat-pair pairs and serial conv runs — into
+        # grouped_chained groups (see ``_chain_modules``)
+        groups = _chain_modules(graph, groups, hbm_budget=hbm_budget,
+                                vmem_budget=vmem_budget)
     return Plan(groups, context={"mesh": mesh})
 
 
@@ -465,6 +706,8 @@ def backward_plan(graph: OpGraph, plan: Plan, *,
         "grouped_pooled": "mirror: ONE combined launch, pooling cotangent "
                           "scattered through the argmax mask in its "
                           "unpacking",
+        "grouped_chained": "mirror: reverse-phase chain — ONE combined "
+                           "masked-dx + dw/db launch per phase",
         "stacked": "mirror: stacked kernel VJP on the backward GEMMs",
         "serial": "per-op VJPs",
         "fused": "fused VJP pulls back per-op",
@@ -486,6 +729,15 @@ def backward_plan(graph: OpGraph, plan: Plan, *,
                 branch_ops, g.algorithms, mode="grouped_concat",
                 join=graph.ops[g.join])
             reason = _REASON[mode]
+        elif g.mode == "grouped_chained" and feasible and g.chain:
+            # the chained VJP mirrors the chain in REVERSE phase order —
+            # one combined grouped launch per phase (a ring consumer's lhs
+            # cotangent seeds the producer phase's dy, so phases cannot
+            # backward-co-execute with each other)
+            phase_ops = [[graph.ops[n] for n in ph] for ph in g.chain]
+            mode, t = "grouped_chained", cm.chained_time_bwd(phase_ops,
+                                                             g.algorithms)
+            reason = _REASON[mode]
         elif g.mode in ("grouped", "grouped_pooled", "stacked") and feasible:
             mode, t = cm.group_execution_time_bwd(ops, g.algorithms,
                                                   mode=g.mode)
@@ -497,13 +749,16 @@ def backward_plan(graph: OpGraph, plan: Plan, *,
             mode, t = "serial", sum(p.time for p in bprofs)
             reason = ("budget-infeasible (C2 fallback)"
                       if g.mode in ("grouped", "grouped_concat",
-                                    "grouped_pooled", "stacked")
+                                    "grouped_pooled", "grouped_chained",
+                                    "stacked")
                       else _REASON[g.mode])
         groups.append(ExecGroup(
             mode, tuple(f"grad:{n}" for n in g.ops),
             {f"grad:{n}": a for n, a in g.algorithms.items()}, t, reason,
             join=f"grad:{g.join}" if g.join else "",
-            pools=tuple((f"grad:{b}", f"grad:{p}") for b, p in g.pools)))
+            pools=tuple((f"grad:{b}", f"grad:{p}") for b, p in g.pools),
+            chain=tuple(tuple(f"grad:{n}" for n in ph)
+                        for ph in reversed(g.chain)) if g.chain else ()))
     return Plan(groups, context={"forward": plan})
 
 
@@ -542,6 +797,10 @@ class OpImpl:
           input into tap views (``kernels.pool_tap_views``) and the
           consuming branch's ``gemm_x`` maps each view; ``fn`` stays the
           standalone ``reduce_window`` chain (serial/degrade baseline).
+      chain_geom — convs only: (kh, kw, stride, cin, oh, ow), the raw
+          spatial geometry a ``grouped_chained`` launch needs to build
+          ring tap-GEMM descriptors, panel-block weight layouts and the
+          border masks — information ``gemm_x``'s closure hides.
     """
     deps: tuple[str, ...]
     fn: Callable[..., Any]
@@ -555,10 +814,31 @@ class OpImpl:
     stream_z: Callable[..., Any] | None = None
     stream_post: Callable[..., Any] | None = None
     pool_chain: tuple | None = None
+    chain_geom: tuple | None = None
+
+
+def _materialize_chain(v: ChainPanels):
+    """NHWC composite of a ChainPanels — the ONE concatenate a chained
+    launch deleted, paid back only when a non-chained consumer (degrade
+    path, custom graphs) actually needs the assembled tensor."""
+    parts = [v.panels[p][:v.m, cb * v.blk: cb * v.blk + n]
+             for p, cb, n in v.segments]
+    x2 = parts[0] if len(parts) == 1 else jnp.concatenate(parts, axis=-1)
+    return x2.reshape(-1, v.h, v.w, x2.shape[-1])
+
+
+def _env_val(env: dict, d: str):
+    """Read ``env[d]``, materializing (and caching back) a ChainPanels for
+    consumers that expect the plain NHWC value."""
+    v = env[d]
+    if isinstance(v, ChainPanels):
+        v = _materialize_chain(v)
+        env[d] = v
+    return v
 
 
 def _dep_args(impl: OpImpl, env: dict):
-    return [env[d] for d in impl.deps]
+    return [_env_val(env, d) for d in impl.deps]
 
 
 def _has_gemm_views(impl: OpImpl) -> bool:
@@ -631,7 +911,8 @@ def _branch_lhs(group: ExecGroup, impls, env, names):
             pname = pools[n]
             if pname not in views:
                 pimpl = impls[pname]
-                vs = pool_tap_views(env[pimpl.deps[0]], pimpl.pool_chain)
+                vs = pool_tap_views(_env_val(env, pimpl.deps[0]),
+                                    pimpl.pool_chain)
                 views[pname] = pool_from_taps(vs) \
                     if len(vs) > POOL_TAP_LIMIT else vs
             v = views[pname]
@@ -706,6 +987,31 @@ def _shared_x_wide(impls, names) -> bool:
     return len({impls[n].gemm_w.shape[0] for n in names}) == 1
 
 
+def _dedup_buckets(impls, names, pools) -> list[list[str]]:
+    """Order-preserving PARTIAL shared-X dedup: branches with equal
+    (deps, gemm_x_key, K, absorbed pool) promise the identical GEMM lhs
+    and bucket together — each multi-branch bucket becomes one wide
+    sub-GEMM of the launch (lhs read once, weights concatenated along N)
+    while the remaining singletons ride the same launch as ragged
+    branches.  Generalizes ``_shared_x_wide``'s all-or-nothing condition:
+    e.g. an inception quad's 1x1/r3/r5 trio dedups even though the
+    pool-proj branch reads a different (pooled) input.  ``gemm_x_key is
+    None`` (the default) never buckets."""
+    buckets: list[list[str]] = []
+    keyof: dict = {}
+    for n in names:
+        i = impls[n]
+        key = None if i.gemm_x_key is None else (
+            i.deps, i.gemm_x_key, i.gemm_w.shape[0], pools.get(n))
+        if key is not None and key in keyof:
+            buckets[keyof[key]].append(n)
+        else:
+            if key is not None:
+                keyof[key] = len(buckets)
+            buckets.append([n])
+    return buckets
+
+
 def _run_grouped(group: ExecGroup, impls: dict[str, OpImpl], env: dict,
                  interpret):
     # ragged, fused epilogue; pooled branches hand the launch their tap
@@ -714,32 +1020,36 @@ def _run_grouped(group: ExecGroup, impls: dict[str, OpImpl], env: dict,
     from repro.kernels.ops import grouped_matmul_pooled
     names = group.ops
     pools = dict(group.pools)
-    ws = [impls[n].gemm_w for n in names]
     fusable = _grouped_fusable(impls, names)
-    if len(names) > 1 and _shared_x_wide(impls, names) \
-            and len({pools.get(n) for n in names}) == 1:
-        # uniform-K branches over one X: concatenate weights along N into
-        # ONE wide GEMM — the shared input is read once instead of G
-        # times, and the wide GEMM's VJP keeps the backward deduped too
-        # (one dx, one wide dw/db, split by the concat's own pullback).
-        # Branches pooling the SAME pool op dedup too: one tap set, one
-        # in-kernel pool stage for the whole wide GEMM.
-        x = _branch_lhs(group, impls, env, names[:1])[0]
+    buckets = _dedup_buckets(impls, names, pools)
+    if len(buckets) < len(names):
+        # shared-lhs buckets concatenate weights along N into ONE wide
+        # sub-GEMM — the shared input is read (and, when pooled, tap-
+        # folded) once per bucket instead of once per branch, and the
+        # wide GEMM's VJP keeps the backward deduped too (one dx, one
+        # wide dw/db, split by the concat's own pullback).  Singleton
+        # buckets stay ragged branches of the SAME launch.
+        xs = [_branch_lhs(group, impls, env, bk[:1])[0] for bk in buckets]
+        ws_b = [impls[bk[0]].gemm_w if len(bk) == 1 else
+                jnp.concatenate([impls[n].gemm_w for n in bk], axis=1)
+                for bk in buckets]
         if fusable:
-            (y,) = grouped_matmul_pooled(
-                [x], [jnp.concatenate(ws, axis=1)],
-                [jnp.concatenate([impls[n].gemm_bias for n in names])],
-                relu=True, interpret=interpret)
+            bs_b = [impls[bk[0]].gemm_bias if len(bk) == 1 else
+                    jnp.concatenate([impls[n].gemm_bias for n in bk])
+                    for bk in buckets]
+            ys = grouped_matmul_pooled(xs, ws_b, bs_b, relu=True,
+                                       interpret=interpret)
         else:
-            (y,) = grouped_matmul_pooled([x], [jnp.concatenate(ws, axis=1)],
-                                         interpret=interpret)
-        off = 0
-        for n, w in zip(names, ws):
-            sl = y[:, off:off + w.shape[1]]
-            env[n] = impls[n].gemm_reshape(sl) if fusable \
-                else impls[n].gemm_post(sl)
-            off += w.shape[1]
+            ys = grouped_matmul_pooled(xs, ws_b, interpret=interpret)
+        for bk, y in zip(buckets, ys):
+            off = 0
+            for n in bk:
+                sl = y[:, off:off + impls[n].gemm_w.shape[1]]
+                env[n] = impls[n].gemm_reshape(sl) if fusable \
+                    else impls[n].gemm_post(sl)
+                off += impls[n].gemm_w.shape[1]
         return
+    ws = [impls[n].gemm_w for n in names]
     xs = _branch_lhs(group, impls, env, names)
     if fusable:
         ys = grouped_matmul_pooled(xs, ws,
@@ -751,6 +1061,232 @@ def _run_grouped(group: ExecGroup, impls: dict[str, OpImpl], env: dict,
         ys = grouped_matmul_pooled(xs, ws, interpret=interpret)
         for n, y in zip(names, ys):
             env[n] = impls[n].gemm_post(y)
+
+
+def _chained_runnable(group: ExecGroup, impls, env, pending) -> bool:
+    """The chained launch needs every phase op bound with the in-kernel
+    epilogue (bias+ReLU is hardcoded in the chained kernel), its raw conv
+    geometry (``chain_geom``) and a single dep that is either an earlier
+    phase (ring), an absorbed pool, or already materialized; the join (if
+    any) must read only in-launch ops.  Anything missing degrades the
+    whole group to the per-op path."""
+    if len(pending) != len(group.ops) or not group.chain:
+        return False
+    names = [n for ph in group.chain for n in ph]
+    if set(group.ops) - set(names) - ({group.join} if group.join else set()):
+        return False
+    pools = dict(group.pools)
+    opset = set(names)
+    for n in names:
+        impl = impls.get(n)
+        if impl is None or impl.chain_geom is None or impl.gemm_w is None \
+                or impl.gemm_bias is None or not impl.gemm_relu \
+                or len(impl.deps) != 1:
+            return False
+        d = impl.deps[0]
+        if d not in opset and n not in pools and d not in env:
+            return False
+    if group.join:
+        jimpl = impls.get(group.join)
+        if jimpl is None or set(jimpl.deps) - opset:
+            return False
+    return _pools_runnable(group, impls, env)
+
+
+def _pool_fold(v, chain):
+    """Maxpool ``chain`` applied to an NHWC array or — per segment, since
+    pooling commutes with the channel concat — to a ChainPanels composite,
+    packed back into ONE dense (B*OH*OW, C) lhs with dynamic_update_slice:
+    no concatenate, no standalone reduce_window."""
+    from repro.kernels.ops import pool_from_taps, pool_tap_views
+    if not isinstance(v, ChainPanels):
+        p = pool_from_taps(pool_tap_views(v, chain))
+        return p.reshape(-1, p.shape[-1])
+    segs = []
+    for pidx, cb, n in v.segments:
+        seg = v.panels[pidx][:v.m, cb * v.blk: cb * v.blk + n]
+        p = pool_from_taps(pool_tap_views(seg.reshape(-1, v.h, v.w, n),
+                                          chain))
+        segs.append(p.reshape(-1, n))
+    out = jnp.zeros((segs[0].shape[0], sum(s.shape[1] for s in segs)),
+                    segs[0].dtype)
+    off = 0
+    for s in segs:
+        out = jax.lax.dynamic_update_slice(out, s, (0, off))
+        off += s.shape[1]
+    return out
+
+
+def _panel_desc(v: ChainPanels):
+    """Panel lhs-source descriptors of a ChainPanels consumed IN PLACE:
+    one (panel, col block) per padded block in segment (= join) order,
+    plus the true-channel row range of the consumer's weight each block
+    covers (block rows past a segment's true width meet zero weight
+    rows, so the panels' zero-padded columns contribute nothing)."""
+    blocks, ranges = [], []
+    coff = 0
+    for pidx, cb, n in v.segments:
+        nbb = -(-n // v.blk)
+        for j in range(nbb):
+            blocks.append((pidx, cb + j))
+            lo = coff + j * v.blk
+            ranges.append((lo, min(coff + n, lo + v.blk)))
+        coff += n
+    return blocks, ranges
+
+
+def _pad_w_dense(wmat, blk):
+    """Row-pad a dense (K, N) weight to the k-step grid (ceil(K/blk)*blk
+    rows) — the layout matching a dense x lhs's padded col blocks."""
+    kb = -(-wmat.shape[0] // blk)
+    return jnp.pad(wmat, ((0, kb * blk - wmat.shape[0]), (0, 0)))
+
+
+def _pack_w_blocks(wmat, ranges, blk):
+    """Weight rows rearranged to panel-descriptor k-step order: block s
+    holds ``wmat[lo:hi]`` at its top (zero rows elsewhere), matching the
+    consumed panel block's true channels."""
+    buf = jnp.zeros((len(ranges) * blk, wmat.shape[1]), wmat.dtype)
+    for s, (lo, hi) in enumerate(ranges):
+        buf = jax.lax.dynamic_update_slice(buf, wmat[lo:hi], (s * blk, 0))
+    return buf
+
+
+def _pack_w_ring(wmat, kh, kw, cin, nrc, blk):
+    """Ring-consumer weight in tap-major/ring-col-minor k-step order: the
+    (C, KH, KW)-ordered im2col weight ``wmat`` strided-sliced per tap
+    (rows dh*kw+dw :: kh*kw give w[dh, dw]) and laid out per ring column
+    block — the order ``_chain_ksteps`` emits the tap-GEMMs in."""
+    buf = jnp.zeros((kh * kw * nrc * blk, wmat.shape[1]), wmat.dtype)
+    s = 0
+    for dh in range(kh):
+        for dw in range(kw):
+            tap = jax.lax.slice(wmat, (dh * kw + dw, 0), wmat.shape,
+                                (kh * kw, 1))          # (cin, nout)
+            for j in range(nrc):
+                lo = j * blk
+                if lo < cin:
+                    buf = jax.lax.dynamic_update_slice(
+                        buf, tap[lo:min(lo + blk, cin)], (s * blk, 0))
+                s += 1
+    return buf
+
+
+def _panel_index(panels: list, arr) -> int:
+    for i, p in enumerate(panels):
+        if p is arr:
+            return i
+    panels.append(arr)
+    return len(panels) - 1
+
+
+def _run_grouped_chained(group: ExecGroup, impls: dict[str, OpImpl],
+                         env: dict, interpret):
+    """Execute a ``grouped_chained`` group as ONE multi-phase launch.
+
+    Per-branch lhs sources, in preference order:
+      ring   — dep is an earlier phase of THIS launch: the kernel streams
+               the producer's row-block panels through the VMEM ring
+               (K*K convs as K^2 shifted tap-GEMMs; weights repacked
+               tap-major by ``_pack_w_ring``).
+      pooled — dep is an absorbed pool: the pool folds OUTSIDE the kernel
+               (``_pool_fold``, per ChainPanels segment — max commutes
+               with the channel concat) into one dense lhs.
+      panel  — dep is the PREVIOUS chained launch's ChainPanels and the
+               conv is pointwise: lhs-source descriptors address the
+               producer's padded panels in place (zero copies; weights
+               repacked per block by ``_pack_w_blocks``).
+      x      — anything else: the branch's own ``gemm_x`` view (the stem
+               head's strided im2col, custom graphs), packed by the
+               kernel wrapper.
+
+    The launch's padded output panels become a ``ChainPanels`` env value
+    under the join's name (or the last phase op's, stem chains) — the
+    module boundary never materializes."""
+    from repro.kernels.ops import grouped_matmul_chained
+    blk = 128
+    pools = dict(group.pools)
+    opset = {n for ph in group.chain for n in ph}
+    consumed = {impls[n].deps[0] for ph in group.chain for n in ph
+                if impls[n].deps[0] in opset}
+    ring_cols: dict[str, tuple] = {}
+    nxt = 0
+    for ph in group.chain:
+        for n in ph:
+            if n in consumed:
+                nbb = -(-impls[n].gemm_w.shape[1] // blk)
+                ring_cols[n] = tuple(range(nxt, nxt + nbb))
+                nxt += nbb
+    pooled: dict[str, Any] = {}
+    for _b, pname in group.pools:
+        if pname not in pooled:
+            pimpl = impls[pname]
+            pooled[pname] = _pool_fold(env[pimpl.deps[0]],
+                                       pimpl.pool_chain)
+    panels: list = []
+    phase_dicts = []
+    m = None
+    geom = None
+    for ph in group.chain:
+        brs = []
+        for n in ph:
+            impl = impls[n]
+            kh, kw, stride, cin, oh, ow = impl.chain_geom
+            wmat = impl.gemm_w
+            d = impl.deps[0]
+            if d in opset:
+                rcs = ring_cols[d]
+                src = ("ring", kh, kw, rcs)
+                wpk = _pack_w_ring(wmat, kh, kw, cin, len(rcs), blk)
+            elif n in pools:
+                x2d = pooled[pools[n]]
+                src, wpk, m = ("x", [x2d]), _pad_w_dense(wmat, blk), \
+                    x2d.shape[0]
+            else:
+                v = env[d]
+                if isinstance(v, ChainPanels) and (kh, kw) == (1, 1) \
+                        and stride == 1:
+                    blocks, ranges = _panel_desc(v)
+                    used = sorted({p for p, _ in blocks})
+                    if len(used) <= 2:     # kernel addresses <= 2 panels
+                        remap = {p: _panel_index(panels, v.panels[p])
+                                 for p in used}
+                        src = ("panel", [(remap[p], cb)
+                                         for p, cb in blocks])
+                        wpk, m = _pack_w_blocks(wmat, ranges, blk), v.m
+                    else:
+                        x2d = _materialize_chain(v).reshape(v.m, -1)
+                        src, wpk, m = ("x", [x2d]), \
+                            _pad_w_dense(wmat, blk), v.m
+                else:
+                    x2d = impl.gemm_x(_env_val(env, d))
+                    src, wpk, m = ("x", [x2d]), _pad_w_dense(wmat, blk), \
+                        x2d.shape[0]
+            if geom is None:
+                geom = (oh, ow)
+            brs.append({"n": wmat.shape[1], "w": wpk, "b": impl.gemm_bias,
+                        "src": src, "ring_write": ring_cols.get(n)})
+        phase_dicts.append(brs)
+    assert m is not None and geom is not None, group.ops
+    outs = grouped_matmul_chained(phase_dicts, m=m, h=geom[0], w=geom[1],
+                                  panels=tuple(panels), block=blk,
+                                  interpret=interpret)
+    lay: dict[str, tuple[int, int, int]] = {}
+    for p, ph in enumerate(group.chain):
+        cb = 0
+        for n in ph:
+            nout = impls[n].gemm_w.shape[1]
+            lay[n] = (p, cb, nout)
+            cb += -(-nout // blk)
+    if group.join:
+        out_name = group.join
+        order = list(impls[group.join].deps)
+    else:
+        out_name = group.chain[-1][-1]
+        order = [out_name]
+    env[out_name] = ChainPanels(
+        panels=tuple(outs), segments=tuple(lay[n] for n in order),
+        m=m, h=geom[0], w=geom[1], blk=blk)
 
 
 def _run_grouped_concat(group: ExecGroup, impls: dict[str, OpImpl], env: dict,
@@ -772,7 +1308,8 @@ def _run_grouped_concat(group: ExecGroup, impls: dict[str, OpImpl], env: dict,
     widths: dict[str, int] = {}
     off = 0
     for d in jimpl.deps:
-        w = impls[d].gemm_w.shape[1] if d in branches else env[d].shape[-1]
+        w = impls[d].gemm_w.shape[1] if d in branches \
+            else _env_val(env, d).shape[-1]
         offs[d], widths[d] = off, w
         off += w
     order = [d for d in jimpl.deps if d in branches]
@@ -805,7 +1342,8 @@ def _run_grouped_concat(group: ExecGroup, impls: dict[str, OpImpl], env: dict,
             else:
                 segs.append((lo, hi))
         else:
-            segs.append(env[d].reshape(-1, widths[d]).astype(y2d.dtype))
+            segs.append(_env_val(env, d).reshape(-1, widths[d])
+                        .astype(y2d.dtype))
     parts = [y2d[:, s[0]:s[1]] if isinstance(s, tuple) else s for s in segs]
     joined = parts[0] if len(parts) == 1 else jnp.concatenate(parts, axis=-1)
     env[group.join] = jimpl.gemm_reshape(joined)
@@ -831,7 +1369,7 @@ def _run_spatial_group(group: ExecGroup, impls: dict[str, OpImpl], env: dict,
     dep = impls[group.ops[0]].deps[0]
     fns = [impls[n].fn for n in group.ops]
     br = bp.Branches(fns, combine="stack")
-    ys = bp.run_spatial(br, env[dep], mesh)          # (G, B, ...)
+    ys = bp.run_spatial(br, _env_val(env, dep), mesh)    # (G, B, ...)
     for i, name in enumerate(group.ops):
         env[name] = ys[i]
 
@@ -868,6 +1406,9 @@ def run_plan(impls: dict[str, OpImpl], env: dict, plan: Plan, *,
                 group, impls, env, pending) \
                 and _pools_runnable(group, impls, env):
             _run_grouped_concat(group, impls, env, interpret)
+        elif group.mode == "grouped_chained" and _chained_runnable(
+                group, impls, env, pending):
+            _run_grouped_chained(group, impls, env, interpret)
         elif group.mode == "stacked" and _stacked_runnable(group, impls,
                                                            pending):
             _run_stacked(group, impls, env, interpret)
@@ -903,7 +1444,14 @@ def run_plan(impls: dict[str, OpImpl], env: dict, plan: Plan, *,
                     else "xla"
                 env[name] = impl.fn(*_dep_args(impl, env), algorithm=alg)
         if timings is not None:
-            _jax.block_until_ready([env[n] for n in group.ops if n in env])
+            vals = []
+            for n in group.ops:
+                v = env.get(n)
+                if isinstance(v, ChainPanels):
+                    vals.extend(v.panels)
+                elif v is not None:
+                    vals.append(v)
+            _jax.block_until_ready(vals)
             timings[executed] = timings.get(executed, 0.0) \
                 + (_time.perf_counter() - t0)
     return env

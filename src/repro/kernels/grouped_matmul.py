@@ -541,8 +541,13 @@ def _tap_views_one(x, window: int, stride: int):
     plh, plw = ph // 2, pw // 2
     xp = jnp.pad(x, ((0, 0), (plh, ph - plh), (plw, pw - plw), (0, 0)),
                  constant_values=-np.inf)
-    return [xp[:, dh:dh + (oh - 1) * stride + 1:stride,
-               dw:dw + (ow - 1) * stride + 1:stride, :]
+    # lax.slice, not __getitem__: jnp's strided getitem lowers to a gather
+    # whose index grid is built with a concatenate — a layout launch the
+    # chained plan's launch-ceiling gate would count.
+    return [jax.lax.slice(xp, (0, dh, dw, 0),
+                          (b, dh + (oh - 1) * stride + 1,
+                           dw + (ow - 1) * stride + 1, xp.shape[3]),
+                          (1, stride, stride, 1))
             for dh in range(window) for dw in range(window)]
 
 
@@ -1358,3 +1363,443 @@ def grouped_matmul_flops(shapes, bm: int = 128, bn: int = 128,
                   for _, k, n in shapes)
     stacked = len(shapes) * 2 * mp * kmax * nmax
     return grouped, stacked
+
+
+# ---------------------------------------------------------------------------
+# chained multi-phase launch (cross-module streaming)
+# ---------------------------------------------------------------------------
+#
+# ONE pallas_call executes a short CHAIN of grouped branch sets ("phases"):
+# phase p's branches may draw their GEMM lhs from
+#
+#   src=0  the packed X tile stack (im2col / pooled-fold lhs prepped outside),
+#   src=2  a VMEM ring holding the last 3 row-block panels a PRODUCER phase
+#          of the same launch wrote — a KxK conv consumes them as K^2
+#          shifted 1x1 tap-GEMMs with iota-decoded border masking, so the
+#          producer activation never touches HBM,
+#   src=3/4  a PANEL operand — the padded join buffer a PREVIOUS chained
+#          launch emitted, consumed in place via a per-branch lhs-source
+#          descriptor (panel id + column block) in the scalar-prefetch
+#          table: join-chaining with no intervening concat/reshape.
+#
+# Phases run in a lag-1 wave schedule (wave w runs phase p's row block
+# w - p, ascending p), so a ring consumer always finds producer blocks
+# i-1, i, i+1 resident and un-overwritten (ring depth 3).  Each phase
+# writes one output panel whose segments are its branches' padded column
+# slabs — the layout the NEXT launch's panel descriptors address.
+# The bias+ReLU epilogue is fused (chained branches must be relu convs).
+
+# table rows (plus 2 per phase: output row-block / col-block, kept on the
+# "slot of the next write at step >= t" stability rule)
+(_CH_I, _CH_XT, _CH_WT, _CH_BJ, _CH_FIRST, _CH_LAST, _CH_PH, _CH_SRC,
+ _CH_PCA, _CH_PCB, _CH_RC, _CH_DELTA, _CH_DH, _CH_DW, _CH_RWC) = range(15)
+_CH_ROWS = 15
+
+
+def _chain_ksteps(tag, src):
+    """The ordered k-steps of one chained branch."""
+    if tag == "x":
+        return [("x", kk) for kk in range(src)]
+    if tag == "panel":
+        return [("panel", pc) for pc in src]
+    taps, rcs = src
+    return [("ring", (d, dh, dw, rc)) for (d, dh, dw) in taps for rc in rcs]
+
+
+@functools.lru_cache(maxsize=512)
+def _plan_tiles_chained(m_blocks: int, phases):
+    """Offset table for a chained launch.  ``phases``: per phase a tuple of
+    branch specs (tag, src, nbb, rwcs) with tag 'x' (src = k-block count),
+    'panel' (src = ((panel, colblock), ...)) or 'ring' (src = (taps, ring
+    cols), taps = ((delta, dh, dw), ...)); nbb = output n-blocks; rwcs =
+    per-n-block ring write col (or ()).  Pure shape bookkeeping, cached."""
+    nph = len(phases)
+    nrows = _CH_ROWS + 2 * nph
+    info = []
+    xbase = wbase = bbase = 0
+    for phase in phases:
+        pinfo = []
+        ob = 0
+        for (tag, src, nbb, rwcs) in phase:
+            ksteps = _chain_ksteps(tag, src)
+            pinfo.append((tag, src, nbb, rwcs, ksteps, xbase, wbase,
+                          bbase, ob))
+            if tag == "x":
+                xbase += m_blocks * src
+            wbase += len(ksteps) * nbb
+            bbase += nbb
+            ob += nbb
+        info.append(pinfo)
+    cols: list[list[int]] = []
+    for wave in range(m_blocks + nph - 1):
+        for p in range(nph):
+            i = wave - p
+            if not (0 <= i < m_blocks):
+                continue
+            for (tag, src, nbb, rwcs, ksteps, xb, wb, bb, ob) in info[p]:
+                ns = len(ksteps)
+                for j in range(nbb):
+                    for s, (kt, kd) in enumerate(ksteps):
+                        c = [0] * nrows
+                        c[_CH_I] = i
+                        c[_CH_WT] = wb + s * nbb + j
+                        c[_CH_BJ] = bb + j
+                        c[_CH_FIRST] = 1 if s == 0 else 0
+                        c[_CH_LAST] = 1 if s == ns - 1 else 0
+                        c[_CH_PH] = p
+                        c[_CH_RWC] = -1
+                        if kt == "x":
+                            c[_CH_SRC] = 0
+                            c[_CH_XT] = xb + i * src + kd
+                        elif kt == "panel":
+                            pidx, cb = kd
+                            c[_CH_SRC] = 3 + pidx
+                            c[_CH_PCA if pidx == 0 else _CH_PCB] = cb
+                        else:
+                            d, dh, dw, rc = kd
+                            c[_CH_SRC] = 2
+                            c[_CH_RC] = rc
+                            c[_CH_DELTA] = d
+                            c[_CH_DH] = dh
+                            c[_CH_DW] = dw
+                        if c[_CH_LAST]:
+                            c[_CH_ROWS + 2 * p] = i
+                            c[_CH_ROWS + 2 * p + 1] = ob + j
+                            if rwcs:
+                                c[_CH_RWC] = rwcs[j]
+                        cols.append(c)
+    # output stability: each phase's index rows = slot of the next write at
+    # step >= t (single transition between consecutive writes; the final
+    # write is the phase's last (row, col) slab, which is also the default)
+    ncbs = [sum(br[2] for br in pinfo) for pinfo in info]
+    for p in range(nph):
+        nr, nc = _CH_ROWS + 2 * p, _CH_ROWS + 2 * p + 1
+        nxt = (m_blocks - 1, ncbs[p] - 1)
+        for c in reversed(cols):
+            if c[_CH_PH] == p and c[_CH_LAST] == 1:
+                nxt = (c[nr], c[nc])
+            c[nr], c[nc] = nxt
+    return np.array(cols, np.int32).T
+
+
+def _gmm_chained_kernel(tab_ref, dims_ref, *refs, nphases: int,
+                        npanels: int, bm: int, blk: int):
+    x_ref, w_ref, b_ref = refs[0], refs[1], refs[2]
+    p_refs = refs[3:3 + npanels]
+    out_refs = refs[3 + npanels:3 + npanels + nphases]
+    acc_ref, ring_ref, win_ref = refs[3 + npanels + nphases:]
+    t = pl.program_id(0)
+    i = tab_ref[_CH_I, t]
+    src = tab_ref[_CH_SRC, t]
+    hd = dims_ref[0]
+    wd = dims_ref[1]
+
+    @pl.when(tab_ref[_CH_FIRST, t] == 1)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    xop = x_ref[...]
+    # ring window: producer row-block panels i-1, i, i+1 assembled into a
+    # (3*bm, blk) scratch, then one dynamic-start shifted load + border mask
+    slo = (i + 2) % 3
+    smi = i % 3
+    shi = (i + 1) % 3
+    rc = tab_ref[_CH_RC, t]
+    win_ref[pl.ds(0, bm), :] = ring_ref[slo, rc]
+    win_ref[pl.ds(bm, bm), :] = ring_ref[smi, rc]
+    win_ref[pl.ds(2 * bm, bm), :] = ring_ref[shi, rc]
+    shifted = win_ref[pl.ds(bm + tab_ref[_CH_DELTA, t], bm), :]
+    r = i * bm + jax.lax.broadcasted_iota(jnp.int32, (bm, 1), 0)[:, 0]
+    rem = r % (hd * wd)
+    hh = rem // wd + tab_ref[_CH_DH, t]
+    ww = rem % wd + tab_ref[_CH_DW, t]
+    valid = (hh >= 0) & (hh < hd) & (ww >= 0) & (ww < wd)
+    xop = jnp.where(src == 2,
+                    jnp.where(valid[:, None], shifted,
+                              jnp.zeros_like(shifted)), xop)
+    for pi, p_ref in enumerate(p_refs):
+        xop = jnp.where(src == 3 + pi, p_ref[...], xop)
+    acc_ref[...] += jnp.dot(xop, w_ref[...],
+                            preferred_element_type=jnp.float32)
+
+    @pl.when(tab_ref[_CH_LAST, t] == 1)
+    def _store():
+        bj = tab_ref[_CH_BJ, t]
+        y = jnp.maximum(
+            acc_ref[...] + b_ref[bj, :].astype(jnp.float32)[None, :], 0.0)
+        y = y.astype(out_refs[0].dtype)
+        ph = tab_ref[_CH_PH, t]
+        for p, o_ref in enumerate(out_refs):
+            @pl.when(ph == p)
+            def _(o_ref=o_ref):
+                o_ref[...] = y
+
+        rwc = tab_ref[_CH_RWC, t]
+
+        @pl.when(rwc >= 0)
+        def _ring():
+            ring_ref[i % 3, jnp.maximum(rwc, 0)] = y
+
+
+def _chain_dims(h: int, w: int):
+    return np.array([h, w], np.int32)
+
+
+def chained_layout(phases, blk: int = 128):
+    """Per-branch (phase, col base, n-blocks, true n) of the panel layout a
+    chained launch emits — what the NEXT launch's panel descriptors (and
+    the caller's output slicing) address."""
+    out = []
+    for p, phase in enumerate(phases):
+        cb = 0
+        for br in phase:
+            nbb = -(-br["n"] // blk)
+            out.append((p, cb, nbb, br["n"]))
+            cb += nbb
+    return out
+
+
+def _chain_static(phases, blk, bm, wimg):
+    """Hashable planner spec + validation for one chained launch."""
+    spec = []
+    for phase in phases:
+        pspec = []
+        for br in phase:
+            nbb = -(-br["n"] // blk)
+            tag = br["src"][0]
+            if tag == "x":
+                kbs = sum(-(-a.shape[1] // blk) for a in br["src"][1])
+                src = kbs
+            elif tag == "panel":
+                src = tuple(br["src"][1])
+            else:
+                _, kh, kw, rcs = br["src"]
+                taps = []
+                for dh in range(kh):
+                    for dw in range(kw):
+                        d = (dh - kh // 2) * wimg + (dw - kw // 2)
+                        assert abs(d) <= bm, (
+                            f"halo {d} exceeds bm={bm} (W={wimg}, "
+                            f"k={kh}x{kw}) — chain ineligible")
+                        taps.append((d, dh - kh // 2, dw - kw // 2))
+                src = (tuple(taps), tuple(rcs))
+            rwcs = tuple(br.get("ring_write") or ())
+            if rwcs:
+                assert len(rwcs) == nbb, (rwcs, nbb)
+            s = len(_chain_ksteps(tag, src))
+            assert br["w"].shape[0] == s * blk, \
+                (br["w"].shape, s, blk, "weight rows must be k-step-major")
+            pspec.append((tag, src, nbb, rwcs))
+        spec.append(tuple(pspec))
+    return tuple(spec)
+
+
+def grouped_matmul_chained(phases, *, m: int, h: int, w: int, panels=(),
+                           block: int = 128, interpret: bool = False):
+    """Execute a chain of grouped branch phases as ONE kernel.
+
+    ``phases``: list of phases, each a list of branch dicts
+      n     true output width
+      w     (S*block, n) weight — rows in K-STEP-MAJOR order (one
+            ``block``-row slab per k-step, zero-padded where the lhs slab
+            is panel padding), S the branch's k-step count
+      b     (n,) bias or None
+      src   ('x', [2D (m, K_i) arrays])               packed-lhs branch
+            ('panel', [(panel_idx, col_block), ...])  join-chained branch
+            ('ring', kh, kw, (ring_cols...))          in-launch KxK conv
+      ring_write  per-n-block ring col this branch's output feeds, or None
+
+    ``panels``: previous-launch padded panels (rows >= m, cols a multiple
+    of ``block``) consumed by 'panel' branches in place.  ``h``/``w`` are
+    the shared spatial dims (m = B*h*w) the ring border mask decodes.
+
+    Returns one padded (Mp, ncb_p * block) panel per phase; true values
+    sit at [:m, col_base*block : col_base*block + n] per ``chained_layout``
+    — padding columns are exactly zero (relu(0 + 0)).
+    """
+    blk = block
+    bm = blk
+    mb = -(-m // bm)
+    mp = mb * bm
+    # dtype: follow the lhs operands
+    dtype = None
+    for phase in phases:
+        for br in phase:
+            if br["src"][0] == "x" and br["src"][1]:
+                dtype = br["src"][1][0].dtype
+    if dtype is None:
+        dtype = panels[0].dtype if panels else phases[0][0]["w"].dtype
+    spec = _chain_static(phases, blk, bm, w)
+    nph = len(phases)
+
+    # ---- pack (dynamic_update_slice only: the chained path must emit no
+    # concatenate primitives — the traced launch counter counts them) ----
+    flat = [br for phase in phases for br in phase]
+    flat_spec = [bs for pspec in spec for bs in pspec]
+    tx = sum(mb * bs[1] for bs in flat_spec if bs[0] == "x")
+    tw = sum(len(_chain_ksteps(bs[0], bs[1])) * bs[2] for bs in flat_spec)
+    nb = sum(bs[2] for bs in flat_spec)
+    xstack = jnp.zeros((max(tx, 1), bm, blk), dtype)
+    wstack = jnp.zeros((tw, blk, blk), dtype)
+    bstack = jnp.zeros((nb, blk), dtype)
+    xbase = wbase = bbase = 0
+    for br, (tag, src, nbb, _rw) in zip(flat, flat_spec):
+        ksteps = _chain_ksteps(tag, src)
+        s = len(ksteps)
+        if tag == "x":
+            kbs = src
+            bb = jnp.zeros((mb, kbs, bm, blk), dtype)
+            off = 0
+            for a in br["src"][1]:
+                kbi = -(-a.shape[1] // blk)
+                ap = jnp.pad(a, ((0, mp - a.shape[0]),
+                                 (0, kbi * blk - a.shape[1])))
+                t4 = ap.reshape(mb, bm, kbi, blk).transpose(0, 2, 1, 3)
+                bb = jax.lax.dynamic_update_slice(
+                    bb, t4.astype(dtype), (0, off, 0, 0))
+                off += kbi
+            xstack = jax.lax.dynamic_update_slice(
+                xstack, bb.reshape(-1, bm, blk), (xbase, 0, 0))
+            xbase += mb * kbs
+        wp = jnp.pad(br["w"], ((0, 0), (0, nbb * blk - br["n"])))
+        t4 = wp.reshape(s, blk, nbb, blk).transpose(0, 2, 1, 3)
+        wstack = jax.lax.dynamic_update_slice(
+            wstack, t4.reshape(-1, blk, blk).astype(dtype), (wbase, 0, 0))
+        wbase += s * nbb
+        bias = br.get("b")
+        if bias is not None:
+            bp = jnp.pad(bias, (0, nbb * blk - br["n"]))
+            bstack = jax.lax.dynamic_update_slice(
+                bstack, bp.reshape(nbb, blk).astype(dtype), (bbase, 0))
+        bbase += nbb
+    pads = []
+    for pa in panels:
+        pr, pc = pa.shape
+        assert pc % blk == 0, pa.shape
+        pads.append(jnp.pad(pa, ((0, mp - pr), (0, 0))) if pr < mp
+                    else pa[:mp])
+    nring = 1
+    for bs in flat_spec:
+        if bs[0] == "ring":
+            nring = max(nring, max(bs[1][1]) + 1)
+        if bs[3]:
+            nring = max(nring, max(bs[3]) + 1)
+
+    _count_launch("grouped_matmul_chained")
+    tab = _device_table(_plan_tiles_chained, mb, spec)
+    dims = _device_table(_chain_dims, h, w)
+
+    in_specs = [
+        pl.BlockSpec((None, bm, blk),
+                     lambda t, tab, dims: (tab[_CH_XT, t], 0, 0)),
+        pl.BlockSpec((None, blk, blk),
+                     lambda t, tab, dims: (tab[_CH_WT, t], 0, 0)),
+        pl.BlockSpec(memory_space=pltpu.VMEM),
+    ]
+    ins = [xstack, wstack, bstack]
+    for pi, pa in enumerate(pads):
+        row = _CH_PCA if pi == 0 else _CH_PCB
+        in_specs.append(pl.BlockSpec(
+            (bm, blk), lambda t, tab, dims, row=row: (tab[_CH_I, t],
+                                                      tab[row, t])))
+        ins.append(pa)
+    ncbs = [sum(bs[2] for bs in pspec) for pspec in spec]
+    out_specs = [
+        pl.BlockSpec((bm, blk),
+                     lambda t, tab, dims, p=p: (tab[_CH_ROWS + 2 * p, t],
+                                                tab[_CH_ROWS + 2 * p + 1, t]))
+        for p in range(nph)
+    ]
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(tab.shape[1],),
+        in_specs=in_specs,
+        out_specs=out_specs,
+        scratch_shapes=[
+            pltpu.VMEM((bm, blk), jnp.float32),
+            pltpu.VMEM((3, nring, bm, blk), dtype),
+            pltpu.VMEM((3 * bm, blk), dtype),
+        ],
+    )
+    outs = pl.pallas_call(
+        functools.partial(_gmm_chained_kernel, nphases=nph,
+                          npanels=len(pads), bm=bm, blk=blk),
+        grid_spec=grid_spec,
+        out_shape=[jax.ShapeDtypeStruct((mp, ncb * blk), dtype)
+                   for ncb in ncbs],
+        interpret=interpret,
+    )(tab, dims, *ins)
+    return list(outs)
+
+
+def _shift_spatial(seg2d, m, h, w, dh, dw):
+    """Zero-padded spatial shift of a (rows>=m, C) activation (m = B*h*w):
+    row r of the result is row r + dh*w + dw where (h+dh, w+dw) stays in
+    bounds, else 0 — the reference for one ring tap."""
+    b = m // (h * w)
+    img = seg2d[:m].reshape(b, h, w, -1)
+    # pad + slice, not .at[].set: the scatter lowering builds its index
+    # vector with concatenates that the launch counter would see.
+    pb_h, pa_h = max(-dh, 0), max(dh, 0)
+    pb_w, pa_w = max(-dw, 0), max(dw, 0)
+    pimg = jnp.pad(img, ((0, 0), (pb_h, pa_h), (pb_w, pa_w), (0, 0)))
+    out = jax.lax.slice(pimg, (0, pa_h, pa_w, 0),
+                        (b, pa_h + h, pa_w + w, pimg.shape[3]))
+    return out.reshape(m, -1)
+
+
+def grouped_matmul_chained_ref(phases, *, m: int, h: int, w: int,
+                               panels=(), block: int = 128):
+    """XLA oracle for ``grouped_matmul_chained`` — same padded panels (true
+    rows/cols; padding rows are zeros here, garbage in the kernel)."""
+    blk = block
+    mb = -(-m // blk)
+    mp = mb * blk
+    # ring col -> (producer phase, producer panel col block), from the
+    # branches' ring_write descriptors — the mapping the kernel realizes
+    # through its VMEM ring slots
+    ringmap: dict[int, tuple[int, int]] = {}
+    for p, phase in enumerate(phases):
+        cb = 0
+        for br in phase:
+            nbb = -(-br["n"] // blk)
+            for j, rc in enumerate(br.get("ring_write") or ()):
+                ringmap[rc] = (p, cb + j)
+            cb += nbb
+    outs = []
+    for phase in phases:
+        segs = []
+        for br in phase:
+            nbb = -(-br["n"] // blk)
+            tag = br["src"][0]
+            if tag == "x":
+                parts = []
+                for a in br["src"][1]:
+                    kbi = -(-a.shape[1] // blk)
+                    parts.append(jnp.pad(
+                        a, ((0, 0), (0, kbi * blk - a.shape[1]))))
+                lhs = jnp.concatenate(parts, axis=1) if len(parts) > 1 \
+                    else parts[0]
+            elif tag == "panel":
+                lhs = jnp.concatenate(
+                    [panels[pidx][:m, cb * blk:(cb + 1) * blk]
+                     for pidx, cb in br["src"][1]], axis=1)
+            else:
+                _, kh, kw, rcs = br["src"]
+                taps = []
+                for dh in range(kh):
+                    for dw in range(kw):
+                        for rc in rcs:
+                            pp, pcb = ringmap[rc]
+                            seg = outs[pp][:m, pcb * blk:(pcb + 1) * blk]
+                            taps.append(_shift_spatial(
+                                seg, m, h, w, dh - kh // 2, dw - kw // 2))
+                lhs = jnp.concatenate(taps, axis=1)
+            bias = br.get("b")
+            y = lhs.astype(jnp.float32) @ br["w"].astype(jnp.float32)
+            if bias is not None:
+                y = y + bias.astype(jnp.float32)
+            y = jnp.maximum(y, 0.0).astype(lhs.dtype)
+            segs.append(jnp.pad(y, ((0, mp - m), (0, nbb * blk - br["n"]))))
+        outs.append(jnp.concatenate(segs, axis=1))
+    return outs

@@ -494,3 +494,208 @@ def _fused_bwd(bm, bn, bk, interpret, res, g):
 
 
 _fused_vjp.defvjp(_fused_fwd, _fused_bwd)
+
+
+# ---------------------------------------------------------------------------
+# chained multi-phase launch (cross-module streaming)
+# ---------------------------------------------------------------------------
+
+def grouped_matmul_chained(phases, *, m: int, h: int, w: int, panels=(),
+                           block: int = 128, interpret: bool | None = None):
+    """A CHAIN of grouped branch phases in ONE kernel — join-chaining
+    (panel-source lhs descriptors), in-launch KxK ring convs and the
+    fused bias+ReLU epilogue; see
+    ``kernels/grouped_matmul.py::grouped_matmul_chained``.
+
+    Differentiable: the custom VJP mirrors the chain in reverse phase
+    order with ONE combined ``grouped_matmul_bwd`` launch per phase.  The
+    joint cotangent arrives per-phase on the padded panels; ring
+    consumers' lhs is rebuilt as the differentiable tap-shift of the
+    producer's residual panel (``jax.vjp`` routes their lhs cotangent
+    back onto the producer's slab before its own phase runs), and
+    panel-source branches' lhs cotangents accumulate onto the previous
+    launch's panel arguments — so gradients flow across the whole chain
+    exactly as through the unchained plan."""
+    interpret = default_interpret() if interpret is None else interpret
+    spec, xs_flat, ws, bss = [], [], [], []
+    for phase in phases:
+        ps = []
+        for br in phase:
+            tag = br["src"][0]
+            if tag == "x":
+                arrs = list(br["src"][1])
+                meta = len(arrs)
+                xs_flat.extend(arrs)
+            elif tag == "panel":
+                meta = tuple((int(p), int(c)) for p, c in br["src"][1])
+            else:
+                meta = (int(br["src"][1]), int(br["src"][2]),
+                        tuple(int(c) for c in br["src"][3]))
+            ws.append(br["w"])
+            bss.append(br.get("b"))
+            ps.append((tag, meta, int(br["n"]),
+                       tuple(br.get("ring_write") or ())))
+        spec.append(tuple(ps))
+    return list(_chained_vjp(tuple(xs_flat), tuple(ws), tuple(bss),
+                             tuple(panels), tuple(spec), int(m), int(h),
+                             int(w), int(block), interpret))
+
+
+def _chained_rebuild(xs_flat, ws, bss, spec):
+    phases, cur, bi = [], 0, 0
+    for pspec in spec:
+        phase = []
+        for (tag, meta, n, rw) in pspec:
+            if tag == "x":
+                src = ("x", list(xs_flat[cur:cur + meta]))
+                cur += meta
+            elif tag == "panel":
+                src = ("panel", list(meta))
+            else:
+                src = ("ring", meta[0], meta[1], meta[2])
+            phase.append({"n": n, "w": ws[bi], "b": bss[bi], "src": src,
+                          "ring_write": rw or None})
+            bi += 1
+        phases.append(phase)
+    return phases
+
+
+def _pack_cols(arrs, widths, blk, dtype):
+    """dus-pack 2D arrays into an (M, sum ceil(w/blk)*blk) buffer, each at
+    its own block-aligned column base — the branch lhs layout the chained
+    forward GEMM consumed (padding columns zero)."""
+    total = sum(-(-wd // blk) for wd in widths) * blk
+    buf = jnp.zeros((arrs[0].shape[0], total), dtype)
+    off = 0
+    for a, wd in zip(arrs, widths):
+        buf = jax.lax.dynamic_update_slice(buf, a.astype(dtype), (0, off))
+        off += -(-wd // blk) * blk
+    return buf
+
+
+def _add_block(buf, upd, r0: int, c0: int):
+    """buf[r0:r0+R, c0:c0+C] += upd via slice + dynamic_update_slice — a
+    scatter-add here would build its index vector with concatenates the
+    launch counter counts."""
+    cur = jax.lax.slice(buf, (r0, c0),
+                        (r0 + upd.shape[0], c0 + upd.shape[1]))
+    return jax.lax.dynamic_update_slice(
+        buf, cur + upd.astype(buf.dtype), (r0, c0))
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(4, 5, 6, 7, 8, 9))
+def _chained_vjp(xs_flat, ws, bss, panels, spec, m, h, w, block, interpret):
+    phases = _chained_rebuild(xs_flat, ws, bss, spec)
+    return tuple(_gmm.grouped_matmul_chained(
+        phases, m=m, h=h, w=w, panels=list(panels), block=block,
+        interpret=interpret))
+
+
+def _chained_fwd(xs_flat, ws, bss, panels, spec, m, h, w, block, interpret):
+    outs = _chained_vjp(xs_flat, ws, bss, panels, spec, m, h, w, block,
+                        interpret)
+    return outs, (xs_flat, ws, bss, panels, outs)
+
+
+def _chained_bwd(spec, m, h, w, block, interpret, res, gs):
+    xs_flat, ws, bss, panels, outs = res
+    blk = block
+    # branch layout + ring col -> (producer phase, producer panel col block)
+    flat, ringmap, xoffs = [], {}, []
+    cur = 0
+    for p, pspec in enumerate(spec):
+        cb = 0
+        for (tag, meta, n, rw) in pspec:
+            nbb = -(-n // blk)
+            flat.append((p, cb, nbb, tag, meta, n, rw))
+            for j, rc in enumerate(rw):
+                ringmap[rc] = (p, cb + j)
+            xoffs.append(cur)
+            if tag == "x":
+                cur += meta
+            cb += nbb
+    gpanels = [jnp.asarray(g) for g in gs]
+    dxs_flat = [None] * len(xs_flat)
+    dws = [None] * len(ws)
+    dbs = [None] * len(bss)
+    dpanels = [jnp.zeros_like(pa) for pa in panels]
+    dtype = outs[0].dtype
+    for p in reversed(range(len(spec))):
+        idxs = [bi for bi, br in enumerate(flat) if br[0] == p]
+        lhss, dys, masks, wsl, vjps = [], [], [], [], []
+        for bi in idxs:
+            _, cb, nbb, tag, meta, n, rw = flat[bi]
+            dy = gpanels[p][:m, cb * blk:cb * blk + n].astype(dtype)
+            y = outs[p][:m, cb * blk:cb * blk + n]
+            if tag == "x":
+                arrs = xs_flat[xoffs[bi]:xoffs[bi] + meta]
+                lhs = _pack_cols(arrs, [a.shape[1] for a in arrs], blk,
+                                 dtype)
+                vjps.append(None)
+            elif tag == "panel":
+                lhs = _pack_cols(
+                    [panels[pi][:m, c * blk:(c + 1) * blk]
+                     for pi, c in meta],
+                    [blk] * len(meta), blk, dtype)
+                vjps.append(None)
+            else:
+                kh, kw, rcs = meta
+                blocks = tuple(
+                    outs[ringmap[rc][0]][:m, ringmap[rc][1] * blk:
+                                         (ringmap[rc][1] + 1) * blk]
+                    for rc in rcs)
+
+                def _taps(bl, kh=kh, kw=kw):
+                    parts = [_gmm._shift_spatial(seg, m, h, w,
+                                                 dh - kh // 2,
+                                                 dw_ - kw // 2)
+                             for dh in range(kh) for dw_ in range(kw)
+                             for seg in bl]
+                    return _pack_cols(parts, [blk] * len(parts), blk,
+                                      dtype)
+
+                lhs, tapvjp = jax.vjp(_taps, blocks)
+                vjps.append((tapvjp, rcs))
+            lhss.append(lhs)
+            dys.append(dy)
+            masks.append(y)
+            wsl.append(ws[bi])
+        # ONE combined launch for this phase's dx + dw + db
+        dxs, dws_p, dbs_p = _gmm.grouped_matmul_bwd(
+            lhss, wsl, dys, masks, interpret=interpret)
+        for k, bi in enumerate(idxs):
+            _, cb, nbb, tag, meta, n, rw = flat[bi]
+            dws[bi] = dws_p[k].astype(ws[bi].dtype)
+            dbs[bi] = None if bss[bi] is None else \
+                dbs_p[k].astype(bss[bi].dtype)
+            dx = dxs[k]
+            if tag == "x":
+                off = 0
+                for a_i, a in enumerate(
+                        xs_flat[xoffs[bi]:xoffs[bi] + meta]):
+                    da = dx[:, off:off + a.shape[1]].astype(a.dtype)
+                    j = xoffs[bi] + a_i
+                    dxs_flat[j] = da if dxs_flat[j] is None \
+                        else dxs_flat[j] + da
+                    off += -(-a.shape[1] // blk) * blk
+            elif tag == "panel":
+                for s, (pi, c) in enumerate(meta):
+                    dpanels[pi] = _add_block(
+                        dpanels[pi],
+                        dx[:m, s * blk:(s + 1) * blk], 0, c * blk)
+            else:
+                tapvjp, rcs = vjps[k]
+                gblocks = tapvjp(dx)[0]
+                for rc, gb in zip(rcs, gblocks):
+                    pp, pcb = ringmap[rc]
+                    gpanels[pp] = _add_block(
+                        gpanels[pp], gb[:m], 0, pcb * blk)
+    dxs_flat = tuple(jnp.zeros_like(a) if d is None else d
+                     for a, d in zip(xs_flat, dxs_flat))
+    return dxs_flat, tuple(dws), tuple(dbs), tuple(dpanels)
+
+
+_chained_vjp.defvjp(_chained_fwd, _chained_bwd)
+
+grouped_matmul_chained_ref = _gmm.grouped_matmul_chained_ref
+chained_layout = _gmm.chained_layout
