@@ -46,23 +46,24 @@ make bench-smoke
 #     plan's pallas count stays under LAUNCH_CEILING_UNCHAINED_PALLAS,
 #     the chained trace is strictly cheaper than the default in both
 #     directions, and the chained modeled makespan beats the unchained
-#     one forward AND backward (googlenet_chained_modeled_ok).
+#     one forward AND backward (googlenet_chained_modeled_ok);
+#   - serving: the continuous-batching column (ragged-M + plan cache,
+#     launch/serve.py) ran — post-warmup stream entirely from the plan
+#     cache (hit rate 1.0: zero re-lowering / offset-table rebuilds /
+#     re-tracing), real p50/p99 latency recorded, and the served chained
+#     forward under the same launch ceiling as training's forward.
 python - <<'PY'
 import json
+import sys
 
-# Single named tolerance per wall check (keep the comment above and these
-# constants in sync by construction: this is the only place the numbers
-# live).  BWD_WALL_TOL: grouped-vs-stacked backward wall (strict).
-# FUSED_WALL_TOL: fused-concat vs grouped forward jitter floor.
-BWD_WALL_TOL = 1.0
-FUSED_WALL_TOL = 1.10
-POOLED_WALL_TOL = 1.5
-POOLED_BWD_WALL_TOL = 1.15
-# Launch ceilings (keep in sync with tests/test_chained.py): chained
-# googlenet forward = 10 launches today, ceiling 12; default plan = 21
-# pallas kernels today, ceiling 22.
-LAUNCH_CEILING_CHAINED_FWD = 12
-LAUNCH_CEILING_UNCHAINED_PALLAS = 22
+sys.path.insert(0, ".")
+# The numbers live in benchmarks/tolerances.py — the SAME module
+# benchmarks/run.py uses to record the *_ok booleans, so the recorded
+# verdicts and these gates cannot disagree.  Rationale per number: the
+# comment block above + the tolerances module docstring.
+from benchmarks.tolerances import (
+    BWD_WALL_TOL, FUSED_WALL_TOL, POOLED_WALL_TOL, POOLED_BWD_WALL_TOL,
+    LAUNCH_CEILING_CHAINED_FWD, LAUNCH_CEILING_UNCHAINED_PALLAS)
 
 d = json.load(open("BENCH_plan.smoke.json"))
 bg = d["branch_gemm"]["bwd_wall_us"]
@@ -109,6 +110,22 @@ assert d["googlenet_chained_modeled_ok"], \
     f"chained modeled makespan not ahead: " \
     f"{d['googlenet_chained_makespan_modeled_s']} vs " \
     f"{d['googlenet_makespan_modeled_s']}"
+# serving smoke gates: the continuous-batching column must exist, the
+# post-warmup stream must have run entirely from the plan cache (zero
+# re-lowering, zero offset-table rebuilds, zero re-tracing), latency
+# percentiles must be real measurements, and the served chained forward
+# must stay under the training forward's launch ceiling (raggedness adds
+# no launches).
+s = d["serving"]
+assert s["plan_cache"]["hit_rate"] == 1.0 and s["plan_cache"]["misses"] == 0, \
+    f"warm serving path missed the plan cache: {s['plan_cache']}"
+assert s["p50_ms"] > 0 and s["p99_ms"] >= s["p50_ms"], s
+assert s["qps"] > 0 and s["dispatches"] > 0, s
+assert s["padded_m_factor_mean"] >= 1.0, s
+assert s["served_chained_launches_per_forward"] <= \
+    LAUNCH_CEILING_CHAINED_FWD, s
 print("smoke guardrails ok:", fg["wall_us"], bg)
 print("launch ceilings ok:", l)
+print("serving gates ok:", {k: s[k] for k in
+                            ("qps", "p50_ms", "p99_ms", "plan_cache")})
 PY

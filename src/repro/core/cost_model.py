@@ -502,6 +502,48 @@ def stacked_time(profiles: list[OpProfile],
     return max(c, m) + PIPELINE_LOSS * min(c, m) / len(profiles)
 
 
+def padded_m_factor(m_true: int, m_bucket: int, *, bm: int = 128) -> float:
+    """Padded-M waste of serving a ragged request mix through an M-bucket:
+    the grouped grid runs ``ceil(M_bucket/bm)`` row-blocks regardless of
+    how many rows are real, so a mix with ``m_true`` true rows pays
+    ``al(M_bucket)/al(m_true)`` of its useful compute (the same
+    aligned-tile inflation idiom ``stacked_time`` prices pad-to-max
+    branches with — M is just the dimension being padded here).  1.0 means
+    the bucket is free for this mix."""
+    def al(d):
+        return max(-(-d // bm) * bm, bm)
+    return al(m_bucket) / al(m_true)
+
+
+def serve_buckets(max_images: int, rows_per_image: int, *,
+                  bm: int = 128) -> list[int]:
+    """The serving driver's M-bucket ladder, a MODELED decision: start
+    from powers-of-two image counts up to ``max_images`` and merge any
+    bucket whose worst-case padded-M factor over the next bucket is 1.0 —
+    when ``rows_per_image`` image-rows already tile the bm-aligned grid
+    identically for both bucket sizes (every googlenet group has
+    rows_per_image a multiple of bm once H*W*B aligns), the smaller bucket
+    buys no fewer row-blocks and only fragments the plan/executable cache.
+    The surviving ladder is exactly the set of bucket sizes whose grids
+    actually differ."""
+    assert max_images >= 1 and rows_per_image >= 1
+    ladder = []
+    b = 1
+    while b < max_images:
+        ladder.append(b)
+        b *= 2
+    ladder.append(max_images)
+    kept = []
+    for lo, hi in zip(ladder, ladder[1:]):
+        # worst case inside bucket `hi` but servable by `lo`: m_true =
+        # lo * rows_per_image.  If hi's grid is no bigger, lo is redundant.
+        if padded_m_factor(lo * rows_per_image, hi * rows_per_image,
+                           bm=bm) > 1.0:
+            kept.append(lo)
+    kept.append(ladder[-1])
+    return kept
+
+
 # XLA interleaving recovers only part of the co-execution overlap: the
 # framework baseline the paper critiques emits ops together and hopes, so we
 # model it halfway between perfect overlap and serial launch.  Giving the

@@ -1012,8 +1012,21 @@ def _dedup_buckets(impls, names, pools) -> list[list[str]]:
     return buckets
 
 
+def _valid_rows(xs, valid_images, batch):
+    """Per-group ragged-M row count: ``valid_images`` requests pack
+    contiguously at the head of the batch axis, and every lhs of a group
+    has M = batch * rows_per_image for ITS spatial extent — so the true
+    row count is ``valid_images * (M // batch)``.  None when the launch
+    is not ragged."""
+    if valid_images is None:
+        return None
+    x0 = xs[0]
+    m = (x0[0] if isinstance(x0, (list, tuple)) else x0).shape[0]
+    return valid_images * (m // batch)
+
+
 def _run_grouped(group: ExecGroup, impls: dict[str, OpImpl], env: dict,
-                 interpret):
+                 interpret, valid_images=None, batch=None):
     # ragged, fused epilogue; pooled branches hand the launch their tap
     # views and the kernel's pool stage folds them (grouped_matmul_pooled
     # delegates to the plain grouped kernel when nothing pools)
@@ -1030,6 +1043,7 @@ def _run_grouped(group: ExecGroup, impls: dict[str, OpImpl], env: dict,
         # wide dw/db, split by the concat's own pullback).  Singleton
         # buckets stay ragged branches of the SAME launch.
         xs = [_branch_lhs(group, impls, env, bk[:1])[0] for bk in buckets]
+        mv = _valid_rows(xs, valid_images, batch)
         ws_b = [impls[bk[0]].gemm_w if len(bk) == 1 else
                 jnp.concatenate([impls[n].gemm_w for n in bk], axis=1)
                 for bk in buckets]
@@ -1038,9 +1052,10 @@ def _run_grouped(group: ExecGroup, impls: dict[str, OpImpl], env: dict,
                     jnp.concatenate([impls[n].gemm_bias for n in bk])
                     for bk in buckets]
             ys = grouped_matmul_pooled(xs, ws_b, bs_b, relu=True,
-                                       interpret=interpret)
+                                       m_valid=mv, interpret=interpret)
         else:
-            ys = grouped_matmul_pooled(xs, ws_b, interpret=interpret)
+            ys = grouped_matmul_pooled(xs, ws_b, m_valid=mv,
+                                       interpret=interpret)
         for bk, y in zip(buckets, ys):
             off = 0
             for n in bk:
@@ -1051,14 +1066,16 @@ def _run_grouped(group: ExecGroup, impls: dict[str, OpImpl], env: dict,
         return
     ws = [impls[n].gemm_w for n in names]
     xs = _branch_lhs(group, impls, env, names)
+    mv = _valid_rows(xs, valid_images, batch)
     if fusable:
         ys = grouped_matmul_pooled(xs, ws,
                                    [impls[n].gemm_bias for n in names],
-                                   relu=True, interpret=interpret)
+                                   relu=True, m_valid=mv,
+                                   interpret=interpret)
         for n, y in zip(names, ys):
             env[n] = impls[n].gemm_reshape(y)
     else:
-        ys = grouped_matmul_pooled(xs, ws, interpret=interpret)
+        ys = grouped_matmul_pooled(xs, ws, m_valid=mv, interpret=interpret)
         for n, y in zip(names, ys):
             env[n] = impls[n].gemm_post(y)
 
@@ -1290,7 +1307,7 @@ def _run_grouped_chained(group: ExecGroup, impls: dict[str, OpImpl],
 
 
 def _run_grouped_concat(group: ExecGroup, impls: dict[str, OpImpl], env: dict,
-                        interpret):
+                        interpret, valid_images=None, batch=None):
     """Fused epilogue-concat execution: the grouped kernel writes every
     in-launch branch's bias+ReLU output straight into its slice of the
     join's (M, sum N_g) buffer; join inputs produced by EARLIER groups
@@ -1324,7 +1341,8 @@ def _run_grouped_concat(group: ExecGroup, impls: dict[str, OpImpl], env: dict,
     y2d = grouped_matmul_pooled_concat(
         xs, ws, [impls[n].gemm_bias for n in order],
         offsets=[offs[n] for n in order], total=off, relu=True,
-        compact=False, interpret=interpret)
+        compact=False, m_valid=_valid_rows(xs, valid_images, batch),
+        interpret=interpret)
     bn = grouped_block_shape(
         x0.shape[0], [(w.shape[0], w.shape[1]) for w in ws],
         x0.dtype).bn
@@ -1375,7 +1393,8 @@ def _run_spatial_group(group: ExecGroup, impls: dict[str, OpImpl], env: dict,
 
 
 def run_plan(impls: dict[str, OpImpl], env: dict, plan: Plan, *,
-             mesh=None, interpret=None, timings: dict | None = None) -> dict:
+             mesh=None, interpret=None, timings: dict | None = None,
+             valid_images=None) -> dict:
     """Execute a lowered plan over ``impls``; returns the op->value env.
 
     ``env`` seeds graph sources (ops with no deps / externally computed
@@ -1387,11 +1406,28 @@ def run_plan(impls: dict[str, OpImpl], env: dict, plan: Plan, *,
     {mode: seconds} — only meaningful outside jit; degraded groups are
     keyed ``"<mode>->xla"`` so they never masquerade as the co-execution
     kernel they skipped.
+
+    ``valid_images`` (python int or traced i32 scalar) makes every
+    grouped/pooled/concat launch ragged-M: requests pack contiguously at
+    the head of the batch axis and only the first ``valid_images`` images
+    are real — each launch masks its padded-M tail in-kernel (zero-stored
+    epilogue rows past the group's true row count).  Inference-only (the
+    ragged kernels bypass the custom VJPs), and requires
+    ``plan.context["batch"]`` (the bucket size the plan was lowered for).
+    Batch elements never mix inside a launch (im2col, pooling and ring
+    taps are image-local by the border masks), so the first
+    ``valid_images`` outputs are exactly the dense run's — chained groups
+    therefore run unmasked: their padded rows carry isolated garbage the
+    caller's head slice drops.
     """
     import time as _time
     import jax as _jax
 
     mesh = mesh if mesh is not None else plan.context.get("mesh")
+    batch = plan.context.get("batch")
+    if valid_images is not None:
+        assert batch is not None, \
+            "valid_images needs plan.context['batch'] (the bucket size)"
     for group in plan.groups:
         t0 = _time.perf_counter() if timings is not None else 0.0
         pending = [n for n in group.ops if n not in env]
@@ -1401,11 +1437,13 @@ def run_plan(impls: dict[str, OpImpl], env: dict, plan: Plan, *,
         if group.mode in ("grouped", "grouped_pooled") \
                 and _grouped_runnable(group, impls, pending) \
                 and _pools_runnable(group, impls, env):
-            _run_grouped(group, impls, env, interpret)
+            _run_grouped(group, impls, env, interpret,
+                         valid_images=valid_images, batch=batch)
         elif group.mode == "grouped_concat" and _grouped_concat_runnable(
                 group, impls, env, pending) \
                 and _pools_runnable(group, impls, env):
-            _run_grouped_concat(group, impls, env, interpret)
+            _run_grouped_concat(group, impls, env, interpret,
+                                valid_images=valid_images, batch=batch)
         elif group.mode == "grouped_chained" and _chained_runnable(
                 group, impls, env, pending):
             _run_grouped_chained(group, impls, env, interpret)
@@ -1457,12 +1495,14 @@ def run_plan(impls: dict[str, OpImpl], env: dict, plan: Plan, *,
     return env
 
 
-def execute_plan(params, x, plan: Plan, *, mesh=None, interpret=None):
+def execute_plan(params, x, plan: Plan, *, mesh=None, interpret=None,
+                 valid_images=None):
     """Entry point for the repo's native subject: run a plan produced by
     ``models.cnn.plan_cnn`` on images ``x`` with CNN ``params``.
 
     Model-agnostic execution (custom graphs) goes through ``run_plan`` with
-    explicit ``OpImpl`` bindings instead.
+    explicit ``OpImpl`` bindings instead.  ``valid_images`` as in
+    ``run_plan`` (ragged-M serving batches; inference-only).
     """
     cfg = plan.context.get("cfg")
     if cfg is None:
@@ -1470,4 +1510,5 @@ def execute_plan(params, x, plan: Plan, *, mesh=None, interpret=None):
                          "models.cnn.plan_cnn, or use run_plan directly")
     from repro.models import cnn
     return cnn.forward_plan(params, cfg, x, plan, mesh=mesh,
-                            interpret=interpret)
+                            interpret=interpret,
+                            valid_images=valid_images)

@@ -192,7 +192,10 @@ def grouped_debug(xs, ws, *, bm=None, bn=None, bk=None) -> str:
 # forward kernel: y_g = epilogue(x_g @ w_g + b_g)
 # ---------------------------------------------------------------------------
 
-def _gmm_kernel(tab_ref, *refs, relu: bool, masked: bool):
+def _gmm_kernel(tab_ref, *refs, relu: bool, masked: bool,
+                ragged: bool = False):
+    if ragged:
+        mrow_ref, *refs = refs
     if masked:
         x_ref, m_ref, w_ref, b_ref, o_ref, acc_ref = refs
     else:
@@ -214,14 +217,27 @@ def _gmm_kernel(tab_ref, *refs, relu: bool, masked: bool):
         y = acc_ref[...] + b_ref[...].astype(jnp.float32)
         if relu:
             y = jnp.maximum(y, 0.0)
+        if ragged:
+            # ragged-M epilogue mask: the table's M-block-index row picks
+            # this tile's per-block valid-row count out of the second
+            # prefetched scalar vector; rows at/past it store zeros (the
+            # deterministic padded-M tail — same first-class in-kernel
+            # masking as the ReLU cotangent's dY fold)
+            valid = mrow_ref[tab_ref[6, t]]
+            ri = jax.lax.broadcasted_iota(jnp.int32, y.shape, 0)
+            y = jnp.where(ri < valid, y, 0.0)
         o_ref[...] = y.astype(o_ref.dtype)
 
 
 @functools.lru_cache(maxsize=512)
 def _plan_tiles(m_blocks: int, kbs: tuple[int, ...], nbs: tuple[int, ...]):
     """Offset table for the flattened grid (hashable block counts in,
-    (6, T) int32 out) — pure shape bookkeeping, cached across traces."""
-    rows: list[list[int]] = [[], [], [], [], [], []]
+    (7, T) int32 out) — pure shape bookkeeping, cached across traces.
+    Row 6 is the step's M-block index — consumed only by ragged-M
+    launches (the epilogue mask's index into the per-M-block valid-row
+    vector); appended so rows 0-5 keep their positions for every
+    existing consumer."""
+    rows: list[list[int]] = [[], [], [], [], [], [], []]
     noff = xbase = wbase = obase = 0
     for nkb, npb in zip(kbs, nbs):
         for i in range(m_blocks):
@@ -233,6 +249,7 @@ def _plan_tiles(m_blocks: int, kbs: tuple[int, ...], nbs: tuple[int, ...]):
                     rows[3].append(1 if kk == 0 else 0)
                     rows[4].append(1 if kk == nkb - 1 else 0)
                     rows[5].append(obase + i * npb + j)
+                    rows[6].append(i)
         noff += npb
         xbase += m_blocks * nkb
         wbase += nkb * npb
@@ -253,15 +270,42 @@ def _device_table(builder, *args):
         return jnp.asarray(builder(*args))
 
 
+def _ragged_mrows(m_valid, mb: int, bm: int):
+    """Per-M-block valid-row counts for a ragged-M launch: block i holds
+    ``clip(m_valid - i*bm, 0, bm)`` true rows.  ``m_valid`` is the TOTAL
+    true row count (requests pack contiguously along M, so raggedness is
+    tail-only) — a python int or a traced i32 scalar: every request mix
+    inside one padded-M bucket shares the same offset table and traced
+    executable and differs only in this runtime vector, which rides the
+    launch as a second scalar-prefetch operand."""
+    mv = jnp.asarray(m_valid, jnp.int32)
+    return jnp.clip(mv - jnp.arange(mb, dtype=jnp.int32) * bm, 0, bm)
+
+
+def _ragged_index_maps(ragged: bool):
+    """(tile index map builder, bias index map) for a grouped-family
+    launch: ragged launches prefetch TWO scalar operands (table + valid
+    rows), so every index map gains the trailing ``mrow`` argument."""
+    if ragged:
+        return (lambda row: (lambda t, tab, mrow, row=row:
+                             (tab[row, t], 0, 0)),
+                lambda t, tab, mrow: (0, tab[2, t]))
+    return (lambda row: (lambda t, tab, row=row: (tab[row, t], 0, 0)),
+            lambda t, tab: (0, tab[2, t]))
+
+
 def grouped_matmul(xs, ws, bs=None, *, relu: bool = False, mask=None,
-                   bm: int | None = None, bn: int | None = None,
+                   m_valid=None, bm: int | None = None, bn: int | None = None,
                    bk: int | None = None, interpret: bool = False):
     """[x_g @ w_g (+ b_g) (+ ReLU)] for ragged (K_g, N_g), one kernel.
 
     xs: G arrays (M, K_g) — shared M; ws: G arrays (K_g, N_g);
     bs: G arrays (N_g,) or None; mask: G arrays (M, K_g) or None —
     x_g is zeroed where mask_g <= 0 in-kernel (the ReLU cotangent mask
-    of the backward dx GEMMs).  Block sizes default to
+    of the backward dx GEMMs).  ``m_valid`` (python int or traced i32
+    scalar) makes the launch ragged-M: rows at/past it are padding and
+    the epilogue stores zeros there (``_ragged_mrows``) — the serving
+    path's bucketed multi-request batches.  Block sizes default to
     ``grouped_block_shape``.  Returns G arrays (M, N_g).
     """
     g = len(xs)
@@ -306,34 +350,36 @@ def grouped_matmul(xs, ws, bs=None, *, relu: bool = False, mask=None,
         mb, tuple(kp // bk for kp in kps), tuple(np_ // bn for np_ in nps))
     o_tiles = mb * sum(np_ // bn for np_ in nps)
 
-    in_specs = [pl.BlockSpec((None, bm, bk), lambda t, tab: (tab[0, t], 0, 0))]
+    ragged = m_valid is not None
+    ix, ixb = _ragged_index_maps(ragged)
+    in_specs = [pl.BlockSpec((None, bm, bk), ix(0))]
     ins = [xpk]
     if mask is not None:
         assert all(mk.shape == x.shape for mk, x in zip(mask, xs)), \
             [(mk.shape, x.shape) for mk, x in zip(mask, xs)]
-        in_specs.append(
-            pl.BlockSpec((None, bm, bk), lambda t, tab: (tab[0, t], 0, 0)))
+        in_specs.append(pl.BlockSpec((None, bm, bk), ix(0)))
         ins.append(pack_x(mask))
     in_specs += [
-        pl.BlockSpec((None, bk, bn), lambda t, tab: (tab[1, t], 0, 0)),
-        pl.BlockSpec((1, bn), lambda t, tab: (0, tab[2, t])),
+        pl.BlockSpec((None, bk, bn), ix(1)),
+        pl.BlockSpec((1, bn), ixb),
     ]
     ins += [wpk, bpk]
 
     grid_spec = pltpu.PrefetchScalarGridSpec(
-        num_scalar_prefetch=1,
+        num_scalar_prefetch=2 if ragged else 1,
         grid=(tab.shape[1],),
         in_specs=in_specs,
-        out_specs=pl.BlockSpec((None, bm, bn),
-                               lambda t, tab: (tab[5, t], 0, 0)),
+        out_specs=pl.BlockSpec((None, bm, bn), ix(5)),
         scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
     )
+    scalars = (tab, _ragged_mrows(m_valid, mb, bm)) if ragged else (tab,)
     out = pl.pallas_call(
-        functools.partial(_gmm_kernel, relu=relu, masked=mask is not None),
+        functools.partial(_gmm_kernel, relu=relu, masked=mask is not None,
+                          ragged=ragged),
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((o_tiles, bm, bn), xs[0].dtype),
         interpret=interpret,
-    )(tab, *ins)
+    )(*scalars, *ins)
 
     outs, obase = [], 0
     for w, np_ in zip(ws, nps):
@@ -345,8 +391,10 @@ def grouped_matmul(xs, ws, bs=None, *, relu: bool = False, mask=None,
     return outs
 
 
-def grouped_matmul_ref(xs, ws, bs=None, *, relu: bool = False, mask=None):
-    """Per-branch XLA oracle for tests/benchmarks."""
+def grouped_matmul_ref(xs, ws, bs=None, *, relu: bool = False, mask=None,
+                       m_valid=None):
+    """Per-branch XLA oracle for tests/benchmarks.  ``m_valid`` mirrors
+    the ragged-M launch: rows at/past it are zeroed in the output."""
     outs = []
     for i, (x, w) in enumerate(zip(xs, ws)):
         if mask is not None:
@@ -356,6 +404,9 @@ def grouped_matmul_ref(xs, ws, bs=None, *, relu: bool = False, mask=None):
             y = y + bs[i].astype(jnp.float32)
         if relu:
             y = jnp.maximum(y, 0.0)
+        if m_valid is not None:
+            ri = jnp.arange(y.shape[0], dtype=jnp.int32)[:, None]
+            y = jnp.where(ri < jnp.asarray(m_valid, jnp.int32), y, 0.0)
         outs.append(y.astype(x.dtype))
     return outs
 
@@ -374,8 +425,10 @@ def _plan_tiles_concat(m_blocks: int, kbs: tuple[int, ...],
     layout: slot = mi * sum(npb_g) + (colblock base of branch g) + j.
     One ``reshape . transpose . reshape`` then yields the whole
     (Mp, sum Np_g) padded join — no per-branch unpack — and a single
-    column gather compacts away the per-branch block padding."""
-    rows: list[list[int]] = [[] for _ in range(6)]
+    column gather compacts away the per-branch block padding.  Row 6 is
+    the appended M-block index (ragged-M epilogue mask; see
+    ``_plan_tiles``)."""
+    rows: list[list[int]] = [[] for _ in range(7)]
     xbases, wbases, cbases = [], [], []
     xb = wb = cb = 0
     for nkb, npb in zip(kbs, nbs):
@@ -396,6 +449,7 @@ def _plan_tiles_concat(m_blocks: int, kbs: tuple[int, ...],
                     rows[3].append(1 if kk == 0 else 0)
                     rows[4].append(1 if kk == nkb - 1 else 0)
                     rows[5].append(i * ncbt + cbases[g] + j)
+                    rows[6].append(i)
     return np.array(rows, np.int32)
 
 
@@ -417,8 +471,9 @@ def _concat_gather_index(offsets: tuple[int, ...], ns: tuple[int, ...],
 
 def grouped_matmul_concat(xs, ws, bs=None, *, offsets, total: int,
                           relu: bool = False, compact: bool = True,
-                          bm: int | None = None, bn: int | None = None,
-                          bk: int | None = None, interpret: bool = False):
+                          m_valid=None, bm: int | None = None,
+                          bn: int | None = None, bk: int | None = None,
+                          interpret: bool = False):
     """[x_g @ w_g (+ b_g) (+ ReLU)] assembled into the fork/join's concat
     layout — ONE (M, total) output, branch g's columns at ``offsets[g]``.
 
@@ -440,7 +495,8 @@ def grouped_matmul_concat(xs, ws, bs=None, *, offsets, total: int,
     cumulative padded base — for callers that splice the passthrough
     segments and strip the padding in one pass (``core/plan.py``'s
     grouped_concat executor); ``offsets``/``total`` then only fix the
-    branch order.
+    branch order.  ``m_valid`` as in ``grouped_matmul`` (ragged-M
+    epilogue mask: rows at/past it store zeros).
     """
     g = len(xs)
     assert g == len(ws) and g == len(offsets) and g >= 1
@@ -483,24 +539,27 @@ def grouped_matmul_concat(xs, ws, bs=None, *, offsets, total: int,
         mb, tuple(kp // bk for kp in kps), tuple(np_ // bn for np_ in nps))
     ncbt = sum(np_ // bn for np_ in nps)
 
+    ragged = m_valid is not None
+    ix, ixb = _ragged_index_maps(ragged)
     grid_spec = pltpu.PrefetchScalarGridSpec(
-        num_scalar_prefetch=1,
+        num_scalar_prefetch=2 if ragged else 1,
         grid=(tab.shape[1],),
         in_specs=[
-            pl.BlockSpec((None, bm, bk), lambda t, tab: (tab[0, t], 0, 0)),
-            pl.BlockSpec((None, bk, bn), lambda t, tab: (tab[1, t], 0, 0)),
-            pl.BlockSpec((1, bn), lambda t, tab: (0, tab[2, t])),
+            pl.BlockSpec((None, bm, bk), ix(0)),
+            pl.BlockSpec((None, bk, bn), ix(1)),
+            pl.BlockSpec((1, bn), ixb),
         ],
-        out_specs=pl.BlockSpec((None, bm, bn),
-                               lambda t, tab: (tab[5, t], 0, 0)),
+        out_specs=pl.BlockSpec((None, bm, bn), ix(5)),
         scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
     )
+    scalars = (tab, _ragged_mrows(m_valid, mb, bm)) if ragged else (tab,)
     out = pl.pallas_call(
-        functools.partial(_gmm_kernel, relu=relu, masked=False),
+        functools.partial(_gmm_kernel, relu=relu, masked=False,
+                          ragged=ragged),
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((mb * ncbt, bm, bn), xs[0].dtype),
         interpret=interpret,
-    )(tab, xpk, wpk, bpk)
+    )(*scalars, xpk, wpk, bpk)
     # m-outermost slots: ONE layout pass unpacks the padded join whole
     y2 = out.reshape(mb, ncbt, bm, bn).transpose(0, 2, 1, 3)
     y2 = y2.reshape(mp, ncbt * bn)[:m]
@@ -512,12 +571,12 @@ def grouped_matmul_concat(xs, ws, bs=None, *, offsets, total: int,
 
 
 def grouped_matmul_concat_ref(xs, ws, bs=None, *, offsets, total: int,
-                              relu: bool = False):
+                              relu: bool = False, m_valid=None):
     """Per-branch XLA oracle: scatter each branch's GEMM into the join
     layout (uncovered columns are zero here, unspecified in the kernel)."""
     m = xs[0].shape[0]
     out = jnp.zeros((m, total), xs[0].dtype)
-    ys = grouped_matmul_ref(xs, ws, bs, relu=relu)
+    ys = grouped_matmul_ref(xs, ws, bs, relu=relu, m_valid=m_valid)
     for y, off in zip(ys, offsets):
         out = jax.lax.dynamic_update_slice(out, y, (0, off))
     return out
@@ -599,13 +658,17 @@ def pool_cotangent_taps(taps, pooled, d_pooled):
     return outs
 
 
-def _gmm_pooled_kernel(tab_ref, x_ref, w_ref, b_ref, o_ref,
-                       acc_ref, pool_ref, *, relu: bool):
+def _gmm_pooled_kernel(tab_ref, *refs, relu: bool, ragged: bool = False):
     """``_gmm_kernel`` plus the in-kernel pre-GEMM pool stage.  Pool steps
     (row 6) max one tap tile of the raw input into the pooled-lhs VMEM
     scratch slot ``ps`` (row 8; row 7 marks the first tap, which seeds the
     slot); GEMM steps with row 9 set draw their lhs from that slot instead
-    of the X ref.  Everything else is the unmodified grouped step."""
+    of the X ref.  Everything else is the unmodified grouped step —
+    including the ragged-M epilogue mask (row 10 = M-block index into the
+    second prefetched scalar vector)."""
+    if ragged:
+        mrow_ref, *refs = refs
+    x_ref, w_ref, b_ref, o_ref, acc_ref, pool_ref = refs
     t = pl.program_id(0)
     is_pool = tab_ref[6, t] == 1
     ps = tab_ref[8, t]
@@ -643,6 +706,10 @@ def _gmm_pooled_kernel(tab_ref, x_ref, w_ref, b_ref, o_ref,
             y = acc_ref[...] + b_ref[...].astype(jnp.float32)
             if relu:
                 y = jnp.maximum(y, 0.0)
+            if ragged:
+                valid = mrow_ref[tab_ref[10, t]]
+                ri = jax.lax.broadcasted_iota(jnp.int32, y.shape, 0)
+                y = jnp.where(ri < valid, y, 0.0)
             o_ref[...] = y.astype(o_ref.dtype)
 
 
@@ -674,8 +741,10 @@ def _plan_tiles_pooled(m_blocks: int, kbs: tuple[int, ...],
         row 7  pfirst 1 on a tile's first tap (seed the scratch slot)
         row 8  ps     pooled-lhs scratch slot (the tile's k-block index)
         row 9  upool  1 = GEMM step draws its lhs from the scratch
+        row 10 mi     M-block index (ragged-M epilogue mask; appended —
+                      rows 0-9 keep their positions)
     """
-    rows: list[list[int]] = [[] for _ in range(10)]
+    rows: list[list[int]] = [[] for _ in range(11)]
     # cbases doubles as the bias col-block offset: the packed bias and
     # the concat panel share one column-block numbering (like
     # _plan_tiles_concat's single accumulator)
@@ -709,6 +778,7 @@ def _plan_tiles_pooled(m_blocks: int, kbs: tuple[int, ...],
                     rows[7].append(1 if t == 0 else 0)
                     rows[8].append(kk)
                     rows[9].append(0)
+                    rows[10].append(i)
         for j in range(npb):
             for kk in range(nkb):
                 rows[0].append(xbases[g] + (i * nkb + kk) * tp)
@@ -724,6 +794,7 @@ def _plan_tiles_pooled(m_blocks: int, kbs: tuple[int, ...],
                 # are fetched) — pin them to slot 0, always in bounds
                 rows[8].append(kk if pooled else 0)
                 rows[9].append(1 if pooled else 0)
+                rows[10].append(i)
 
     if concat:
         for i in range(m_blocks):
@@ -771,8 +842,8 @@ def _branch_taps(xs, tap_limit: int | None = None):
 
 
 def _pooled_launch(xs, ws, bs, *, relu, concat, offsets=None, total=None,
-                   compact=True, bm=None, bn=None, bk=None, interpret=False,
-                   tap_limit=None):
+                   compact=True, m_valid=None, bm=None, bn=None, bk=None,
+                   interpret=False, tap_limit=None):
     """Shared implementation of the pooled grouped launch (plain and
     fused-concat output layouts)."""
     g = len(xs)
@@ -835,25 +906,27 @@ def _pooled_launch(xs, ws, bs, *, relu, concat, offsets=None, total=None,
                    default=1)
     o_tiles = mb * sum(np_ // bn for np_ in nps)
 
+    ragged = m_valid is not None
+    ix, ixb = _ragged_index_maps(ragged)
     grid_spec = pltpu.PrefetchScalarGridSpec(
-        num_scalar_prefetch=1,
+        num_scalar_prefetch=2 if ragged else 1,
         grid=(tab.shape[1],),
         in_specs=[
-            pl.BlockSpec((None, bm, bk), lambda t, tab: (tab[0, t], 0, 0)),
-            pl.BlockSpec((None, bk, bn), lambda t, tab: (tab[1, t], 0, 0)),
-            pl.BlockSpec((1, bn), lambda t, tab: (0, tab[2, t])),
+            pl.BlockSpec((None, bm, bk), ix(0)),
+            pl.BlockSpec((None, bk, bn), ix(1)),
+            pl.BlockSpec((1, bn), ixb),
         ],
-        out_specs=pl.BlockSpec((None, bm, bn),
-                               lambda t, tab: (tab[5, t], 0, 0)),
+        out_specs=pl.BlockSpec((None, bm, bn), ix(5)),
         scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32),
                         pltpu.VMEM((nkb_pool, bm, bk), jnp.float32)],
     )
+    scalars = (tab, _ragged_mrows(m_valid, mb, bm)) if ragged else (tab,)
     out = pl.pallas_call(
-        functools.partial(_gmm_pooled_kernel, relu=relu),
+        functools.partial(_gmm_pooled_kernel, relu=relu, ragged=ragged),
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((o_tiles, bm, bn), tls[0][0].dtype),
         interpret=interpret,
-    )(tab, xpk, wpk, bpk)
+    )(*scalars, xpk, wpk, bpk)
 
     if concat:
         ncbt = sum(np_ // bn for np_ in nps)
@@ -875,8 +948,9 @@ def _pooled_launch(xs, ws, bs, *, relu, concat, offsets=None, total=None,
 
 
 def grouped_matmul_pooled(xs, ws, bs=None, *, relu: bool = False,
-                          bm: int | None = None, bn: int | None = None,
-                          bk: int | None = None, interpret: bool = False,
+                          m_valid=None, bm: int | None = None,
+                          bn: int | None = None, bk: int | None = None,
+                          interpret: bool = False,
                           tap_limit: int | None = None):
     """[maxpool(x_g) @ w_g (+ b_g) (+ ReLU)] for ragged (K_g, N_g) in ONE
     launch, the maxpool computed IN-KERNEL as a pre-GEMM stage.
@@ -888,55 +962,62 @@ def grouped_matmul_pooled(xs, ws, bs=None, *, relu: bool = False,
     activation never materializes in HBM and no standalone pooling launch
     remains.  Branches whose tap count exceeds ``tap_limit`` (default
     ``POOL_TAP_LIMIT``) fold at pack time instead — see the constant's
-    comment.  With no pooled branch this is exactly ``grouped_matmul``.
+    comment.  ``m_valid`` as in ``grouped_matmul`` (ragged-M epilogue
+    mask).  With no pooled branch this is exactly ``grouped_matmul``.
     Returns G arrays (M, N_g).
     """
     if all(not isinstance(x, (list, tuple)) for x in xs):
-        return grouped_matmul(xs, ws, bs, relu=relu, bm=bm, bn=bn, bk=bk,
-                              interpret=interpret)
+        return grouped_matmul(xs, ws, bs, relu=relu, m_valid=m_valid,
+                              bm=bm, bn=bn, bk=bk, interpret=interpret)
     return _pooled_launch(xs, ws, bs, relu=relu, concat=False,
-                          bm=bm, bn=bn, bk=bk, interpret=interpret,
-                          tap_limit=tap_limit)
+                          m_valid=m_valid, bm=bm, bn=bn, bk=bk,
+                          interpret=interpret, tap_limit=tap_limit)
 
 
 def grouped_matmul_pooled_concat(xs, ws, bs=None, *, offsets, total: int,
                                  relu: bool = False, compact: bool = True,
-                                 bm: int | None = None, bn: int | None = None,
+                                 m_valid=None, bm: int | None = None,
+                                 bn: int | None = None,
                                  bk: int | None = None,
                                  interpret: bool = False,
                                  tap_limit: int | None = None):
     """``grouped_matmul_concat`` with the in-kernel pool stage: pooled
     branches' epilogues land in the join's [M, total] layout like every
     other branch — one launch covers pooling, GEMMs, bias+ReLU AND the
-    concat.  ``xs``/``compact`` semantics as in the pooled/concat
-    wrappers.  With no pooled branch this is ``grouped_matmul_concat``."""
+    concat.  ``xs``/``compact``/``m_valid`` semantics as in the
+    pooled/concat wrappers.  With no pooled branch this is
+    ``grouped_matmul_concat``."""
     if all(not isinstance(x, (list, tuple)) for x in xs):
         return grouped_matmul_concat(xs, ws, bs, offsets=offsets,
                                      total=total, relu=relu,
-                                     compact=compact, bm=bm, bn=bn, bk=bk,
+                                     compact=compact, m_valid=m_valid,
+                                     bm=bm, bn=bn, bk=bk,
                                      interpret=interpret)
     return _pooled_launch(xs, ws, bs, relu=relu, concat=True,
                           offsets=offsets, total=total, compact=compact,
-                          bm=bm, bn=bn, bk=bk, interpret=interpret,
-                          tap_limit=tap_limit)
+                          m_valid=m_valid, bm=bm, bn=bn, bk=bk,
+                          interpret=interpret, tap_limit=tap_limit)
 
 
-def grouped_matmul_pooled_ref(xs, ws, bs=None, *, relu: bool = False):
+def grouped_matmul_pooled_ref(xs, ws, bs=None, *, relu: bool = False,
+                              m_valid=None):
     """Per-branch XLA oracle: fold each branch's taps, then plain GEMMs."""
     tls, tns = _branch_taps(xs)
     flat = [pool_from_taps(tl) if tn > 1 else tl[0]
             for tl, tn in zip(tls, tns)]
-    return grouped_matmul_ref(flat, ws, bs, relu=relu)
+    return grouped_matmul_ref(flat, ws, bs, relu=relu, m_valid=m_valid)
 
 
 def grouped_matmul_pooled_concat_ref(xs, ws, bs=None, *, offsets,
-                                     total: int, relu: bool = False):
+                                     total: int, relu: bool = False,
+                                     m_valid=None):
     """Oracle for the pooled concat layout (uncovered columns zero)."""
     tls, tns = _branch_taps(xs)
     flat = [pool_from_taps(tl) if tn > 1 else tl[0]
             for tl, tn in zip(tls, tns)]
     return grouped_matmul_concat_ref(flat, ws, bs, offsets=offsets,
-                                     total=total, relu=relu)
+                                     total=total, relu=relu,
+                                     m_valid=m_valid)
 
 
 # ---------------------------------------------------------------------------

@@ -169,7 +169,7 @@ _branch_matmul_vjp.defvjp(_branch_matmul_fwd, _branch_matmul_bwd)
 # grouped ragged branch GEMM (per-branch (K_g, N_g), fused epilogue)
 # ---------------------------------------------------------------------------
 
-def grouped_matmul(xs, ws, bs=None, *, relu: bool = False,
+def grouped_matmul(xs, ws, bs=None, *, relu: bool = False, m_valid=None,
                    interpret: bool | None = None):
     """G ragged branch GEMMs (M, K_g) @ (K_g, N_g) (+bias, +ReLU) in ONE
     kernel — see ``kernels/grouped_matmul.py``.
@@ -179,8 +179,20 @@ def grouped_matmul(xs, ws, bs=None, *, relu: bool = False,
     (``kernels/grouped_matmul.py::grouped_matmul_bwd``) — masked dx, dw
     and db over a concatenated two-phase offset table, with the dY/mask
     tile stacks packed once and shared between the phases.  No per-branch
-    XLA fallback, and no second launch, remains on the grouped path."""
+    XLA fallback, and no second launch, remains on the grouped path.
+
+    ``m_valid`` (python int or traced i32 scalar) makes the launch
+    ragged-M — the serving path's bucketed multi-request batches, where
+    rows at/past ``m_valid`` are padding and the epilogue stores zeros
+    there.  The ragged path is INFERENCE-ONLY (a direct kernel call, no
+    custom VJP: an integer row count has no meaningful cotangent and the
+    serving driver never differentiates)."""
     interpret = default_interpret() if interpret is None else interpret
+    if m_valid is not None:
+        return list(_gmm.grouped_matmul(list(xs), list(ws),
+                                        None if bs is None else list(bs),
+                                        relu=relu, m_valid=m_valid,
+                                        interpret=interpret))
     return _grouped_vjp(tuple(xs), tuple(ws),
                         None if bs is None else tuple(bs), relu, interpret)
 
@@ -224,7 +236,7 @@ _grouped_vjp.defvjp(_grouped_fwd, _grouped_bwd)
 
 def grouped_matmul_concat(xs, ws, bs=None, *, offsets, total: int,
                           relu: bool = False, compact: bool = True,
-                          interpret: bool | None = None):
+                          m_valid=None, interpret: bool | None = None):
     """Fused epilogue-concat grouped GEMM: G ragged branches whose
     bias+ReLU epilogues write straight into the fork/join's (M, total)
     concat layout at per-branch column ``offsets`` — the join leaves the
@@ -237,8 +249,15 @@ def grouped_matmul_concat(xs, ws, bs=None, *, offsets, total: int,
     instead (see the kernel wrapper).  Differentiable: the custom VJP
     slices each branch's cotangent (and its ReLU mask) out of the joint
     buffer and emits ONE combined backward launch (masked dx + dw/db,
-    ``grouped_matmul_bwd``)."""
+    ``grouped_matmul_bwd``).  ``m_valid`` makes the launch ragged-M
+    (inference-only direct kernel call — see ``grouped_matmul``)."""
     interpret = default_interpret() if interpret is None else interpret
+    if m_valid is not None:
+        return _gmm.grouped_matmul_concat(
+            list(xs), list(ws), None if bs is None else list(bs),
+            offsets=tuple(int(o) for o in offsets), total=int(total),
+            relu=relu, compact=compact, m_valid=m_valid,
+            interpret=interpret)
     return _concat_vjp(tuple(xs), tuple(ws),
                        None if bs is None else tuple(bs),
                        tuple(int(o) for o in offsets), int(total), relu,
@@ -305,7 +324,7 @@ _concat_vjp.defvjp(_concat_fwd, _concat_bwd)
 # ---------------------------------------------------------------------------
 
 def grouped_matmul_pooled(xs, ws, bs=None, *, relu: bool = False,
-                          interpret: bool | None = None):
+                          m_valid=None, interpret: bool | None = None):
     """Grouped ragged branch GEMMs with each pooled branch's maxpool
     computed IN-KERNEL as a pre-GEMM stage (``xs[g]`` a sequence of
     ``pool_tap_views`` tap arrays) — ONE launch covers pooling, GEMMs and
@@ -317,8 +336,13 @@ def grouped_matmul_pooled(xs, ws, bs=None, *, relu: bool = False,
     back through the first-argmax window mask in the unpacking pass
     (elementwise, like the ReLU cotangent mask folded into the packing —
     gradients match the XLA ``reduce_window`` oracle bit-for-bit,
-    tie-breaking included)."""
+    tie-breaking included).  ``m_valid`` makes the launch ragged-M
+    (inference-only direct kernel call — see ``grouped_matmul``)."""
     interpret = default_interpret() if interpret is None else interpret
+    if m_valid is not None:
+        return list(_gmm.grouped_matmul_pooled(
+            list(xs), list(ws), None if bs is None else list(bs),
+            relu=relu, m_valid=m_valid, interpret=interpret))
     xs_t = tuple(tuple(x) if isinstance(x, (list, tuple)) else x
                  for x in xs)
     return _pooled_vjp(xs_t, tuple(ws),
@@ -327,15 +351,23 @@ def grouped_matmul_pooled(xs, ws, bs=None, *, relu: bool = False,
 
 def grouped_matmul_pooled_concat(xs, ws, bs=None, *, offsets, total: int,
                                  relu: bool = False, compact: bool = True,
-                                 interpret: bool | None = None):
+                                 m_valid=None, interpret: bool | None = None):
     """The fused epilogue-concat grouped GEMM with the in-kernel pool
     stage: pooling + GEMMs + bias/ReLU + the join assembly in ONE launch
     (``kernels/grouped_matmul.py::grouped_matmul_pooled_concat``).  Same
     ``offsets``/``total``/``compact`` semantics as
     ``grouped_matmul_concat``; the custom VJP slices the joint cotangent
     and emits ONE combined backward launch, scattering pooled branches'
-    cotangents through their argmax masks in its unpacking."""
+    cotangents through their argmax masks in its unpacking.  ``m_valid``
+    makes the launch ragged-M (inference-only direct kernel call — see
+    ``grouped_matmul``)."""
     interpret = default_interpret() if interpret is None else interpret
+    if m_valid is not None:
+        return _gmm.grouped_matmul_pooled_concat(
+            list(xs), list(ws), None if bs is None else list(bs),
+            offsets=tuple(int(o) for o in offsets), total=int(total),
+            relu=relu, compact=compact, m_valid=m_valid,
+            interpret=interpret)
     xs_t = tuple(tuple(x) if isinstance(x, (list, tuple)) else x
                  for x in xs)
     return _pooled_concat_vjp(xs_t, tuple(ws),

@@ -1,11 +1,35 @@
-"""Batched serving loop: continuous batched decode with a KV cache.
+"""Serving drivers — transformer decode AND planned-CNN continuous batching.
 
-  PYTHONPATH=src python -m repro.launch.serve --arch llama3-8b --reduced \
-      --batch 4 --prompt-len 32 --gen 32
+Two serving paths share this module:
 
-Serving path = prefill (cache fill) + decode steps (one token per step,
-greedy).  The same ``decode_step`` lowers at production shapes in the
-dry-run (decode_32k / long_500k cells).
+  transformer (``--arch llama3-8b ...``): prefill (cache fill) + decode
+  steps (one token per step, greedy) with a KV cache.  The same
+  ``decode_step`` lowers at production shapes in the dry-run
+  (decode_32k / long_500k cells).
+
+      PYTHONPATH=src python -m repro.launch.serve --arch llama3-8b \\
+          --reduced --batch 4 --prompt-len 32 --gen 32
+
+  CNN (``--arch googlenet ...``): continuous-batching inference on the
+  PLANNED executor — the paper's co-execution thesis applied where Opara
+  aims it (small ragged inference batches).  Requests (1..max images
+  each) are admitted FIFO into the current batch, the batch is padded up
+  to an M-bucket from the cost model's ladder
+  (``cost_model.serve_buckets`` — bucket granularity is a modeled
+  decision: pow2 image counts, merged where bm-alignment makes the
+  padding free), and each bucket dispatches through ONE cached plan +
+  offset tables + jitted executable (``core.plan_cache``).  The ragged
+  ``valid_images`` operand is a traced i32 scalar, so every request mix
+  in a bucket re-enters the same trace; the grouped-family kernels mask
+  the padded-M tail in-kernel.  A warm request pays zero lowering, zero
+  ``_plan_tiles*`` rebuilds and zero re-tracing — the driver warms every
+  bucket once, resets the cache counters, and asserts the measured
+  stream runs at hit rate 1.0.  Reports QPS and p50/p99 dispatch latency
+  (``serve_cnn_metrics`` — the numbers ``benchmarks/run.py`` records
+  into BENCH_plan.json).
+
+      PYTHONPATH=src python -m repro.launch.serve --arch googlenet \\
+          --reduced --requests 12 --max-images 4
 """
 from __future__ import annotations
 
@@ -23,16 +47,121 @@ from repro.models import transformer as T
 from repro.sharding import specs as SH
 
 
-def main(argv=None):
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", required=True)
-    ap.add_argument("--reduced", action="store_true")
-    ap.add_argument("--batch", type=int, default=4)
-    ap.add_argument("--prompt-len", type=int, default=32)
-    ap.add_argument("--gen", type=int, default=32)
-    ap.add_argument("--seed", type=int, default=0)
-    args = ap.parse_args(argv)
+def _bucket_for(n: int, ladder: list[int]) -> int:
+    for b in ladder:
+        if n <= b:
+            return b
+    return ladder[-1]
 
+
+def serve_cnn_metrics(cfg, *, max_images: int = 4, num_requests: int = 12,
+                      seed: int = 0, chain_modules: bool = True,
+                      interpret=None) -> dict:
+    """Run the continuous-batching loop on ``cfg`` and return metrics.
+
+    Synthetic seeded request stream: each request carries 1..max_images
+    images.  Greedy FIFO admission packs consecutive requests while they
+    fit under ``max_images`` total; the co-batch dispatches through the
+    bucket's cached plan.  Warmup dispatches one batch per ladder bucket
+    (populating plan cache, device offset tables and jit traces), then
+    counters reset and the measured stream must be all cache hits.
+    """
+    from repro.core import cost_model as CM
+    from repro.core import plan_cache
+    from repro.launch.steps import make_cnn_serve_step
+    from repro.models import cnn as CNN
+
+    h, w, c = cfg.img
+    ladder = CM.serve_buckets(max_images, h * w)
+    rng = np.random.default_rng(seed)
+    params = CNN.init_params(cfg, jax.random.PRNGKey(seed))
+
+    def executable_for(bucket: int):
+        entry = plan_cache.cached_cnn_plan(cfg, bucket,
+                                           chain_modules=chain_modules)
+        if entry.executable is None:
+            step = make_cnn_serve_step(cfg, entry.plan, interpret=interpret)
+            entry.executable = jax.jit(step)
+        return entry
+
+    def dispatch(reqs):
+        n = sum(r.shape[0] for r in reqs)
+        bucket = _bucket_for(n, ladder)
+        entry = executable_for(bucket)
+        imgs = np.zeros((bucket, h, w, c), np.float32)
+        off = 0
+        for r in reqs:
+            imgs[off:off + r.shape[0]] = r
+            off += r.shape[0]
+        t0 = time.perf_counter()
+        logits = entry.executable(params, jnp.asarray(imgs), jnp.int32(n))
+        jax.block_until_ready(logits)
+        lat = time.perf_counter() - t0
+        return logits, lat, bucket, n
+
+    # request stream: per-request image counts in [1, max_images]
+    sizes = rng.integers(1, max_images + 1, size=num_requests)
+    requests = [rng.normal(size=(int(s), h, w, c)).astype(np.float32)
+                for s in sizes]
+
+    # warmup: one dispatch per bucket — populates every cache layer
+    for b in ladder:
+        dispatch([np.zeros((b, h, w, c), np.float32)])
+    plan_cache.reset()          # counters only; entries stay warm
+
+    lat_s, queue = [], list(requests)
+    waste = []
+    served_images = 0
+    t_start = time.perf_counter()
+    while queue:
+        batch, total = [], 0
+        while queue and total + queue[0].shape[0] <= max_images:
+            r = queue.pop(0)
+            batch.append(r)
+            total += r.shape[0]
+        if not batch:           # oversized request: serve alone, clamped
+            batch = [queue.pop(0)[:max_images]]
+            total = batch[0].shape[0]
+        _, lat, bucket, n = dispatch(batch)
+        lat_s.append(lat)
+        served_images += n
+        waste.append(CM.padded_m_factor(n * h * w, bucket * h * w))
+    wall = time.perf_counter() - t_start
+
+    stats = plan_cache.stats()
+    assert stats["misses"] == 0 and stats["hit_rate"] == 1.0, (
+        f"warm serving path re-lowered a plan: {stats}")
+    lat_ms = np.asarray(lat_s) * 1e3
+    return {
+        "arch": cfg.name,
+        "buckets": ladder,
+        "requests": int(num_requests),
+        "dispatches": len(lat_s),
+        "images": int(served_images),
+        "qps": float(num_requests / wall),
+        "images_per_s": float(served_images / wall),
+        "p50_ms": float(np.percentile(lat_ms, 50)),
+        "p99_ms": float(np.percentile(lat_ms, 99)),
+        "padded_m_factor_mean": float(np.mean(waste)),
+        "plan_cache": stats,
+    }
+
+
+def _serve_cnn(args) -> int:
+    cfg = get_reduced(args.arch) if args.reduced else get_config(args.arch)
+    m = serve_cnn_metrics(cfg, max_images=args.max_images,
+                          num_requests=args.requests, seed=args.seed)
+    print(f"[serve] {m['arch']}: {m['requests']} requests "
+          f"({m['images']} images) in {m['dispatches']} dispatches, "
+          f"buckets {m['buckets']}")
+    print(f"[serve] qps {m['qps']:.2f} ({m['images_per_s']:.2f} img/s), "
+          f"p50 {m['p50_ms']:.1f} ms, p99 {m['p99_ms']:.1f} ms, "
+          f"padded-M waste x{m['padded_m_factor_mean']:.2f}")
+    print(f"[serve] plan cache: {m['plan_cache']}")
+    return 0
+
+
+def _serve_transformer(args) -> int:
     cfg = get_reduced(args.arch) if args.reduced else get_config(args.arch)
     mesh = make_local_mesh()
     key = jax.random.PRNGKey(args.seed)
@@ -86,6 +215,26 @@ def main(argv=None):
     assert toks.shape == (b, args.gen) and (toks >= 0).all() \
         and (toks < cfg.vocab).all()
     return 0
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--gen", type=int, default=32)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--requests", type=int, default=12,
+                    help="CNN path: synthetic request count")
+    ap.add_argument("--max-images", type=int, default=4,
+                    help="CNN path: max images per request/co-batch")
+    args = ap.parse_args(argv)
+
+    cfg = get_reduced(args.arch) if args.reduced else get_config(args.arch)
+    if getattr(cfg, "family", "") == "cnn":
+        return _serve_cnn(args)
+    return _serve_transformer(args)
 
 
 if __name__ == "__main__":

@@ -78,6 +78,24 @@ def make_cnn_train_step(cfg, optimizer: AdamW, *, plan=None, algorithms=None,
     return train_step
 
 
+def make_cnn_serve_step(cfg, plan, *, interpret=None):
+    """Inference step for the CNN serving path: one M-bucket's planned
+    ragged forward.  ``plan`` must be lowered for the bucket's batch size
+    (``core.plan_cache.cached_cnn_plan``); ``valid_images`` is a TRACED
+    i32 scalar so every request mix admitted to the bucket re-enters the
+    same jitted executable — the serving driver jits this once per bucket
+    and stores it on the cache entry.  Returns (bucket, classes) logits
+    whose rows at/past ``valid_images`` are padding."""
+    from repro.models import cnn as CNN
+
+    kw: dict = {"interpret": interpret} if interpret is not None else {}
+
+    def serve_step(params, images, valid_images):
+        return CNN.forward_plan(params, cfg, images, plan,
+                                valid_images=valid_images, **kw)
+    return serve_step
+
+
 def make_prefill_step(cfg: ModelConfig, *, impl="xla"):
     def prefill_step(params, tokens, cache, extra_embeds=None):
         return T.prefill(params, cfg, tokens, cache,

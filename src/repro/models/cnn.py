@@ -384,18 +384,21 @@ def _plan_impls(params, cfg: CNNConfig, interpret=None):
 
 
 def forward_plan(params, cfg: CNNConfig, images, plan, *, mesh=None,
-                 interpret=None, timings=None):
+                 interpret=None, timings=None, valid_images=None):
     """Plan-driven forward: images (B, H, W, C) -> logits (B, classes).
 
     ``plan`` comes from ``plan_cnn``; stacked groups run in one branch
     kernel, serial groups use the scheduler algorithms, xla groups trust
-    XLA — see ``core/plan.py``.
+    XLA — see ``core/plan.py``.  ``valid_images`` makes the grouped
+    launches ragged-M for a bucketed serving batch whose first
+    ``valid_images`` images are real (see ``core.plan.run_plan``;
+    inference-only) — logits rows at/past it are padding.
     """
     from repro.core import plan as planlib
     impls, out_name = _plan_impls(params, cfg, interpret=interpret)
     env = {"input": images}
     planlib.run_plan(impls, env, plan, mesh=mesh, interpret=interpret,
-                     timings=timings)
+                     timings=timings, valid_images=valid_images)
     out = env[out_name]
     hw = params["head"]["w"]
     if isinstance(out, planlib.ChainPanels):

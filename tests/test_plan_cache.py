@@ -1,0 +1,99 @@
+"""Plan/offset-table cache: a warm serving request re-lowers NOTHING.
+
+Mirrors test_plan_hardening.py's device-table identity assertions one
+level up: the second request for the same (architecture fingerprint,
+M-bucket) must hit the cache with ZERO ``core.plan.lower`` calls and
+reuse the SAME device-resident offset-table arrays (object identity),
+and the fingerprint must be structure-sensitive (a width edit changes
+it) while staying process-stable (same cfg -> same hex digest).
+"""
+import dataclasses
+import importlib
+
+import jax
+
+from repro.configs import get_reduced
+from repro.core import plan_cache
+from repro.models import cnn as CNN
+
+gmm = importlib.import_module("repro.kernels.grouped_matmul")
+planlib = importlib.import_module("repro.core.plan")
+
+
+def setup_function(_fn):
+    plan_cache.reset(clear_entries=True)
+
+
+def test_warm_hit_zero_lower_calls(monkeypatch):
+    """First request lowers; the second (same cfg, same bucket) must not
+    call ``lower`` at all and must return the same entry object."""
+    cfg = get_reduced("googlenet")
+    calls = []
+    real_lower = planlib.lower
+
+    def counting_lower(*a, **kw):
+        calls.append(1)
+        return real_lower(*a, **kw)
+
+    monkeypatch.setattr(planlib, "lower", counting_lower)
+    e1 = plan_cache.cached_cnn_plan(cfg, 2)
+    cold_calls = len(calls)
+    assert cold_calls >= 1
+    e2 = plan_cache.cached_cnn_plan(cfg, 2)
+    assert e2 is e1
+    assert len(calls) == cold_calls, "warm hit re-ran plan lowering"
+    s = plan_cache.stats()
+    assert s["hits"] == 1 and s["misses"] == 1 and s["entries"] == 1
+
+
+def test_warm_hit_same_device_table_objects():
+    """Executing through the cached plan twice reuses the SAME concrete
+    device offset-table arrays — no re-upload on the warm path."""
+    cfg = get_reduced("googlenet")
+    entry = plan_cache.cached_cnn_plan(cfg, 2)
+    params = CNN.init_params(cfg, jax.random.PRNGKey(0))
+    imgs = jax.random.normal(jax.random.PRNGKey(1), (2,) + cfg.img)
+
+    CNN.forward_plan(params, cfg, imgs, entry.plan, valid_images=1)
+    key = (gmm._plan_tiles, 1, (1,), (1,))   # probe identity directly
+    t1 = gmm._device_table(*key)             # (may add the probe's entry)
+    info1 = gmm._device_table.cache_info()
+    CNN.forward_plan(params, cfg, imgs, entry.plan, valid_images=2)
+    t2 = gmm._device_table(*key)
+    info2 = gmm._device_table.cache_info()
+    assert info2.currsize == info1.currsize, \
+        "warm planned forward built a NEW offset table"
+    assert t1 is t2
+
+
+def test_bucket_and_flags_key_separately():
+    cfg = get_reduced("googlenet")
+    e2 = plan_cache.cached_cnn_plan(cfg, 2)
+    e4 = plan_cache.cached_cnn_plan(cfg, 4)
+    ec = plan_cache.cached_cnn_plan(cfg, 2, chain_modules=True)
+    assert e2 is not e4 and e2 is not ec
+    assert e2.plan.context["batch"] == 2 and e4.plan.context["batch"] == 4
+    assert plan_cache.stats() == {"hits": 0, "misses": 3, "entries": 3,
+                                  "hit_rate": 0.0}
+    assert plan_cache.cached_cnn_plan(cfg, 4) is e4
+    assert plan_cache.stats()["hit_rate"] == 0.25
+
+
+def test_fingerprint_structure_sensitive_and_stable():
+    cfg = get_reduced("googlenet")
+    fp1 = plan_cache.graph_fingerprint(CNN.build_graph(cfg, 2))
+    fp2 = plan_cache.graph_fingerprint(CNN.build_graph(cfg, 2))
+    assert fp1 == fp2 and len(fp1) == 64
+    # a conv-width edit is a different architecture -> different key
+    m0 = cfg.modules[0]
+    cfg_wide = dataclasses.replace(
+        cfg, modules=(dataclasses.replace(m0, n1=m0.n1 + 8),)
+        + cfg.modules[1:])
+    fp3 = plan_cache.graph_fingerprint(CNN.build_graph(cfg_wide, 2))
+    assert fp3 != fp1
+    # batch is carried by the bucket key, not the fingerprint: the same
+    # architecture at another batch may share the fingerprint only if the
+    # graph is batch-invariant; either way the plan_key differs
+    k2 = plan_cache.plan_key(fp1, 2, "float32", "cpu")
+    k4 = plan_cache.plan_key(fp1, 4, "float32", "cpu")
+    assert k2 != k4

@@ -1,0 +1,202 @@
+"""Ragged-M grouped launches: the continuous-batching serving path.
+
+Kernel level — every grouped-family wrapper with ``m_valid`` set must
+BIT-match its per-branch XLA oracle (requests pack contiguously, so the
+raggedness is a tail mask; K <= 128 keeps kernel and oracle on the same
+single-k-block f32 accumulation, making exact equality the honest bar)
+and store exact zeros past the true row count.  Model level — a padded
+batch served with ``valid_images`` must reproduce the dense run's logits
+for the valid images bit-for-bit, through ONE grouped-family launch per
+co-executed group (the eager launch counters), and must be invariant to
+whatever garbage sits in the padding images.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from conftest import given, settings, st
+
+from repro import kernels as K
+from repro.configs import get_reduced
+from repro.kernels import ops as kops
+from repro.models import cnn as CNN
+
+# K <= 128 (one k-block): kernel accumulation == oracle's single f32 dot
+RAGGED_SETS = [
+    [(128, 128), (64, 60)],
+    [(100, 60), (64, 129), (128, 16)],
+    [(96, 250)],
+]
+
+
+def _branches(m, shapes, dtype, key=0):
+    ks = jax.random.split(jax.random.PRNGKey(key), 3 * len(shapes))
+    xs = [jax.random.normal(ks[3 * i], (m, kg), dtype) * 0.3
+          for i, (kg, _) in enumerate(shapes)]
+    ws = [jax.random.normal(ks[3 * i + 1], (kg, ng), dtype) * 0.3
+          for i, (kg, ng) in enumerate(shapes)]
+    bs = [jax.random.normal(ks[3 * i + 2], (ng,), dtype)
+          for i, (_, ng) in enumerate(shapes)]
+    return xs, ws, bs
+
+
+def _assert_ragged_bitmatch(got, want, m_valid):
+    for y, yw in zip(got, want):
+        y, yw = np.asarray(y), np.asarray(yw)
+        assert np.array_equal(y, yw), (
+            f"ragged output != oracle (max |d| "
+            f"{np.abs(y.astype(np.float32) - yw.astype(np.float32)).max()})")
+        assert not y[m_valid:].any(), "tail rows past m_valid not zeroed"
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(1, 200), st.integers(0, 2),
+       st.sampled_from(["float32", "bfloat16"]))
+def test_ragged_grouped_bitmatches_oracle(m_valid, set_idx, dtype):
+    """Mixed request sizes x dtypes: the ragged grouped launch equals the
+    per-request XLA oracle bit-for-bit, zeros past the true M."""
+    shapes = RAGGED_SETS[set_idx]
+    m = 200   # fixed padded M (the bucket); m_valid is the true row count
+    xs, ws, bs = _branches(m, shapes, jnp.dtype(dtype))
+    got = K.grouped_matmul(xs, ws, bs, relu=True, m_valid=m_valid)
+    want = K.grouped_matmul_ref(xs, ws, bs, relu=True, m_valid=m_valid)
+    _assert_ragged_bitmatch(got, want, m_valid)
+
+
+@settings(max_examples=6, deadline=None)
+@given(st.integers(1, 150), st.sampled_from(["float32", "bfloat16"]))
+def test_ragged_concat_bitmatches_oracle(m_valid, dtype):
+    """Ragged fused-concat: branch outputs land in the join buffer with
+    the same tail mask.  compact=True — compact=False returns the padded
+    panel layout for the executor to assemble, not the (M, total) join
+    the oracle produces."""
+    shapes = RAGGED_SETS[1]
+    xs, ws, bs = _branches(150, shapes, jnp.dtype(dtype))
+    offs = [0, 60, 189]
+    total = 205
+    got = K.grouped_matmul_concat(xs, ws, bs, offsets=offs, total=total,
+                                  relu=True, compact=True,
+                                  m_valid=m_valid)
+    want = K.grouped_matmul_concat_ref(xs, ws, bs, offsets=offs,
+                                       total=total, relu=True,
+                                       m_valid=m_valid)
+    _assert_ragged_bitmatch([got], [want], m_valid)
+
+
+@pytest.mark.parametrize("dtype", ["float32", "bfloat16"])
+@pytest.mark.parametrize("set_idx", range(len(RAGGED_SETS)))
+def test_ragged_seeded_sweep(set_idx, dtype):
+    """Seeded fallback for the property tests above (runs without
+    hypothesis, mirroring test_properties.py): a spread of valid counts
+    incl. both block-aligned and mid-block tails."""
+    shapes = RAGGED_SETS[set_idx]
+    xs, ws, bs = _branches(200, shapes, jnp.dtype(dtype), key=set_idx)
+    for m_valid in (1, 77, 128, 200):
+        got = K.grouped_matmul(xs, ws, bs, relu=True, m_valid=m_valid)
+        want = K.grouped_matmul_ref(xs, ws, bs, relu=True, m_valid=m_valid)
+        _assert_ragged_bitmatch(got, want, m_valid)
+
+
+def test_ragged_concat_seeded_sweep():
+    shapes = RAGGED_SETS[1]
+    offs, total = [0, 60, 189], 205
+    for dtype in ("float32", "bfloat16"):
+        xs, ws, bs = _branches(150, shapes, jnp.dtype(dtype))
+        for m_valid in (1, 64, 150):
+            got = K.grouped_matmul_concat(xs, ws, bs, offsets=offs,
+                                          total=total, relu=True,
+                                          compact=True, m_valid=m_valid)
+            want = K.grouped_matmul_concat_ref(xs, ws, bs, offsets=offs,
+                                               total=total, relu=True,
+                                               m_valid=m_valid)
+            _assert_ragged_bitmatch([got], [want], m_valid)
+
+
+def test_ragged_pooled_bitmatches_oracle():
+    """Ragged pooled launch: in-kernel maxpool + GEMM with the tail mask
+    on the pooled output's row space."""
+    b, h, w, c = 4, 8, 8, 5
+    x4 = jnp.maximum(
+        jax.random.normal(jax.random.PRNGKey(0), (b, h, w, c)), 0)
+    taps = tuple(t.reshape(-1, c) for t in K.pool_tap_views(x4, ((3, 1),)))
+    m = b * h * w
+    xs = [taps,
+          jax.random.normal(jax.random.PRNGKey(1), (m, 64)) * 0.3]
+    ws = [jax.random.normal(jax.random.PRNGKey(2), (c, 60)) * 0.3,
+          jax.random.normal(jax.random.PRNGKey(3), (64, 16)) * 0.3]
+    for m_valid in (1, h * w, 3 * h * w):   # 1 row .. whole-image counts
+        got = kops.grouped_matmul_pooled(xs, ws, relu=True, m_valid=m_valid)
+        want = K.grouped_matmul_pooled_ref(xs, ws, relu=True,
+                                           m_valid=m_valid)
+        _assert_ragged_bitmatch(got, want, m_valid)
+
+
+def test_ragged_traced_m_valid_shares_one_executable():
+    """A TRACED i32 ``m_valid`` jits once and serves every valid count —
+    the property that lets one bucket executable cover all request
+    mixes."""
+    xs, ws, bs = _branches(128, RAGGED_SETS[0], jnp.float32)
+    traces = []
+
+    @jax.jit
+    def run(mv):
+        traces.append(1)
+        return K.grouped_matmul(xs, ws, bs, m_valid=mv)
+
+    for mv in (1, 37, 128):
+        got = run(jnp.int32(mv))
+        want = K.grouped_matmul_ref(xs, ws, bs, m_valid=mv)
+        _assert_ragged_bitmatch(got, want, mv)
+    assert len(traces) == 1, "m_valid retraced per value"
+
+
+# ---------------------------------------------------------------------------
+# model level: the served planned forward
+# ---------------------------------------------------------------------------
+
+def test_planned_ragged_forward_bitmatches_dense_one_launch_per_group():
+    """Batch-4 plan served with valid_images=2: (a) the first two logits
+    rows bit-match the dense (unragged) run of the same padded batch,
+    (b) zeroing the padding images changes nothing (per-image isolation
+    of the padded rows), (c) the mixed batch runs ONE grouped-family
+    launch per co-executed group."""
+    cfg = get_reduced("googlenet")
+    plan, _ = CNN.plan_cnn(cfg, batch=4)
+    params = CNN.init_params(cfg, jax.random.PRNGKey(0))
+    imgs = jax.random.normal(jax.random.PRNGKey(1), (4,) + cfg.img)
+
+    dense = CNN.forward_plan(params, cfg, imgs, plan)
+    kops.reset_launch_counts()
+    ragged = CNN.forward_plan(params, cfg, imgs, plan, valid_images=2)
+    launches = dict(kops.KERNEL_LAUNCHES)
+    grouped_family = {g.mode for g in plan.groups
+                      if g.mode.startswith("grouped")}
+    n_grouped_groups = sum(1 for g in plan.groups
+                           if g.mode.startswith("grouped"))
+    assert grouped_family, "reduced googlenet plan lost its grouped groups"
+    assert sum(launches.get(k, 0) for k in
+               ("grouped_matmul", "grouped_matmul_pooled",
+                "grouped_matmul_concat",
+                "grouped_matmul_pooled_concat")) == n_grouped_groups, \
+        (launches, plan.mode_counts())
+
+    np.testing.assert_array_equal(np.asarray(ragged)[:2],
+                                  np.asarray(dense)[:2])
+
+    junk = imgs.at[2:].set(jax.random.normal(jax.random.PRNGKey(9),
+                                             (2,) + cfg.img) * 50.0)
+    ragged_junk = CNN.forward_plan(params, cfg, junk, plan, valid_images=2)
+    np.testing.assert_array_equal(np.asarray(ragged_junk)[:2],
+                                  np.asarray(ragged)[:2])
+
+
+def test_run_plan_valid_images_requires_batch_context():
+    """valid_images without plan.context['batch'] must fail loudly, not
+    silently mis-scale the per-group row counts."""
+    cfg = get_reduced("googlenet")
+    plan, _ = CNN.plan_cnn(cfg, batch=2)
+    plan.context.pop("batch", None)
+    params = CNN.init_params(cfg, jax.random.PRNGKey(0))
+    imgs = jnp.zeros((2,) + cfg.img)
+    with pytest.raises(AssertionError):
+        CNN.forward_plan(params, cfg, imgs, plan, valid_images=1)
