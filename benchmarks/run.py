@@ -32,7 +32,10 @@ makespans and traced-jaxpr ``googlenet_launches`` per direction for the
 default AND ``chain_modules=True`` plans — the continuous-batching
 serving column (QPS + p50/p99 dispatch latency through the cached ragged
 plans of ``launch/serve.py``, plan-cache hit stats, padded-M waste, and
-the served chained forward's traced launch count) — and the
+the served chained forward's traced launch count) — the MoE
+expert-dispatch column (grouped ragged engine vs capacity-padded einsum:
+wall + modeled per engine, one-launch-per-direction counts, bit-match
+and zero-token-expert verdicts, padded_slot_fraction) — and the
 plan_makespan rows).  ``--smoke`` runs a seconds-scale subset (fewer
 reps, no plan_makespan; same batch=2 module — batch 1 is unrepresentative
 of the grouped-vs-stacked backward) and writes ``BENCH_plan.smoke.json``
@@ -225,6 +228,15 @@ def main(smoke: bool = False) -> None:
         jnp.zeros((2,) + gcfg.img, jnp.float32), jnp.int32(1))
     bench_json["serving"]["served_chained_launches_per_forward"] = \
         sfwd["total"]
+
+    # MoE expert-dispatch column (runs in smoke too — ci.sh gates it):
+    # grouped ragged engine vs capacity-padded einsum on a
+    # serving-representative layer; modeled times come back through the
+    # CACHED lower_moe plan so cached_moe_plan is exercised end-to-end
+    from benchmarks.moe_bench import moe_dispatch_bench
+    moe_rows, moe_col = moe_dispatch_bench(reps=3 if smoke else 5)
+    _emit([dict(r) for r in moe_rows])
+    bench_json["moe"] = moe_col
 
     if not smoke:
         _emit(stacked_branch_gemm_bench())

@@ -22,6 +22,22 @@ The prose rationale for each number lives next to the gates in
                        today, ceiling 12 (every launch-like primitive).
   LAUNCH_CEILING_UNCHAINED_PALLAS  default plan: 21 pallas kernels today,
                        ceiling 22.  Keep in sync with tests/test_chained.py.
+  MOE_WALL_TOL         grouped vs einsum expert-engine forward wall on the
+                       bench layer: the interpret emulation executes every
+                       grid step of the ragged kernel as python (~70 steps
+                       on the bench layer) while the einsum engine is ONE
+                       compiled XLA einsum, so the ratio measures the
+                       emulation overhead under host load (5-8x observed),
+                       not the engines — the gate is only a
+                       does-not-explode guard against e.g. an accidental
+                       per-call repack; the decisive claim is the MODELED
+                       column (strict: grouped FLOPs scale with routed
+                       tokens, einsum with E*capacity) plus the bit-match
+                       and one-launch-per-direction invariants, which
+                       have no tolerance at all.
+  MOE_LAUNCHES_PER_DIRECTION  the tentpole invariant: ONE grouped-family
+                       kernel forward, ONE combined (dx + every dW)
+                       kernel backward.
 """
 
 BWD_WALL_TOL = 1.0
@@ -31,3 +47,6 @@ POOLED_BWD_WALL_TOL = 1.15
 
 LAUNCH_CEILING_CHAINED_FWD = 12
 LAUNCH_CEILING_UNCHAINED_PALLAS = 22
+
+MOE_WALL_TOL = 20.0
+MOE_LAUNCHES_PER_DIRECTION = 1

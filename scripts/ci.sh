@@ -51,7 +51,17 @@ make bench-smoke
 #     launch/serve.py) ran — post-warmup stream entirely from the plan
 #     cache (hit rate 1.0: zero re-lowering / offset-table rebuilds /
 #     re-tracing), real p50/p99 latency recorded, and the served chained
-#     forward under the same launch ceiling as training's forward.
+#     forward under the same launch ceiling as training's forward;
+#   - MoE expert dispatch: on the bench layer the grouped ragged engine's
+#     MODELED time beats the capacity-padded einsum strictly (FLOPs scale
+#     with routed tokens, not E*capacity), the smoke config runs exactly
+#     MOE_LAUNCHES_PER_DIRECTION grouped-family kernels each way (one
+#     fused forward, one combined dx+dW backward), the grouped output
+#     BIT-matches the einsum oracle (routing/drops/combine are shared
+#     code, the expert chain is single-k-block f32), zero-token experts
+#     stay exact (output AND dW), and the wall comparison gets
+#     MOE_WALL_TOL because the interpret emulation charges the grouped
+#     grid per step while einsum is one compiled XLA op.
 python - <<'PY'
 import json
 import sys
@@ -63,7 +73,8 @@ sys.path.insert(0, ".")
 # comment block above + the tolerances module docstring.
 from benchmarks.tolerances import (
     BWD_WALL_TOL, FUSED_WALL_TOL, POOLED_WALL_TOL, POOLED_BWD_WALL_TOL,
-    LAUNCH_CEILING_CHAINED_FWD, LAUNCH_CEILING_UNCHAINED_PALLAS)
+    LAUNCH_CEILING_CHAINED_FWD, LAUNCH_CEILING_UNCHAINED_PALLAS,
+    MOE_WALL_TOL, MOE_LAUNCHES_PER_DIRECTION)
 
 d = json.load(open("BENCH_plan.smoke.json"))
 bg = d["branch_gemm"]["bwd_wall_us"]
@@ -124,8 +135,27 @@ assert s["qps"] > 0 and s["dispatches"] > 0, s
 assert s["padded_m_factor_mean"] >= 1.0, s
 assert s["served_chained_launches_per_forward"] <= \
     LAUNCH_CEILING_CHAINED_FWD, s
+# MoE expert-dispatch gates: modeled grouped beats einsum strictly, one
+# grouped-family launch per direction, bit-match vs the einsum oracle,
+# zero-token experts exact, wall within the interpret-emulation tolerance
+m = d["moe"]
+assert m["modeled_grouped_ok"] and \
+    m["modeled_us"]["grouped"] <= m["modeled_us"]["einsum"], \
+    f"modeled grouped not ahead of einsum: {m['modeled_us']}"
+assert m["launches"]["per_forward"] == MOE_LAUNCHES_PER_DIRECTION, m
+assert m["launches"]["per_backward"] == MOE_LAUNCHES_PER_DIRECTION, m
+assert m["bitmatch_ok"], "grouped engine output != einsum oracle"
+assert m["zero_token_expert_ok"], "zero-token expert not exact"
+assert m["wall_us"]["grouped"] <= MOE_WALL_TOL * m["wall_us"]["einsum"], \
+    f"grouped fwd wall > {MOE_WALL_TOL}x einsum: {m['wall_us']}"
+assert m["plan_mode_counts"].get("grouped_experts") == 1, m
+assert 0.0 <= m["padded_slot_fraction"] < 1.0, m
+
 print("smoke guardrails ok:", fg["wall_us"], bg)
 print("launch ceilings ok:", l)
 print("serving gates ok:", {k: s[k] for k in
                             ("qps", "p50_ms", "p99_ms", "plan_cache")})
+print("moe gates ok:", {k: m[k] for k in
+                        ("wall_us", "modeled_us", "launches",
+                         "padded_slot_fraction")})
 PY

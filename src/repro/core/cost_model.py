@@ -688,3 +688,96 @@ def chained_time_bwd(phase_ops: list[list[Op]],
         total += co_execution_time([p[0] for p in per]
                                    + [p[1] for p in per])
     return total
+
+
+# ---------------------------------------------------------------------------
+# MoE expert dispatch: ragged-per-expert grouped vs capacity-padded einsum
+# ---------------------------------------------------------------------------
+
+def _al128(d: int) -> int:
+    return -(-d // 128) * 128
+
+
+def moe_grouped_profile(n_slots: int, e: int, d: int, f: int, *,
+                        gated: bool, bm: int, dtype_bytes: int = 4,
+                        train: bool = False) -> OpProfile:
+    """Forward profile of ``grouped_matmul_experts``: the static grid is
+    ``n_slots // bm + e`` M-blocks (every routed token once, plus at most
+    one partial block per expert), each running (1+gated) in-GEMMs and
+    one out-GEMM on 128-aligned tiles — FLOPs scale with routed tokens,
+    never with E*capacity.  ``bm`` is a parameter so this module stays
+    free of the kernels dependency (plan passes ``kernels.moe_block_m``).
+
+    Traffic by index-change counting on the offset table: with one
+    k-block the X tile is fetched once per M-block (held through every
+    H and Y step); expert weights are fetched per block they serve."""
+    mbs = n_slots // bm + e
+    dp, fp = _al128(d), _al128(f)
+    db, fb = dp // 128, fp // 128
+    nw = 1 + int(gated)
+    ngemm = nw + 1
+    flops = 2.0 * mbs * bm * dp * fp * ngemm
+    x_fetch = 1 if db == 1 else db * nw * fb
+    bytes_ = (mbs * bm * dp * dtype_bytes * x_fetch          # X
+              + mbs * nw * db * fb * 128 * 128 * dtype_bytes  # W_in/W_gate
+              + mbs * fb * db * 128 * 128 * dtype_bytes       # W_out
+              + mbs * bm * 4                                  # sw
+              + mbs * bm * dp * dtype_bytes)                  # Y
+    if train:
+        bytes_ += mbs * bm * fp * dtype_bytes * nw            # preacts
+    vmem = (bm * 128 + 2 * fb * bm * 128) * 4
+    return OpProfile("moe_experts", "grouped_ragged", flops, bytes_,
+                     0.0, vmem)
+
+
+def moe_einsum_profile(b: int, cap: int, e: int, d: int, f: int, *,
+                       gated: bool, dtype_bytes: int = 4) -> OpProfile:
+    """The capacity-padded E-leading stacked einsum (``_moe_apply_core``):
+    every one of the B*E*cap capacity slots pays the full expert chain
+    whether a token was routed to it or not, and the per-expert M is
+    ``cap`` — both the padding waste and the alignment derate are priced.
+    Dispatch gather/scatter traffic is skipped on BOTH engines (identical
+    routing work), so the comparison isolates the expert compute."""
+    rows = b * e * cap
+    nw = 1 + int(gated)
+    eff = _mxu_efficiency(cap, d, f)
+    flops = 2.0 * rows * d * f * (nw + 1) / eff
+    bytes_ = (rows * d * dtype_bytes * nw                     # xe reads
+              + 2 * rows * f * dtype_bytes                    # h write+read
+              + rows * d * dtype_bytes                        # ye
+              + e * (nw * d * f + f * d) * dtype_bytes)       # weights
+    return OpProfile("moe_experts", "einsum_padded", flops, bytes_,
+                     rows * f * dtype_bytes, 0.0)
+
+
+def moe_stacked_profile(b: int, cap: int, e: int, d: int, f: int, *,
+                        gated: bool, bm: int,
+                        dtype_bytes: int = 4) -> OpProfile:
+    """Pad-to-max stacked branch kernel baseline (``branch_matmul``
+    generalized to the expert chain): E branches each inflated to the
+    shared capacity M = B*cap, tiles 128-aligned — what PR 2's stacked
+    mode would charge if pointed at the expert fork."""
+    mbs = e * (-(-(b * cap) // bm))
+    dp, fp = _al128(d), _al128(f)
+    nw = 1 + int(gated)
+    flops = 2.0 * mbs * bm * dp * fp * (nw + 1)
+    bytes_ = (mbs * bm * dp * dtype_bytes
+              + e * (nw * dp * fp + fp * dp) * dtype_bytes
+              + mbs * bm * dp * dtype_bytes)
+    return OpProfile("moe_experts", "stacked_padded", flops, bytes_,
+                     0.0, 0.0)
+
+
+def moe_dispatch_times(n_slots: int, b: int, cap: int, e: int, d: int,
+                       f: int, *, gated: bool, bm: int,
+                       dtype_bytes: int = 4) -> dict:
+    """Modeled forward wall per expert engine — the pricing ``lower_moe``
+    picks from and the bench/CI gate compares."""
+    return {
+        "grouped": moe_grouped_profile(n_slots, e, d, f, gated=gated,
+                                       bm=bm, dtype_bytes=dtype_bytes).time,
+        "einsum": moe_einsum_profile(b, cap, e, d, f, gated=gated,
+                                     dtype_bytes=dtype_bytes).time,
+        "stacked": moe_stacked_profile(b, cap, e, d, f, gated=gated,
+                                       bm=bm, dtype_bytes=dtype_bytes).time,
+    }

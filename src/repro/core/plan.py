@@ -47,6 +47,13 @@ Modes (mirroring ``core/branch_parallel.py``):
             chained launch as a ``ChainPanels`` value addressed in place
             by panel lhs-source descriptors — and the grad group mirrors
             as one combined dx+dw/db launch per phase in reverse order.
+  grouped_experts — an MoE layer's E expert chains (the router's fork)
+            run as ONE per-expert-ragged grouped launch per direction
+            (``kernels.grouped_matmul_experts``): each expert owns its
+            routed token count M_g via the dynamic block-meta prefetch,
+            the router's gating weights and activation fuse into the
+            epilogue, and FLOPs scale with routed tokens instead of the
+            einsum engine's E*capacity slots (``lower_moe``).
   stacked — same-GEMM-shape branches fuse into ONE Pallas kernel with a
             branch grid axis (``kernels/branch_matmul.py``); heterogeneous
             output widths are padded to a common N and sliced back.  Kept
@@ -82,7 +89,7 @@ from repro.core.graph import OpGraph
 from repro.core.scheduler import Schedule
 
 MODES = ("grouped", "grouped_concat", "grouped_pooled", "grouped_chained",
-         "stacked", "fused", "spatial", "serial", "xla")
+         "grouped_experts", "stacked", "fused", "spatial", "serial", "xla")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -1512,3 +1519,60 @@ def execute_plan(params, x, plan: Plan, *, mesh=None, interpret=None,
     return cnn.forward_plan(params, cfg, x, plan, mesh=mesh,
                             interpret=interpret,
                             valid_images=valid_images)
+
+
+# ---------------------------------------------------------------------------
+# MoE lowering: the expert fork as ONE grouped-family launch
+# ---------------------------------------------------------------------------
+
+def lower_moe(graph: OpGraph, *, b: int, s: int, d: int, f: int, e: int,
+              top_k: int, capacity_factor: float, gated: bool = True,
+              shared_f: int = 0, bm: int | None = None,
+              dtype_bytes: int = 4) -> Plan:
+    """Lower one MoE layer's op graph (``models.moe.build_moe_graph``) to
+    a Plan whose expert fork is a single ``grouped_experts`` ExecGroup.
+
+    The E expert chains the graph exposes as 3E (2E ungated) independent
+    matmuls at the einsum engine's padded M = B*cap collapse into ONE
+    per-expert-ragged launch per direction; the group's ``modeled_time``
+    is ``cost_model.moe_grouped_profile`` over the static routed-token
+    grid, and ``reason`` records the pricing against the capacity-padded
+    einsum and the pad-to-max stacked baselines so the decision is
+    auditable from the plan alone.  Router / combine / shared-MLP ops
+    stay serial groups (they are the fork and join, not branches)."""
+    from repro.models.moe import moe_capacity
+
+    if bm is None:
+        from repro.kernels import moe_block_m
+        bm = moe_block_m(b * s * top_k, e)
+    sk = s * top_k
+    cap = moe_capacity(sk, capacity_factor, e)
+    n_slots = b * sk
+    times = cm.moe_dispatch_times(n_slots, b, cap, e, d, f, gated=gated,
+                                  bm=bm, dtype_bytes=dtype_bytes)
+
+    expert_ops = tuple(n for n in graph.ops if n.startswith("expert"))
+    assert len(expert_ops) == (3 if gated else 2) * e, expert_ops
+    groups = [
+        ExecGroup("serial", ("moe_router",), {"moe_router": "mxu128"},
+                  cm.profile(graph.ops["moe_router"], "mxu128").time),
+        ExecGroup(
+            "grouped_experts", expert_ops, {}, times["grouped"],
+            reason=(f"{len(expert_ops)} expert GEMMs -> 1 ragged launch: "
+                    f"grouped {times['grouped'] * 1e6:.2f}us vs einsum "
+                    f"{times['einsum'] * 1e6:.2f}us vs stacked "
+                    f"{times['stacked'] * 1e6:.2f}us")),
+        ExecGroup("serial", ("moe_combine",), {"moe_combine": "vpu"},
+                  cm.profile(graph.ops["moe_combine"], "vpu").time),
+    ]
+    if shared_f:
+        shared_ops = tuple(n for n in graph.ops if n.startswith("shared"))
+        sprofs = [cm.profile(graph.ops[n], "mxu128") for n in shared_ops]
+        groups.append(ExecGroup("serial", shared_ops,
+                                {n: "mxu128" for n in shared_ops},
+                                cm.serial_time(sprofs)))
+    ctx = {"moe": {"b": b, "s": s, "d": d, "f": f, "e": e, "top_k": top_k,
+                   "capacity_factor": capacity_factor, "gated": gated,
+                   "shared_f": shared_f, "bm": bm, "cap": cap,
+                   "n_slots": n_slots, "times": times}}
+    return Plan(groups, ctx)

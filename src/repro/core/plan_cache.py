@@ -8,20 +8,31 @@ same bucket.  The three cached layers and who provides them:
 
   lowered plan         — ``PlanCacheEntry.plan`` (this module): the
                          graph->schedule->ExecGroup lowering of
-                         ``models.cnn.plan_cnn``, the expensive pure-python
-                         pass a request must never re-run.
+                         ``models.cnn.plan_cnn`` (or ``plan.lower_moe``
+                         for MoE layers), the expensive pure-python pass
+                         a request must never re-run.
   device offset tables — ``kernels.grouped_matmul._device_table``'s
-                         lru_cache: the ``_plan_tiles*`` builders key on
-                         (builder, block counts), which the cached plan
-                         pins, so a warm launch reuses the SAME
-                         device-resident array (object identity — the
-                         regression test asserts it).
+                         registry: the ``_plan_tiles*`` builders key on
+                         (builder, block counts); the keys a plan's
+                         executable touches are recorded on first
+                         execution and PINNED to the entry
+                         (``attach_tables``), so a warm launch reuses the
+                         SAME device-resident array (object identity —
+                         the regression test asserts it) and a table
+                         outlives the registry's own LRU bound exactly as
+                         long as a live entry needs it.
   traced executable    — ``PlanCacheEntry.executable``: the jitted
                          bucket-shaped forward the serving driver stores on
                          the entry after its first trace; later mixes in
                          the bucket re-enter the same trace because the
                          ragged ``valid_images`` operand is a TRACED i32
                          scalar, not a python constant.
+
+The cache itself is LRU-bounded (``CAPACITY`` entries — the transformer
+zoo's MoE configs make one-cfg growth assumptions wrong): a hit refreshes
+recency, an insert past capacity evicts the least-recent entry, counts it
+in ``stats()["evictions"]``, and UNPINS the evicted entry's device tables
+so only live entries hold table memory.
 
 ``graph_fingerprint`` hashes the full op-DAG structure (names, kinds,
 params, dtype widths, edges) — two configs with identical topology but
@@ -33,9 +44,15 @@ from __future__ import annotations
 
 import dataclasses
 import hashlib
+from collections import OrderedDict
 from typing import Any
 
 from repro.core.graph import OpGraph
+
+#: LRU bound on cached entries.  Tests/benchmarks may rebind; the serving
+#: ladder (a handful of buckets x a few cfgs) sits far below it, so
+#: eviction only triggers under genuine zoo churn.
+CAPACITY = 32
 
 
 def graph_fingerprint(graph: OpGraph) -> str:
@@ -57,8 +74,8 @@ def plan_key(fingerprint: str, bucket: int, dtype, backend: str, *,
              fuse_pool: bool = True, chain_modules: bool = False) -> tuple:
     """The cache key: everything the lowered plan, the offset tables and
     the traced executable depend on.  ``bucket`` is the padded image
-    count (M-bucket), which fixes every per-group M and hence every
-    ``_plan_tiles*`` table shape."""
+    count (M-bucket) — or the batch for MoE plans — which fixes every
+    per-group M and hence every ``_plan_tiles*`` table shape."""
     return (fingerprint, int(bucket), str(dtype), backend, bool(train),
             bool(fuse_concat), bool(fuse_pool), bool(chain_modules))
 
@@ -70,27 +87,79 @@ class PlanCacheEntry:
     fingerprint: str
     bucket: int
     executable: Any = None         # jitted serve step, set by the driver
+    table_keys: tuple = ()         # pinned _device_table keys (attach_tables)
 
 
-_CACHE: dict[tuple, PlanCacheEntry] = {}
+_CACHE: "OrderedDict[tuple, PlanCacheEntry]" = OrderedDict()
 _HITS = 0
 _MISSES = 0
+_EVICTIONS = 0
 
 
 def stats() -> dict:
     total = _HITS + _MISSES
     return {"hits": _HITS, "misses": _MISSES, "entries": len(_CACHE),
-            "hit_rate": (_HITS / total) if total else 0.0}
+            "hit_rate": (_HITS / total) if total else 0.0,
+            "evictions": _EVICTIONS, "capacity": CAPACITY}
+
+
+def _device_table():
+    # importlib, not ``from repro.kernels import grouped_matmul``: the
+    # package re-exports a FUNCTION of that name which shadows the
+    # submodule attribute once ``__init__`` finishes
+    import importlib
+    return importlib.import_module(
+        "repro.kernels.grouped_matmul")._device_table
+
+
+def _unpin_entry(entry: PlanCacheEntry) -> None:
+    if entry.table_keys:
+        _device_table().unpin(entry.table_keys)
+        entry.table_keys = ()
+
+
+def attach_tables(entry: PlanCacheEntry, keys) -> None:
+    """Pin the device offset tables ``keys`` (recorded by
+    ``_device_table.recording()`` around the entry's first execution) to
+    the entry: pinned tables survive the table registry's own LRU bound
+    for as long as the entry is live, and are released on eviction or
+    ``reset(clear_entries=True)``.  Idempotent per entry — only the first
+    attach pins."""
+    if entry.table_keys or not keys:
+        return
+    entry.table_keys = tuple(keys)
+    _device_table().pin(entry.table_keys)
+
+
+def _insert(key: tuple, entry: PlanCacheEntry) -> None:
+    global _EVICTIONS
+    _CACHE[key] = entry
+    while len(_CACHE) > CAPACITY:
+        _, old = _CACHE.popitem(last=False)     # least-recent first
+        _unpin_entry(old)
+        _EVICTIONS += 1
 
 
 def reset(clear_entries: bool = False) -> None:
     """Zero the counters; ``clear_entries`` also drops the cached plans
-    (the warmup boundary in the serve driver resets counters ONLY, so the
-    post-warmup hit rate is measured against a populated cache)."""
-    global _HITS, _MISSES
-    _HITS = _MISSES = 0
+    and unpins their device tables (the warmup boundary in the serve
+    driver resets counters ONLY, so the post-warmup hit rate is measured
+    against a populated cache)."""
+    global _HITS, _MISSES, _EVICTIONS
+    _HITS = _MISSES = _EVICTIONS = 0
     if clear_entries:
+        for entry in _CACHE.values():
+            _unpin_entry(entry)
         _CACHE.clear()
+
+
+def _lookup(key: tuple) -> PlanCacheEntry | None:
+    global _HITS
+    entry = _CACHE.get(key)
+    if entry is not None:
+        _HITS += 1
+        _CACHE.move_to_end(key)                 # refresh recency
+    return entry
 
 
 def cached_cnn_plan(cfg, bucket: int, *, dtype="float32", backend=None,
@@ -106,7 +175,7 @@ def cached_cnn_plan(cfg, bucket: int, *, dtype="float32", backend=None,
     ``context["batch"] == bucket``, which is what the ragged
     ``valid_images`` executor divides by.
     """
-    global _HITS, _MISSES
+    global _MISSES
     import jax
     from repro.models import cnn  # lazy: mirrors core.plan.execute_plan
 
@@ -115,9 +184,8 @@ def cached_cnn_plan(cfg, bucket: int, *, dtype="float32", backend=None,
     key = plan_key(fp, bucket, dtype, backend, train=train,
                    fuse_concat=fuse_concat, fuse_pool=fuse_pool,
                    chain_modules=chain_modules)
-    entry = _CACHE.get(key)
+    entry = _lookup(key)
     if entry is not None:
-        _HITS += 1
         return entry
     _MISSES += 1
     plan, sch = cnn.plan_cnn(cfg, int(bucket), train=train,
@@ -125,5 +193,38 @@ def cached_cnn_plan(cfg, bucket: int, *, dtype="float32", backend=None,
                              chain_modules=chain_modules)
     entry = PlanCacheEntry(plan=plan, schedule=sch, fingerprint=fp,
                            bucket=int(bucket))
-    _CACHE[key] = entry
+    _insert(key, entry)
+    return entry
+
+
+def cached_moe_plan(*, b: int, s: int, d: int, f: int, e: int, top_k: int,
+                    capacity_factor: float, gated: bool = True,
+                    shared_f: int = 0, dtype="float32",
+                    backend=None) -> PlanCacheEntry:
+    """MoE layers through the same cache: (layer dims, batch bucket) ->
+    cached ``plan.lower_moe`` Plan with its ``grouped_experts`` group.
+    The fingerprint comes from ``models.moe.build_moe_graph`` — s, top_k,
+    capacity and widths all land in op params, so any dim edit re-keys —
+    and ``bucket`` carries the batch, mirroring the CNN path."""
+    global _MISSES
+    import jax
+    from repro.core import plan as planlib
+    from repro.models import moe
+
+    backend = jax.default_backend() if backend is None else backend
+    graph = moe.build_moe_graph(b=b, s=s, d=d, f=f, e=e, top_k=top_k,
+                                capacity_factor=capacity_factor,
+                                gated=gated, shared_f=shared_f)
+    fp = graph_fingerprint(graph)
+    key = plan_key(fp, b, dtype, backend)
+    entry = _lookup(key)
+    if entry is not None:
+        return entry
+    _MISSES += 1
+    plan = planlib.lower_moe(graph, b=b, s=s, d=d, f=f, e=e, top_k=top_k,
+                             capacity_factor=capacity_factor, gated=gated,
+                             shared_f=shared_f)
+    entry = PlanCacheEntry(plan=plan, schedule=None, fingerprint=fp,
+                           bucket=int(b))
+    _insert(key, entry)
     return entry

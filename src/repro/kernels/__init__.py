@@ -8,6 +8,8 @@ from repro.kernels.ops import (  # noqa: F401
     grouped_matmul_pooled_concat, grouped_matmul_pooled_concat_ref,
     pool_tap_views, pool_from_taps,
     grouped_matmul_flops, grouped_matmul_ref, grouped_block_shape,
+    grouped_matmul_experts, grouped_matmul_experts_ref,
+    moe_block_m, moe_static_blocks, expert_row_offsets,
     grouped_debug, matmul, ssd, KERNEL_LAUNCHES, reset_launch_counts,
     ATTENTION_ALGORITHMS, CONV2D_ALGORITHMS, MATMUL_ALGORITHMS, SSD_ALGORITHMS,
     attention_workspace_bytes, conv2d_workspace_bytes, matmul_workspace_bytes,

@@ -87,7 +87,9 @@ differentiable wrapper (custom VJP) lives in ``kernels/ops.py``.
 """
 from __future__ import annotations
 
+import contextlib
 import functools
+from collections import OrderedDict
 from typing import NamedTuple
 
 import jax
@@ -257,17 +259,89 @@ def _plan_tiles(m_blocks: int, kbs: tuple[int, ...], nbs: tuple[int, ...]):
     return np.array(rows, np.int32)
 
 
-@functools.lru_cache(maxsize=512)
-def _device_table(builder, *args):
-    """Device-resident offset table — hoisted: built and uploaded ONCE per
+class _DeviceTableCache:
+    """Device-resident offset tables — hoisted: built and uploaded ONCE per
     tile-grid shape and reused across launches.  Re-uploading the table
     every call is what put the grouped backward behind stacked on host
     wall under the interpret emulation (BENCH ``bwd_wall_ordering_ok``
     regression).  ensure_compile_time_eval: a first call from inside a
     jit trace must still cache a CONCRETE device array, not a traced
-    constant that would leak into later eager calls."""
-    with jax.ensure_compile_time_eval():
-        return jnp.asarray(builder(*args))
+    constant that would leak into later eager calls.
+
+    Was a plain ``functools.lru_cache``; now a registry with PIN COUNTS so
+    ``core.plan_cache`` eviction can release exactly the tables no live
+    cache entry needs: a pinned key survives any recency pressure, an
+    unpinned key falls off the LRU tail once ``maxsize`` unpinned entries
+    accumulate, and ``unpin`` drops keys whose pin count hits zero.  The
+    ``cache_info``/``cache_clear`` surface of the old lru_cache is kept —
+    the identity regression tests probe it."""
+
+    def __init__(self, maxsize: int = 512):
+        self.maxsize = maxsize
+        self._data: "OrderedDict[tuple, object]" = OrderedDict()
+        self._pins: dict[tuple, int] = {}
+        self._hits = self._misses = 0
+        self._recorders: list[set] = []
+
+    def __call__(self, builder, *args):
+        key = (builder,) + tuple(args)
+        for rec in self._recorders:
+            rec.add(key)
+        t = self._data.get(key)
+        if t is not None:
+            self._hits += 1
+            self._data.move_to_end(key)
+            return t
+        self._misses += 1
+        with jax.ensure_compile_time_eval():
+            t = jnp.asarray(builder(*args))
+        self._data[key] = t
+        if len(self._data) > self.maxsize:
+            for k in list(self._data):
+                if len(self._data) <= self.maxsize:
+                    break
+                if self._pins.get(k, 0) == 0:
+                    del self._data[k]
+        return t
+
+    @contextlib.contextmanager
+    def recording(self):
+        """Collect the table keys touched inside the block (the set a
+        plan-cache entry pins as its live working set)."""
+        rec: set = set()
+        self._recorders.append(rec)
+        try:
+            yield rec
+        finally:
+            self._recorders.remove(rec)
+
+    def pin(self, keys) -> None:
+        for k in keys:
+            self._pins[k] = self._pins.get(k, 0) + 1
+
+    def unpin(self, keys) -> None:
+        """Drop a pin per key; a key left with zero pins is released from
+        the registry (plan-cache eviction -> its tables go too, unless a
+        surviving entry still pins them)."""
+        for k in keys:
+            n = self._pins.get(k, 0) - 1
+            if n > 0:
+                self._pins[k] = n
+            else:
+                self._pins.pop(k, None)
+                self._data.pop(k, None)
+
+    def cache_info(self):
+        return functools._CacheInfo(self._hits, self._misses, self.maxsize,
+                                    len(self._data))
+
+    def cache_clear(self):
+        self._data.clear()
+        self._pins.clear()
+        self._hits = self._misses = 0
+
+
+_device_table = _DeviceTableCache()
 
 
 def _ragged_mrows(m_valid, mb: int, bm: int):
@@ -1884,3 +1958,591 @@ def grouped_matmul_chained_ref(phases, *, m: int, h: int, w: int,
             segs.append(jnp.pad(y, ((0, mp - m), (0, nbb * blk - br["n"]))))
         outs.append(jnp.concatenate(segs, axis=1))
     return outs
+
+
+# ---------------------------------------------------------------------------
+# per-expert ragged grouped GEMM: the MoE expert engine
+# ---------------------------------------------------------------------------
+#
+# PR 7's raggedness is ONE shared M tail mask (requests pack contiguously,
+# every branch sees the same m_valid).  MoE needs each branch (expert) g to
+# own its routed token count M_g: tokens pack into per-expert block-aligned
+# segments of a single (MBS*bm, D) buffer, the grid flattens over the ragged
+# per-expert M-block counts, and the scalar-prefetch machinery splits into
+#
+#   static table (``_plan_tiles_experts``)  — per-step tile slots, phase and
+#       first/last flags, scratch panel index.  Depends only on (MBS, DB,
+#       FB, gated): every routing outcome reuses the SAME device table.
+#   dynamic vector (``_expert_block_meta``)  — per-M-block expert id,
+#       valid-row count (the per-branch ``_ragged_mrows``), and
+#       first/last-block-of-expert flags, computed from the TRACED per-
+#       expert counts.  Weight index maps do arithmetic on it
+#       (``eid[bi] * tiles_per_expert + rel``), so which expert's tiles a
+#       block fetches is a runtime decision inside a static grid.
+#
+# The static grid bound is MBS = floor(n_slots/bm) + E (each expert wastes
+# at most one partial block, and every expert keeps >= 1 block so zero-token
+# experts still store their — zero — dW tiles).  Blocks past the last live
+# one ("dead tail") get eid = E-1, valid 0, zero packed rows: their stores
+# are zeroed by the valid mask and their dW contributions are zero, so the
+# combined backward's cross-block dW accumulation runs through them safely.
+#
+# The epilogue fuses the whole expert chain: H = act(X@Wg) * (X@Wi) (or
+# act(X@Wi) ungated) through a VMEM panel, Y = (H@Wo) * sw with the router's
+# combine weight sw row-scaled in-kernel and the per-block valid mask
+# zeroing the tail — ONE launch per MoE layer per direction.
+
+_MOE_ACTS = {"silu": jax.nn.silu, "gelu": jax.nn.gelu}
+
+
+def moe_block_m(n_slots: int, e: int) -> int:
+    """Packed M-block rows for the experts launch: the largest power of two
+    <= clamp(n_slots/E, 8, 128) — full 128-row MXU tiles once the uniform
+    per-expert count supports them, down to the f32 sublane floor of 8 for
+    tiny batches (where one partial block per expert is the whole grid)."""
+    per = max(n_slots // max(e, 1), 1)
+    bm = 8
+    while bm * 2 <= min(per, 128):
+        bm *= 2
+    return bm
+
+
+def moe_static_blocks(n_slots: int, e: int, bm: int) -> int:
+    """Static M-block bound for the experts grid: sum_g ceil(c_g/bm) <=
+    floor(sum_g c_g / bm) + E for any routing outcome with sum c_g <=
+    n_slots, and the +E also funds the >=1 block every expert keeps."""
+    return n_slots // bm + e
+
+
+def _expert_block_meta(counts, mbs: int, bm: int):
+    """(4, MBS) int32 dynamic prefetch: rows [expert id, valid rows,
+    first-block-of-expert, last-block-of-expert] per static M-block, from
+    the TRACED per-expert routed counts.  Zero-token experts keep one
+    block (valid 0); dead tail blocks take eid E-1 with valid 0."""
+    counts = jnp.asarray(counts, jnp.int32)
+    e = counts.shape[0]
+    blocks = jnp.maximum(-(-counts // bm), 1)
+    cum = jnp.cumsum(blocks)
+    bi = jnp.arange(mbs, dtype=jnp.int32)
+    eid = jnp.clip(jnp.searchsorted(cum, bi, side="right"),
+                   0, e - 1).astype(jnp.int32)
+    start = cum - blocks                          # first block of expert
+    rel = bi - start[eid]
+    mrows = jnp.clip(counts[eid] - rel * bm, 0, bm)
+    febl = (bi == start[eid]).astype(jnp.int32)
+    nxt = jnp.concatenate([eid[1:], jnp.full((1,), -1, jnp.int32)])
+    lebl = (nxt != eid).astype(jnp.int32)
+    return jnp.stack([eid, mrows, febl, lebl])
+
+
+def expert_row_offsets(counts, bm: int):
+    """(E,) packed-row offset of each expert's segment — the per-branch
+    M-row offsets the dispatch scatters against (block-aligned so segment
+    starts coincide with M-block starts)."""
+    counts = jnp.asarray(counts, jnp.int32)
+    blocks = jnp.maximum(-(-counts // bm), 1)
+    return (jnp.cumsum(blocks) - blocks) * bm
+
+
+@functools.lru_cache(maxsize=512)
+def _plan_tiles_experts(mbs: int, db: int, fb: int, gated: int):
+    """Static offset table for the experts forward, (10, T) int32.
+
+    Per M-block i the steps run H phase (j over F-blocks, which over
+    {in[, gate]}, k over D-blocks; accumulate X@W into the f32 acc, close
+    each (j, which) tile into the VMEM H panel) then Y phase (c over
+    D-blocks, j over F-blocks; accumulate Hpanel@Wout, close with the
+    sw-scale + per-block valid mask epilogue).  Rows:
+
+      0 bi      M-block index (keys the dynamic eid/mrows/sw lookups)
+      1 xt      packed-X tile slot (held at last H value through Y)
+      2 whrel   H-weight tile rel index: which*DB*FB + k*FB + j
+      3 worel   Wout tile rel index: j*DB + c (held at next-use during H)
+      4 phase   0 = H-in step, 1 = H-gate step, 2 = Y step
+      5 first   1 on the tile's first accumulation step (zero the acc)
+      6 last    1 on the tile's last accumulation step (close the tile)
+      7 hj      F-block index (H panel scratch slot)
+      8 ot      Y output tile slot i*DB + c (next-write during H)
+      9 rres    residual (preact) output tile slot i*FB + j (next-write)
+    """
+    nw = 1 + gated
+    rows: list[list[int]] = [[] for _ in range(10)]
+    for i in range(mbs):
+        for j in range(fb):
+            for wch in range(nw):
+                for k in range(db):
+                    rows[0].append(i)
+                    rows[1].append(i * db + k)
+                    rows[2].append(wch * db * fb + k * fb + j)
+                    rows[3].append(0)
+                    rows[4].append(wch)
+                    rows[5].append(1 if k == 0 else 0)
+                    rows[6].append(1 if k == db - 1 else 0)
+                    rows[7].append(j)
+                    rows[8].append(i * db)
+                    rows[9].append(i * fb + j)
+        for c in range(db):
+            for j in range(fb):
+                rows[0].append(i)
+                rows[1].append(i * db + db - 1)
+                rows[2].append(0)
+                rows[3].append(j * db + c)
+                rows[4].append(2)
+                rows[5].append(1 if j == 0 else 0)
+                rows[6].append(1 if j == fb - 1 else 0)
+                rows[7].append(j)
+                rows[8].append(i * db + c)
+                rows[9].append((i + 1) * fb if i + 1 < mbs
+                               else i * fb + fb - 1)
+    return np.array(rows, np.int32)
+
+
+def _gmm_experts_kernel(tab_ref, dyn_ref, x_ref, wh_ref, wo_ref, sw_ref,
+                        *rest, activation: str, gated: bool, train: bool):
+    nres = (2 if gated else 1) if train else 0
+    y_ref = rest[0]
+    res_refs = rest[1:1 + nres]
+    acc_ref, hin_s, hpost_s = rest[1 + nres:]
+    t = pl.program_id(0)
+    phase = tab_ref[4, t]
+    last = tab_ref[6, t] == 1
+    hj = tab_ref[7, t]
+    dt = y_ref.dtype
+    act = _MOE_ACTS[activation]
+
+    @pl.when(tab_ref[5, t] == 1)
+    def _zero():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    @pl.when(phase < 2)
+    def _h_step():
+        acc_ref[...] += jnp.dot(x_ref[...], wh_ref[...],
+                                preferred_element_type=jnp.float32)
+
+    @pl.when(phase == 2)
+    def _y_step():
+        acc_ref[...] += jnp.dot(hpost_s[hj].astype(dt), wo_ref[...],
+                                preferred_element_type=jnp.float32)
+
+    @pl.when((phase == 0) & last)
+    def _close_in():
+        pre = acc_ref[...]
+        if gated:
+            hin_s[hj] = pre
+        else:
+            # oracle order: act applied to the dtype-cast preact
+            hpost_s[hj] = act(pre.astype(dt)).astype(jnp.float32)
+        if train:
+            res_refs[0][...] = pre.astype(dt)
+
+    if gated:
+        @pl.when((phase == 1) & last)
+        def _close_gate():
+            pre_g = acc_ref[...]
+            pre_i = hin_s[hj]
+            # oracle order: h = act(gate preact) * in preact, in dtype
+            h = act(pre_g.astype(dt)) * pre_i.astype(dt)
+            hpost_s[hj] = h.astype(jnp.float32)
+            if train:
+                res_refs[1][...] = pre_g.astype(dt)
+
+    @pl.when((phase == 2) & last)
+    def _close_y():
+        valid = dyn_ref[1, tab_ref[0, t]]
+        y = acc_ref[...].astype(dt) * sw_ref[...][:, None].astype(dt)
+        ri = jax.lax.broadcasted_iota(jnp.int32, y.shape, 0)
+        y_ref[...] = jnp.where(ri < valid, y, jnp.zeros_like(y))
+
+
+def _expert_wstack(w, d0p: int, d1p: int):
+    """(E, D0, D1) expert weights -> per-expert (D0p/128 * D1p/128, 128,
+    128) tile stacks, concatenated expert-major."""
+    e, d0, d1 = w.shape
+    wq = jnp.pad(w, ((0, 0), (0, d0p - d0), (0, d1p - d1)))
+    return jnp.concatenate([_tile_stack(wq[g], 128, 128) for g in range(e)])
+
+
+def _pack_rows(a2d, bm: int, d_pad: int):
+    aq = jnp.pad(a2d, ((0, 0), (0, d_pad - a2d.shape[1])))
+    return _tile_stack(aq, bm, 128)
+
+
+def _unpack_rows(tiles, mbs: int, bm: int, nb: int, d: int):
+    return tiles.reshape(mbs, nb, bm, 128).transpose(0, 2, 1, 3) \
+        .reshape(mbs * bm, nb * 128)[:, :d]
+
+
+def grouped_matmul_experts(xp, swp, w_in, w_out, w_gate, counts, *,
+                           activation: str = "silu", train: bool = False,
+                           bm: int | None = None, interpret=True):
+    """ONE launch over E expert chains with per-expert ragged M.
+
+    xp     (MBS*bm, D)  tokens packed into block-aligned per-expert
+                        segments (``expert_row_offsets``), zero elsewhere
+    swp    (MBS*bm,)    f32 router combine weight per packed row (0 pad)
+    w_in   (E, D, F);  w_out (E, F, D);  w_gate (E, D, F) or None
+    counts (E,) i32     routed token count per expert — traced: every
+                        routing outcome shares this trace and the static
+                        offset table; only the dynamic (4, MBS) prefetch
+                        vector changes
+    train  also return the (MBS*bm, F) in/gate preacts (the combined
+           backward's residuals)
+
+    Returns y (MBS*bm, D) = act-gated expert chain output, row-scaled by
+    swp, exact zeros at/past each block's valid count.
+    """
+    e, d, f = w_in.shape
+    gated = w_gate is not None
+    n_rows = xp.shape[0]
+    bm = moe_block_m(n_rows, e) if bm is None else bm
+    assert n_rows % bm == 0, (n_rows, bm)
+    mbs = n_rows // bm
+    dp_, fp_ = _round_up(d, 128), _round_up(f, 128)
+    db, fb = dp_ // 128, fp_ // 128
+    dt = xp.dtype
+
+    x_tiles = _pack_rows(xp, bm, dp_)
+    whs = []
+    for g in range(e):
+        whs.append(_expert_wstack(w_in[g:g + 1], dp_, fp_))
+        if gated:
+            whs.append(_expert_wstack(w_gate[g:g + 1], dp_, fp_))
+    wh = jnp.concatenate(whs)
+    wo = _expert_wstack(w_out, fp_, dp_)
+    sw2 = jnp.asarray(swp, jnp.float32).reshape(mbs, bm)
+
+    tab = _device_table(_plan_tiles_experts, mbs, db, fb, int(gated))
+    dyn = _expert_block_meta(counts, mbs, bm)
+    whpe, wope = (1 + int(gated)) * db * fb, fb * db
+
+    in_specs = [
+        pl.BlockSpec((None, bm, 128), lambda t, tab, dyn: (tab[1, t], 0, 0)),
+        pl.BlockSpec((None, 128, 128),
+                     lambda t, tab, dyn, s=whpe:
+                     (dyn[0, tab[0, t]] * s + tab[2, t], 0, 0)),
+        pl.BlockSpec((None, 128, 128),
+                     lambda t, tab, dyn, s=wope:
+                     (dyn[0, tab[0, t]] * s + tab[3, t], 0, 0)),
+        pl.BlockSpec((None, bm), lambda t, tab, dyn: (tab[0, t], 0)),
+    ]
+    out_shape = [jax.ShapeDtypeStruct((mbs * db, bm, 128), dt)]
+    out_specs = [pl.BlockSpec((None, bm, 128),
+                              lambda t, tab, dyn: (tab[8, t], 0, 0))]
+    if train:
+        for _ in range(2 if gated else 1):
+            out_shape.append(jax.ShapeDtypeStruct((mbs * fb, bm, 128), dt))
+            out_specs.append(pl.BlockSpec(
+                (None, bm, 128), lambda t, tab, dyn: (tab[9, t], 0, 0)))
+
+    nw = 1 + int(gated)
+    grid = (mbs * (nw * fb * db + db * fb),)
+    fn = pl.pallas_call(
+        functools.partial(_gmm_experts_kernel, activation=activation,
+                          gated=gated, train=train),
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=2, grid=grid,
+            in_specs=in_specs, out_specs=out_specs,
+            scratch_shapes=[pltpu.VMEM((bm, 128), jnp.float32),
+                            pltpu.VMEM((fb, bm, 128), jnp.float32),
+                            pltpu.VMEM((fb, bm, 128), jnp.float32)]),
+        out_shape=out_shape, interpret=interpret)
+    _count_launch("grouped_matmul_experts")
+    outs = fn(tab, dyn, x_tiles, wh, wo, sw2)
+    y = _unpack_rows(outs[0], mbs, bm, db, d)
+    if not train:
+        return y
+    res = [_unpack_rows(o, mbs, bm, fb, f) for o in outs[1:]]
+    return (y, res[0], res[1] if gated else None)
+
+
+@functools.lru_cache(maxsize=512)
+def _plan_tiles_experts_bwd(mbs: int, db: int, fb: int, gated: int):
+    """Static table for the ONE combined experts backward, (13, T) int32.
+
+    Per M-block i (expert e = eid[i]), four phase types in order:
+      A  dHpost_j = sum_c dYs(i,c) @ WoutT(e; c,j); at the last c derive
+         the dHin/dGate cotangent panels and Hpost from the saved preacts
+      B  dWout_acc[j*DB+c] += Hpost_j^T @ dYs(i,c) — zeroed on the
+         DYNAMIC first-block-of-expert flag, stored on last-block (output
+         slot eid*FB*DB + j*DB + c via index-map arithmetic): the dW
+         accumulation crosses an expert's consecutive M-blocks
+      C  dX(i,c) = sum_{which,j} dPanel[which*FB+j] @ WhT(e; which,j,c)
+      D  dWh_acc[which*DB*FB + c*FB + j] += X(i,c)^T @ dPanel[which*FB+j]
+         — same dynamic-flag accumulation as B
+
+    Rows: 0 bi, 1 dyt, 2 xt, 3 whtrel, 4 wotrel, 5 rrest (saved-preact
+    tile slot i*FB + j), 6 phase (0=A 1=B 2=C 3=D), 7 first, 8 last,
+    9 pj (cotangent/Hpost panel slot: j in A/B, which*FB + j in C/D),
+    10 dx out slot, 11 dWh rel (scratch slot AND output rel), 12 dWout
+    rel (scratch slot AND output rel).  Unused operand rows hold a valid
+    recent/next index so the block revisit semantics skip the refetch."""
+    nw = 1 + gated
+    rows: list[list[int]] = [[] for _ in range(13)]
+
+    def emit(i, dyt, xt, whtrel, wotrel, rrest, phase, first, last, pj,
+             dxot, dwhrel, dworel):
+        vals = (i, dyt, xt, whtrel, wotrel, rrest, phase, first, last, pj,
+                dxot, dwhrel, dworel)
+        for r, v in zip(rows, vals):
+            r.append(v)
+
+    wot_hold = db * fb - 1
+    for i in range(mbs):
+        for j in range(fb):                    # A
+            for c in range(db):
+                emit(i, i * db + c, i * db, 0, c * fb + j, i * fb + j,
+                     0, 1 if c == 0 else 0, 1 if c == db - 1 else 0,
+                     j, i * db, 0, 0)
+        for j in range(fb):                    # B
+            for c in range(db):
+                emit(i, i * db + c, i * db, 0, wot_hold, i * fb + j,
+                     1, 0, 0, j, i * db, 0, j * db + c)
+        for c in range(db):                    # C
+            for wch in range(nw):
+                for j in range(fb):
+                    emit(i, i * db + db - 1, i * db,
+                         wch * fb * db + j * db + c, wot_hold,
+                         i * fb + fb - 1, 2,
+                         1 if (wch == 0 and j == 0) else 0,
+                         1 if (wch == nw - 1 and j == fb - 1) else 0,
+                         wch * fb + j, i * db + c, 0, wot_hold)
+        for wch in range(nw):                  # D
+            for c in range(db):
+                for j in range(fb):
+                    emit(i, i * db + db - 1, i * db + c,
+                         wch * fb * db, wot_hold, i * fb + fb - 1, 3,
+                         0, 0, wch * fb + j, i * db + db - 1,
+                         wch * db * fb + c * fb + j, wot_hold)
+    return np.array(rows, np.int32)
+
+
+def _gmm_experts_bwd_kernel(tab_ref, dyn_ref, x_ref, dy_ref, wht_ref,
+                            wot_ref, hin_ref, *rest, activation: str,
+                            gated: bool):
+    if gated:
+        gate_ref, *rest = rest
+    dx_ref, dwh_ref, dwo_ref = rest[:3]
+    acc_ref, dpan_s, hpost_s, dwo_acc, dwh_acc = rest[3:]
+    t = pl.program_id(0)
+    bi = tab_ref[0, t]
+    phase = tab_ref[6, t]
+    last = tab_ref[8, t] == 1
+    pj = tab_ref[9, t]
+    febl = dyn_ref[2, bi] == 1
+    lebl = dyn_ref[3, bi] == 1
+    dt = dx_ref.dtype
+    act = _MOE_ACTS[activation]
+    cdims = (((0,), (0,)), ((), ()))           # tile^T @ tile
+
+    @pl.when(tab_ref[7, t] == 1)
+    def _zero_acc():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    @pl.when(phase == 0)
+    def _a_step():
+        acc_ref[...] += jnp.dot(dy_ref[...], wot_ref[...],
+                                preferred_element_type=jnp.float32)
+
+    fb = dpan_s.shape[0] // (2 if gated else 1)
+
+    @pl.when((phase == 0) & last)
+    def _a_close():
+        dh = acc_ref[...]
+        pre_i = hin_ref[...].astype(jnp.float32)
+        if gated:
+            pre_g = gate_ref[...].astype(jnp.float32)
+            actg, vjp_g = jax.vjp(act, pre_g)
+            hpost_s[pj] = actg * pre_i
+            dpan_s[pj] = dh * actg
+            dpan_s[fb + pj] = vjp_g(dh * pre_i)[0]
+        else:
+            acti, vjp_i = jax.vjp(act, pre_i)
+            hpost_s[pj] = acti
+            dpan_s[pj] = vjp_i(dh)[0]
+
+    @pl.when(phase == 1)
+    def _b_step():
+        slot = tab_ref[12, t]
+
+        @pl.when(febl)
+        def _zero_b():
+            dwo_acc[slot] = jnp.zeros_like(dwo_acc[slot])
+
+        dwo_acc[slot] += jax.lax.dot_general(
+            hpost_s[pj].astype(dt), dy_ref[...], cdims,
+            preferred_element_type=jnp.float32)
+
+        @pl.when(lebl)
+        def _store_b():
+            dwo_ref[...] = dwo_acc[slot]
+
+    @pl.when(phase == 2)
+    def _c_step():
+        acc_ref[...] += jnp.dot(dpan_s[pj].astype(dt), wht_ref[...],
+                                preferred_element_type=jnp.float32)
+
+    @pl.when((phase == 2) & last)
+    def _c_close():
+        valid = dyn_ref[1, bi]
+        dx = acc_ref[...].astype(dt)
+        ri = jax.lax.broadcasted_iota(jnp.int32, dx.shape, 0)
+        dx_ref[...] = jnp.where(ri < valid, dx, jnp.zeros_like(dx))
+
+    @pl.when(phase == 3)
+    def _d_step():
+        slot = tab_ref[11, t]
+
+        @pl.when(febl)
+        def _zero_d():
+            dwh_acc[slot] = jnp.zeros_like(dwh_acc[slot])
+
+        dwh_acc[slot] += jax.lax.dot_general(
+            x_ref[...], dpan_s[pj].astype(dt), cdims,
+            preferred_element_type=jnp.float32)
+
+        @pl.when(lebl)
+        def _store_d():
+            dwh_ref[...] = dwh_acc[slot]
+
+
+def _expert_wstack_t(w, d0p: int, d1p: int):
+    """Transposed per-expert tile stacks: (E, D0, D1) -> tiles of W^T,
+    expert-major, rel index r*D0B + c over the (D1p, D0p) transpose."""
+    e = w.shape[0]
+    wq = jnp.pad(w, ((0, 0), (0, d0p - w.shape[1]), (0, d1p - w.shape[2])))
+    return jnp.concatenate(
+        [_tile_stack(wq[g].T, 128, 128) for g in range(e)])
+
+
+def grouped_matmul_experts_bwd(xp, dyp, w_in, w_out, w_gate, hinp, gatep,
+                               counts, *, activation: str = "silu",
+                               bm: int, interpret=True):
+    """ONE combined backward launch (dX + dW_in/dW_gate/dW_out) mirroring
+    ``grouped_matmul_bwd``, over the per-expert ragged packing.
+
+    ``dyp`` is the packed output cotangent with the router combine weight
+    already folded in (dYs = dY * sw — the same cotangent-fold idiom as
+    the ReLU mask); ``hinp``/``gatep`` are the forward's saved preacts.
+    dW tiles accumulate in VMEM across each expert's consecutive M-blocks
+    (zeroed/stored on the DYNAMIC first/last-block-of-expert prefetch
+    flags) and come back f32.  There are no expert biases (``moe_init``),
+    so the db third of the usual triple is vacuous."""
+    e, d, f = w_in.shape
+    gated = w_gate is not None
+    n_rows = xp.shape[0]
+    assert n_rows % bm == 0, (n_rows, bm)
+    mbs = n_rows // bm
+    dp_, fp_ = _round_up(d, 128), _round_up(f, 128)
+    db, fb = dp_ // 128, fp_ // 128
+    dt = xp.dtype
+    nw = 1 + int(gated)
+
+    x_tiles = _pack_rows(xp, bm, dp_)
+    dy_tiles = _pack_rows(dyp.astype(dt), bm, dp_)
+    hin_tiles = _pack_rows(hinp, bm, fp_)
+    whts = []
+    for g in range(e):
+        whts.append(_expert_wstack_t(w_in[g:g + 1], dp_, fp_))
+        if gated:
+            whts.append(_expert_wstack_t(w_gate[g:g + 1], dp_, fp_))
+    # per-expert layout [in tiles, gate tiles]: rel = which*FB*DB + j*DB+c
+    wht = jnp.concatenate(whts)
+    wot = _expert_wstack_t(w_out, fp_, dp_)     # W_out^T tiles: c*FB + j
+
+    tab = _device_table(_plan_tiles_experts_bwd, mbs, db, fb, int(gated))
+    dyn = _expert_block_meta(counts, mbs, bm)
+    whtpe, wope = nw * fb * db, fb * db
+
+    tile_ix = lambda row: (lambda t, tab, dyn, r=row: (tab[r, t], 0, 0))
+    exp_ix = lambda row, s: (lambda t, tab, dyn, r=row, s=s:
+                             (dyn[0, tab[0, t]] * s + tab[r, t], 0, 0))
+    in_specs = [
+        pl.BlockSpec((None, bm, 128), tile_ix(2)),       # X
+        pl.BlockSpec((None, bm, 128), tile_ix(1)),       # dYs
+        pl.BlockSpec((None, 128, 128), exp_ix(3, whtpe)),  # Wh^T
+        pl.BlockSpec((None, 128, 128), exp_ix(4, wope)),   # Wout^T
+        pl.BlockSpec((None, bm, 128), tile_ix(5)),       # hin preact
+    ]
+    ins = [x_tiles, dy_tiles, wht, wot, hin_tiles]
+    if gated:
+        in_specs.append(pl.BlockSpec((None, bm, 128), tile_ix(5)))
+        ins.append(_pack_rows(gatep, bm, fp_))
+
+    out_shape = [
+        jax.ShapeDtypeStruct((mbs * db, bm, 128), dt),           # dX
+        jax.ShapeDtypeStruct((e * whtpe, 128, 128), jnp.float32),  # dWh
+        jax.ShapeDtypeStruct((e * wope, 128, 128), jnp.float32),  # dWout
+    ]
+    out_specs = [
+        pl.BlockSpec((None, bm, 128), tile_ix(10)),
+        pl.BlockSpec((None, 128, 128), exp_ix(11, whtpe)),
+        pl.BlockSpec((None, 128, 128), exp_ix(12, wope)),
+    ]
+    grid = (mbs * fb * db * (2 + 2 * nw),)
+    fn = pl.pallas_call(
+        functools.partial(_gmm_experts_bwd_kernel, activation=activation,
+                          gated=gated),
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=2, grid=grid,
+            in_specs=in_specs, out_specs=out_specs,
+            scratch_shapes=[pltpu.VMEM((bm, 128), jnp.float32),
+                            pltpu.VMEM((nw * fb, bm, 128), jnp.float32),
+                            pltpu.VMEM((fb, bm, 128), jnp.float32),
+                            pltpu.VMEM((wope, 128, 128), jnp.float32),
+                            pltpu.VMEM((whtpe, 128, 128), jnp.float32)]),
+        out_shape=out_shape, interpret=interpret)
+    _count_launch("grouped_matmul_experts_bwd")
+    dx_t, dwh_t, dwo_t = fn(tab, dyn, *ins)
+
+    dx = _unpack_rows(dx_t, mbs, bm, db, d)
+
+    def _unstack_w(tiles, d0b, d1b, d0, d1):
+        w = tiles.reshape(d0b, d1b, 128, 128).transpose(0, 2, 1, 3) \
+            .reshape(d0b * 128, d1b * 128)
+        return w[:d0, :d1]
+
+    dwin = jnp.stack([_unstack_w(dwh_t[g * whtpe:g * whtpe + db * fb],
+                                 db, fb, d, f) for g in range(e)])
+    dwgate = None
+    if gated:
+        dwgate = jnp.stack(
+            [_unstack_w(dwh_t[g * whtpe + db * fb:(g + 1) * whtpe],
+                        db, fb, d, f) for g in range(e)])
+    dwout = jnp.stack([_unstack_w(dwo_t[g * wope:(g + 1) * wope],
+                                  fb, db, f, d) for g in range(e)])
+    return dx, dwin, dwgate, dwout
+
+
+def grouped_matmul_experts_ref(xp, swp, w_in, w_out, w_gate, counts, *,
+                               activation: str = "silu", bm: int):
+    """Per-expert XLA oracle on the packed layout: plain dense dots per
+    expert (the same single-k-block f32 accumulation the kernel does for
+    D, F <= 128), rows selected by the segment layout, sw row-scale, and
+    exact zeros outside every expert's valid segment."""
+    e, d, f = w_in.shape
+    n_rows = xp.shape[0]
+    act = _MOE_ACTS[activation]
+    dt = xp.dtype
+    offs = expert_row_offsets(counts, bm)
+    counts = jnp.asarray(counts, jnp.int32)
+    r = jnp.arange(n_rows)[:, None]
+    y = jnp.zeros((n_rows, d), dt)
+    for g in range(e):
+        hin = (xp @ w_in[g])
+        if w_gate is not None:
+            h = act((xp @ w_gate[g]).astype(dt)) * hin.astype(dt)
+        else:
+            h = act(hin.astype(dt))
+        yg = (h @ w_out[g]).astype(dt) * swp[:, None].astype(dt)
+        seg = (r >= offs[g]) & (r < offs[g] + counts[g])
+        y = jnp.where(seg, yg, y)
+    return y
+
+
+def grouped_matmul_experts_flops(n_slots: int, e: int, d: int, f: int, *,
+                                 gated: bool, bm: int) -> int:
+    """FLOPs of the static experts grid — scales with the routed budget
+    n_slots plus at most one partial block per expert, NOT E*capacity."""
+    mbs = moe_static_blocks(n_slots, e, bm)
+    return 2 * mbs * bm * _round_up(d, 128) * _round_up(f, 128) \
+        * (2 + int(gated))

@@ -11,6 +11,7 @@ import functools
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.kernels import matmul as _mm
 from repro.kernels import conv2d as _conv
@@ -731,3 +732,65 @@ _chained_vjp.defvjp(_chained_fwd, _chained_bwd)
 
 grouped_matmul_chained_ref = _gmm.grouped_matmul_chained_ref
 chained_layout = _gmm.chained_layout
+
+# ---------------------------------------------------------------------------
+# per-expert ragged grouped GEMM: the MoE expert engine
+# ---------------------------------------------------------------------------
+
+def grouped_matmul_experts(xp, swp, w_in, w_out, w_gate, counts, *,
+                           activation: str = "silu",
+                           interpret: bool | None = None, bm: int):
+    """Differentiable per-expert ragged expert stack in ONE launch per
+    direction: forward fuses in/gate GEMMs, the activation, the out GEMM
+    and the router combine-weight row scale; backward is ONE combined
+    ``grouped_matmul_experts_bwd`` launch (dx + every dW) plus the dsw
+    row reduction computed outside the kernel from the saved output.
+
+    ``counts`` is a TRACED (E,) int32 of routed tokens per expert — it is
+    a real custom_vjp operand (cotangent ``float0``) rather than a
+    closure capture, so the vjp stays leak-free under ``jax.checkpoint``
+    and ``scan``; ``w_gate=None`` flows through the pytree and comes back
+    as a ``None`` cotangent, mirroring ``_grouped_bwd``'s optional-bias
+    handling."""
+    interpret = default_interpret() if interpret is None else interpret
+
+    @jax.custom_vjp
+    def run(xp, swp, w_in, w_out, w_gate, counts):
+        return _gmm.grouped_matmul_experts(
+            xp, swp, w_in, w_out, w_gate, counts,
+            activation=activation, bm=bm, interpret=interpret)
+
+    def run_fwd(xp, swp, w_in, w_out, w_gate, counts):
+        y, hinp, gatep = _gmm.grouped_matmul_experts(
+            xp, swp, w_in, w_out, w_gate, counts, activation=activation,
+            train=True, bm=bm, interpret=interpret)
+        return y, (xp, swp, w_in, w_out, w_gate, counts, y, hinp, gatep)
+
+    def run_bwd(res, dy):
+        xp, swp, w_in, w_out, w_gate, counts, y, hinp, gatep = res
+        dy = dy.astype(xp.dtype)
+        dyp = dy * swp[:, None].astype(dy.dtype)
+        dx, dwin, dwgate, dwout = _gmm.grouped_matmul_experts_bwd(
+            xp, dyp, w_in, w_out, w_gate, hinp, gatep, counts,
+            activation=activation, bm=bm, interpret=interpret)
+        # dsw_r = <dy_r, y_r/sw_r>: recover the unscaled row from the
+        # saved output instead of a third kernel pass
+        num = jnp.sum(dy.astype(jnp.float32) * y.astype(jnp.float32),
+                      axis=-1)
+        dsw = jnp.where(swp != 0, num / jnp.where(swp != 0, swp, 1.0),
+                        0.0).astype(swp.dtype)
+        dwin = dwin.astype(w_in.dtype)
+        dwout = dwout.astype(w_out.dtype)
+        if w_gate is not None:
+            dwgate = dwgate.astype(w_gate.dtype)
+        dcounts = np.zeros(counts.shape, jax.dtypes.float0)
+        return dx, dsw, dwin, dwout, dwgate, dcounts
+
+    run.defvjp(run_fwd, run_bwd)
+    return run(xp, swp, w_in, w_out, w_gate, counts)
+
+
+grouped_matmul_experts_ref = _gmm.grouped_matmul_experts_ref
+moe_block_m = _gmm.moe_block_m
+moe_static_blocks = _gmm.moe_static_blocks
+expert_row_offsets = _gmm.expert_row_offsets

@@ -111,7 +111,7 @@ def _norm(cfg, p, x):
 
 def _block_apply(cfg: ModelConfig, spec: BlockSpec, p, x, *, cache=None,
                  cache_pos=None, positions=None, context=None,
-                 causal=True, impl="xla"):
+                 causal=True, impl="xla", moe_impl="einsum"):
     """Returns (x, new_cache, aux_loss)."""
     aux = jnp.zeros((), jnp.float32)
     new_cache = {}
@@ -157,7 +157,7 @@ def _block_apply(cfg: ModelConfig, spec: BlockSpec, p, x, *, cache=None,
             h, moe_aux = MOE.moe_apply(
                 p["moe"], h, top_k=cfg.moe.top_k,
                 capacity_factor=cfg.moe.capacity_factor,
-                activation=cfg.activation)
+                activation=cfg.activation, impl=moe_impl)
             aux = aux + moe_aux["aux_loss"]
         if cfg.post_norm:
             h = _norm(cfg, p["post_norm2"], h)
@@ -172,7 +172,7 @@ def _block_apply(cfg: ModelConfig, spec: BlockSpec, p, x, *, cache=None,
 
 def _run_stack(cfg: ModelConfig, params, x, *, cache=None, cache_pos=None,
                positions=None, context=None, causal=True, impl="xla",
-               remat=False):
+               moe_impl="einsum", remat=False):
     """Scan over super-blocks.  cache: list per pattern pos of stacked
     pytrees (n_super leading) or None."""
     pat = cfg.pattern
@@ -187,7 +187,8 @@ def _run_stack(cfg: ModelConfig, params, x, *, cache=None, cache_pos=None,
             h, nc, aux = _block_apply(cfg, spec, block_params[i], h,
                                       cache=c, cache_pos=cache_pos,
                                       positions=positions, context=context,
-                                      causal=causal, impl=impl)
+                                      causal=causal, impl=impl,
+                                      moe_impl=moe_impl)
             new_caches.append(nc)
             aux_tot = aux_tot + aux
         return h, (new_caches, aux_tot)
@@ -233,7 +234,7 @@ def _embed_inputs(cfg, params, tokens, extra_embeds):
 
 
 def forward(params, cfg: ModelConfig, tokens, *, extra_embeds=None,
-            impl="xla", remat=False):
+            impl="xla", moe_impl="einsum", remat=False):
     """Full-sequence forward -> logits (B, S_total, V).
 
     tokens: (B, S) int32.  extra_embeds: vlm patches (B, Sp, D) prepended,
@@ -246,18 +247,19 @@ def forward(params, cfg: ModelConfig, tokens, *, extra_embeds=None,
     x = _embed_inputs(cfg, params, tokens, extra_embeds)
     x = constrain(x, "dp", "sp", None)
     x, _, aux = _run_stack(cfg, params, x, context=context, impl=impl,
-                           remat=remat)
+                           moe_impl=moe_impl, remat=remat)
     x = _norm(cfg, params["final_norm"], x)
     table = params["unembed" if "unembed" in params else "embed"]
     logits = L.unembed(table, x, cfg.final_softcap)
     return constrain(logits, "dp", None, "tp"), aux
 
 
-def loss_fn(params, cfg: ModelConfig, batch, *, impl="xla", remat=True,
+def loss_fn(params, cfg: ModelConfig, batch, *, impl="xla",
+            moe_impl="einsum", remat=True,
             moe_aux_weight: float = 0.01):
     logits, aux = forward(params, cfg, batch["tokens"],
                           extra_embeds=batch.get("extra_embeds"),
-                          impl=impl, remat=remat)
+                          impl=impl, moe_impl=moe_impl, remat=remat)
     # vlm: patches prepended -> only score the token region
     if cfg.frontend == "patch" and "extra_embeds" in batch:
         logits = logits[:, batch["extra_embeds"].shape[1]:]

@@ -1,0 +1,293 @@
+"""Per-expert-ragged grouped GEMM: the MoE expert engine.
+
+Kernel level — ``grouped_matmul_experts`` must BIT-match its packed-layout
+per-expert XLA oracle for silu/f32 with D, F <= 128 (one k-block keeps the
+kernel and the oracle on the same single f32 dot accumulation, the same
+bar ``test_ragged_m.py`` sets), with exact zeros outside every expert's
+valid segment — zero-token experts included; gelu (1-2 ulp of tanh
+fusion drift) and bf16 use ``tol_for``.  Model level — ``moe_apply`` with
+``impl="grouped"`` must reproduce the einsum engine bit-for-bit (routing,
+drops and combine are SHARED code, so equivalence reduces to the expert
+GEMMs), run ONE grouped-family launch per direction, and report the
+``padded_slot_fraction`` the einsum engine wastes.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from conftest import given, settings, st, tol_for
+
+from repro import kernels as K
+from repro.models import moe as MOE
+
+# (counts, e) mixes: zero-token experts, all-one-expert, heavy imbalance
+COUNT_SETS = [
+    [16, 0, 9, 3],
+    [0, 0, 40, 0],
+    [1, 1, 1, 1, 1, 1, 1, 25],
+    [0, 0],
+]
+
+
+def _packed_case(counts, d, f, dtype, *, gated, bm, key=0):
+    offs = np.asarray(K.expert_row_offsets(counts, bm))
+    e = len(counts)
+    n_rows = int(np.maximum(-(-np.asarray(counts) // bm), 1).sum()) * bm
+    ks = jax.random.split(jax.random.PRNGKey(key), 5)
+    dt = jnp.dtype(dtype)
+    xp = jnp.zeros((n_rows, d), dt)
+    swp = jnp.zeros((n_rows,), jnp.float32)
+    for g, c in enumerate(counts):
+        if c:
+            xp = xp.at[offs[g]:offs[g] + c].set(
+                jax.random.normal(jax.random.fold_in(ks[0], g),
+                                  (c, d), dt) * 0.3)
+            swp = swp.at[offs[g]:offs[g] + c].set(
+                jax.random.uniform(jax.random.fold_in(ks[1], g), (c,)))
+    w_in = jax.random.normal(ks[2], (e, d, f), dt) * 0.3
+    w_out = jax.random.normal(ks[3], (e, f, d), dt) * 0.3
+    w_gate = jax.random.normal(ks[4], (e, d, f), dt) * 0.3 if gated else None
+    return xp, swp, w_in, w_out, w_gate, jnp.asarray(counts, jnp.int32)
+
+
+def _assert_expert_match(got, want, counts, bm, *, exact):
+    got, want = np.asarray(got), np.asarray(want)
+    if exact:
+        assert np.array_equal(got, want), (
+            f"expert output != oracle (max |d| "
+            f"{np.abs(got.astype(np.float32) - want.astype(np.float32)).max()})")
+    else:
+        np.testing.assert_allclose(got.astype(np.float32),
+                                   want.astype(np.float32), **tol_for(got.dtype))
+    # exact zeros outside every expert's valid segment (either way)
+    offs = np.asarray(K.expert_row_offsets(counts, bm))
+    valid = np.zeros(got.shape[0], bool)
+    for g, c in enumerate(np.asarray(counts)):
+        valid[offs[g]:offs[g] + int(c)] = True
+    assert not got[~valid].any(), "rows outside expert segments not zeroed"
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(0, len(COUNT_SETS) - 1),
+       st.sampled_from(["float32", "bfloat16"]),
+       st.booleans(), st.sampled_from(["silu", "gelu"]))
+def test_experts_kernel_matches_oracle(set_idx, dtype, gated, act):
+    """Mixed per-expert token counts (zero-token experts included) x
+    dtypes x gated/ungated x activation: the ragged experts launch equals
+    the per-expert oracle — bit-for-bit on the silu/f32 one-k-block bar."""
+    counts = COUNT_SETS[set_idx]
+    bm = 8
+    case = _packed_case(counts, 128, 64, jnp.dtype(dtype), gated=gated,
+                        bm=bm, key=set_idx)
+    got = K.grouped_matmul_experts(*case, activation=act, bm=bm)
+    want = K.grouped_matmul_experts_ref(*case, activation=act, bm=bm)
+    exact = dtype == "float32" and act == "silu"
+    _assert_expert_match(got, want, counts, bm, exact=exact)
+
+
+@pytest.mark.parametrize("dtype", ["float32", "bfloat16"])
+@pytest.mark.parametrize("set_idx", range(len(COUNT_SETS)))
+def test_experts_seeded_sweep(set_idx, dtype):
+    """Seeded fallback for the property test above (runs without
+    hypothesis, mirroring test_ragged_m.py): every count mix at the
+    bit-match bar plus the multi-tile D > 128 shape at tolerance."""
+    counts = COUNT_SETS[set_idx]
+    bm = 8
+    case = _packed_case(counts, 128, 64, jnp.dtype(dtype), gated=True,
+                        bm=bm, key=set_idx)
+    got = K.grouped_matmul_experts(*case, activation="silu", bm=bm)
+    want = K.grouped_matmul_experts_ref(*case, activation="silu", bm=bm)
+    _assert_expert_match(got, want, counts, bm, exact=dtype == "float32")
+
+
+def test_experts_multitile_shapes():
+    """D, F > 128 (db=fb=2): multi-k-block accumulation differs from the
+    oracle's single dot only by f32 reduction order."""
+    counts = [10, 6, 0]
+    bm = 8
+    case = _packed_case(counts, 200, 140, jnp.float32, gated=True, bm=bm)
+    got = K.grouped_matmul_experts(*case, bm=bm)
+    want = K.grouped_matmul_experts_ref(*case, bm=bm)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("gated", [True, False])
+def test_experts_combined_backward_matches_grad(gated):
+    """ONE combined backward launch (dx + dW_in/dW_gate/dW_out) equals
+    jax.grad of the oracle — zero-token experts get exact-zero dW."""
+    counts = [16, 0, 9, 3]
+    bm = 8
+    xp, swp, w_in, w_out, w_gate, cnt = _packed_case(
+        counts, 128, 64, jnp.float32, gated=gated, bm=bm)
+    ct = jax.random.normal(jax.random.PRNGKey(9), xp.shape) * 0.5
+
+    def loss(xp_, swp_, w_in_, w_out_, w_gate_):
+        y = K.grouped_matmul_experts(xp_, swp_, w_in_, w_out_, w_gate_,
+                                     cnt, bm=bm)
+        return jnp.sum(y * ct)
+
+    grads = jax.grad(loss, argnums=(0, 1, 2, 3) + ((4,) if gated else ()))(
+        xp, swp, w_in, w_out, w_gate)
+
+    def ref_loss(xp_, swp_, w_in_, w_out_, w_gate_):
+        y = K.grouped_matmul_experts_ref(xp_, swp_, w_in_, w_out_,
+                                         w_gate_, cnt, bm=bm)
+        return jnp.sum(y * ct)
+
+    want = jax.grad(ref_loss, argnums=(0, 1, 2, 3) + ((4,) if gated else ()))(
+        xp, swp, w_in, w_out, w_gate)
+    for g, w in zip(grads, want):
+        np.testing.assert_allclose(np.asarray(g), np.asarray(w),
+                                   rtol=2e-5, atol=2e-5)
+    # zero-token expert 1: its dW tiles must be stored as exact zeros
+    assert not np.asarray(grads[2][1]).any()
+    assert not np.asarray(grads[3][1]).any()
+
+
+def test_experts_one_launch_per_direction():
+    """The eager launch counters: forward is ONE grouped_matmul_experts
+    launch, backward ONE grouped_matmul_experts_bwd launch (dsw is a row
+    reduction outside the kernel, not a third launch)."""
+    counts = [16, 0, 9, 3]
+    bm = 8
+    xp, swp, w_in, w_out, w_gate, cnt = _packed_case(
+        counts, 128, 64, jnp.float32, gated=True, bm=bm)
+
+    K.reset_launch_counts()
+    y = K.grouped_matmul_experts(xp, swp, w_in, w_out, w_gate, cnt, bm=bm)
+    assert dict(K.KERNEL_LAUNCHES) == {"grouped_matmul_experts": 1}
+
+    K.reset_launch_counts()
+    jax.grad(lambda *a: jnp.sum(K.grouped_matmul_experts(*a, cnt, bm=bm)))(
+        xp, swp, w_in, w_out, w_gate)
+    counts_d = dict(K.KERNEL_LAUNCHES)
+    assert counts_d.pop("grouped_matmul_experts") == 1      # residual fwd
+    assert counts_d == {"grouped_matmul_experts_bwd": 1}
+
+
+# ---------------------------------------------------------------------------
+# model level: moe_apply impl="grouped" vs the einsum engine
+# ---------------------------------------------------------------------------
+
+MODEL_CASES = [
+    # b, s, d, f, e, k, cf, shared_f, gated
+    (2, 32, 128, 64, 8, 2, 4.0, 0, True),      # granite-moe-reduced dims
+    (2, 32, 128, 64, 8, 2, 4.0, 128, True),    # qwen2-moe-reduced (shared)
+    (2, 16, 64, 32, 4, 1, 0.5, 0, True),       # top_k=1, heavy drops
+    (1, 8, 64, 32, 16, 2, 4.0, 0, False),      # zero-token experts, ungated
+]
+
+
+@settings(max_examples=8, deadline=None)
+@given(st.integers(0, len(MODEL_CASES) - 1), st.integers(0, 3),
+       st.sampled_from(["float32", "bfloat16"]))
+def test_moe_grouped_bitmatches_einsum(case_idx, seed, dtype):
+    """The grouped engine reproduces the einsum engine BIT-for-bit (both
+    dtypes: routing/drops/combine are shared code and the expert chain
+    casts identically), with identical aux stats."""
+    b, s, d, f, e, k, cf, shared_f, gated = MODEL_CASES[case_idx]
+    dt = jnp.dtype(dtype)
+    p = MOE.moe_init(jax.random.PRNGKey(seed), d, f, e, shared_f=shared_f,
+                     gated=gated, dtype=dt)
+    x = jax.random.normal(jax.random.PRNGKey(seed + 1), (b, s, d), dt) * 0.5
+    oe, auxe = MOE.moe_apply(p, x, top_k=k, capacity_factor=cf,
+                             impl="einsum")
+    og, auxg = MOE.moe_apply(p, x, top_k=k, capacity_factor=cf,
+                             impl="grouped")
+    np.testing.assert_array_equal(np.asarray(oe), np.asarray(og))
+    assert auxe["capacity"] == auxg["capacity"]
+    np.testing.assert_allclose(float(auxe["aux_loss"]),
+                               float(auxg["aux_loss"]), rtol=1e-6)
+    np.testing.assert_array_equal(np.asarray(auxe["padded_slot_fraction"]),
+                                  np.asarray(auxg["padded_slot_fraction"]))
+
+
+@pytest.mark.parametrize("case_idx", range(len(MODEL_CASES)))
+def test_moe_grouped_seeded_sweep(case_idx):
+    """Seeded no-hypothesis fallback of the property test above."""
+    b, s, d, f, e, k, cf, shared_f, gated = MODEL_CASES[case_idx]
+    p = MOE.moe_init(jax.random.PRNGKey(case_idx), d, f, e,
+                     shared_f=shared_f, gated=gated)
+    x = jax.random.normal(jax.random.PRNGKey(40 + case_idx), (b, s, d)) * 0.5
+    oe, _ = MOE.moe_apply(p, x, top_k=k, capacity_factor=cf, impl="einsum")
+    og, _ = MOE.moe_apply(p, x, top_k=k, capacity_factor=cf, impl="grouped")
+    np.testing.assert_array_equal(np.asarray(oe), np.asarray(og))
+
+
+def test_moe_grouped_grads_match_einsum():
+    """jax.grad through the grouped engine (custom-vjp kernel + pack /
+    combine gathers) equals grad through the einsum engine for every
+    param and the input."""
+    p = MOE.moe_init(jax.random.PRNGKey(0), 128, 64, 8, shared_f=128)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 32, 128)) * 0.5
+    ct = jax.random.normal(jax.random.PRNGKey(2), (2, 32, 128)) * 0.5
+
+    def loss(p_, x_, impl):
+        out, aux = MOE.moe_apply(p_, x_, top_k=2, capacity_factor=4.0,
+                                 impl=impl)
+        return jnp.sum(out * ct) + 0.01 * aux["aux_loss"]
+
+    ge = jax.grad(loss, argnums=(0, 1))(p, x, "einsum")
+    gg = jax.grad(loss, argnums=(0, 1))(p, x, "grouped")
+    for a, b in zip(jax.tree_util.tree_leaves(ge),
+                    jax.tree_util.tree_leaves(gg)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=2e-5, atol=2e-5)
+
+
+def test_moe_grouped_padded_slot_fraction():
+    """The new aux stat measures the einsum engine's FLOP waste: at
+    cf=4.0 top_k=2 e=8, capacity slots are 4x the routed tokens -> 0.75
+    padded; with no spare capacity the fraction is 0."""
+    p = MOE.moe_init(jax.random.PRNGKey(0), 64, 32, 8)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 32, 64))
+    for impl in ("einsum", "grouped"):
+        _, aux = MOE.moe_apply(p, x, top_k=2, capacity_factor=4.0,
+                               impl=impl)
+        assert abs(float(aux["padded_slot_fraction"]) - 0.75) < 1e-6
+    # cap formula: sk=64, cf=1.0, e=8 -> cap=8 slots/expert = exactly sk*1
+    _, aux = MOE.moe_apply(p, x, top_k=2, capacity_factor=1.0,
+                           impl="grouped")
+    kept = (1.0 - float(aux["drop_fraction"])) * 2 * 64
+    slots = 2 * 8 * aux["capacity"]
+    assert abs(float(aux["padded_slot_fraction"])
+               - (slots - kept) / slots) < 1e-6
+
+
+def test_moe_grouped_one_launch_per_direction_model_level():
+    """A full moe_apply forward runs exactly ONE grouped-family launch;
+    a grad adds exactly one combined backward launch."""
+    p = MOE.moe_init(jax.random.PRNGKey(0), 128, 64, 8)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 32, 128)) * 0.5
+
+    K.reset_launch_counts()
+    MOE.moe_apply(p, x, top_k=2, capacity_factor=4.0, impl="grouped")
+    assert dict(K.KERNEL_LAUNCHES) == {"grouped_matmul_experts": 1}
+
+    K.reset_launch_counts()
+    jax.grad(lambda p_: MOE.moe_apply(p_, x, top_k=2, capacity_factor=4.0,
+                                      impl="grouped")[0].sum())(p)
+    launches = dict(K.KERNEL_LAUNCHES)
+    assert launches.pop("grouped_matmul_experts") == 1
+    assert launches == {"grouped_matmul_experts_bwd": 1}
+
+
+def test_moe_transformer_thread_through():
+    """granite-moe-reduced loss_fn(moe_impl="grouped") == the einsum run
+    bit-for-bit, through scan + remat + every MoE layer."""
+    from repro.configs import get_reduced
+    from repro.models import transformer as T
+
+    cfg = get_reduced("granite_moe_1b_a400m")
+    params = T.init_params(cfg, jax.random.PRNGKey(0))
+    tokens = jax.random.randint(jax.random.PRNGKey(1), (2, 16), 0,
+                                cfg.vocab)
+    batch = {"tokens": tokens, "labels": tokens}
+    le, auxe = T.loss_fn(params, cfg, batch, moe_impl="einsum")
+    lg, auxg = T.loss_fn(params, cfg, batch, moe_impl="grouped")
+    np.testing.assert_array_equal(np.asarray(le), np.asarray(lg))
+    gs = jax.grad(lambda pp: T.loss_fn(pp, cfg, batch,
+                                       moe_impl="grouped")[0])(params)
+    assert all(bool(jnp.all(jnp.isfinite(g)))
+               for g in jax.tree_util.tree_leaves(gs))

@@ -74,7 +74,8 @@ def test_bucket_and_flags_key_separately():
     assert e2 is not e4 and e2 is not ec
     assert e2.plan.context["batch"] == 2 and e4.plan.context["batch"] == 4
     assert plan_cache.stats() == {"hits": 0, "misses": 3, "entries": 3,
-                                  "hit_rate": 0.0}
+                                  "hit_rate": 0.0, "evictions": 0,
+                                  "capacity": plan_cache.CAPACITY}
     assert plan_cache.cached_cnn_plan(cfg, 4) is e4
     assert plan_cache.stats()["hit_rate"] == 0.25
 
@@ -97,3 +98,64 @@ def test_fingerprint_structure_sensitive_and_stable():
     k2 = plan_cache.plan_key(fp1, 2, "float32", "cpu")
     k4 = plan_cache.plan_key(fp1, 4, "float32", "cpu")
     assert k2 != k4
+
+
+# ---------------------------------------------------------------------------
+# LRU eviction + pinned device tables + MoE plans
+# ---------------------------------------------------------------------------
+
+def test_lru_eviction_bounds_entries(monkeypatch):
+    """Past CAPACITY the least-recent entry is evicted and counted; a
+    recency refresh (hit) protects an entry from the next eviction."""
+    monkeypatch.setattr(plan_cache, "CAPACITY", 2)
+    cfg = get_reduced("googlenet")
+    e2 = plan_cache.cached_cnn_plan(cfg, 2)
+    e4 = plan_cache.cached_cnn_plan(cfg, 4)
+    assert plan_cache.cached_cnn_plan(cfg, 2) is e2   # refresh bucket 2
+    e8 = plan_cache.cached_cnn_plan(cfg, 8)           # evicts bucket 4
+    s = plan_cache.stats()
+    assert s["entries"] == 2 and s["evictions"] == 1
+    assert plan_cache.cached_cnn_plan(cfg, 8) is e8
+    assert plan_cache.cached_cnn_plan(cfg, 2) is e2   # survivor: still a hit
+    assert plan_cache.cached_cnn_plan(cfg, 4) is not e4  # evictee: re-lowered
+    assert plan_cache.stats()["evictions"] == 2       # 4 pushed out 8
+
+
+def test_eviction_unpins_device_tables(monkeypatch):
+    """An evicted entry releases its pinned offset tables from the device
+    registry; a surviving entry's pins keep its tables resident."""
+    monkeypatch.setattr(plan_cache, "CAPACITY", 1)
+    cfg = get_reduced("googlenet")
+    key = (gmm._plan_tiles, 1, (1,), (1,))
+    gmm._device_table(*key)                           # ensure resident
+    e2 = plan_cache.cached_cnn_plan(cfg, 2)
+    plan_cache.attach_tables(e2, [key])
+    assert gmm._device_table._pins.get(key) == 1
+    plan_cache.cached_cnn_plan(cfg, 4)                # evicts e2
+    assert plan_cache.stats()["evictions"] == 1
+    assert gmm._device_table._pins.get(key) is None
+    assert e2.table_keys == ()
+    # double-attach is idempotent: second attach must not double-pin
+    e4 = plan_cache.cached_cnn_plan(cfg, 4)
+    plan_cache.attach_tables(e4, [key])
+    plan_cache.attach_tables(e4, [key])
+    assert gmm._device_table._pins.get(key) == 1
+    plan_cache.reset(clear_entries=True)
+    assert gmm._device_table._pins.get(key) is None
+
+
+def test_moe_plan_cached_and_keyed():
+    """MoE layers ride the same cache: warm call returns the same entry,
+    a dim edit re-keys, and the plan's expert fork is ONE grouped_experts
+    group priced below the einsum engine."""
+    kw = dict(b=2, s=32, d=128, f=64, e=8, top_k=2, capacity_factor=4.0,
+              gated=True, shared_f=128)
+    e1 = plan_cache.cached_moe_plan(**kw)
+    assert plan_cache.cached_moe_plan(**kw) is e1
+    assert plan_cache.stats()["hits"] == 1
+    assert e1.plan.mode_counts()["grouped_experts"] == 1
+    (ge,) = e1.plan.groups_of_mode("grouped_experts")
+    times = e1.plan.context["moe"]["times"]
+    assert ge.modeled_time == times["grouped"]
+    e2 = plan_cache.cached_moe_plan(**{**kw, "f": 128})
+    assert e2 is not e1
