@@ -5,6 +5,13 @@ set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 python -m pytest -x -q "$@"
+
+# planlint: statically verify every lowered googlenet variant (fwd+bwd x
+# fused/chained/unfused-concat/unfused-pool/serial-joins) plus the MoE
+# expert tables, and lint traced fallback primitives against the
+# named-scope provenance policy.  Zero findings is the gate.
+python -m repro.analysis.lint --arch googlenet --fallbacks
+
 make bench-smoke
 
 # Co-execution guardrails on the smoke baseline:

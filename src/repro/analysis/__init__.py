@@ -1,0 +1,55 @@
+"""planlint — static verification of lowered plans.
+
+See ``analysis/tables.py`` (offset-table schemas), ``budgets.py`` (the
+unified C2 footprint), ``hazards.py`` (chained wave happens-before) and
+``fallbacks.py`` (jaxpr fallback provenance).  ``verify_plan`` is the
+entry point; the CLI lives in ``analysis/lint.py``.
+
+Module-level imports here must stay leaf-level (dataclasses + tables
+only): ``kernels/grouped_matmul.py`` imports the table schemas, and
+``core/plan.py`` imports ``budgets`` — anything heavier is imported
+lazily inside ``verify_plan``.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    """One verifier finding.
+
+    checker  which checker fired: "schema" | "bounds" | "hazard" |
+             "budget" | "fallback"
+    family   the table family / group mode it applies to
+    where    the group or op the finding is anchored to
+    detail   human-readable description
+    """
+    checker: str
+    family: str
+    where: str
+    detail: str
+
+    def __str__(self) -> str:
+        return f"[{self.checker}] {self.family} @ {self.where}: {self.detail}"
+
+
+class PlanVerificationError(AssertionError):
+    """Raised by ``lower(..., verify=True)`` when planlint findings
+    survive on the lowered plan."""
+
+    def __init__(self, findings):
+        self.findings = tuple(findings)
+        super().__init__(
+            f"{len(self.findings)} planlint finding(s):\n" +
+            "\n".join(f"  {f}" for f in self.findings))
+
+
+def verify_plan(plan, graph=None):
+    """Statically verify a lowered plan; returns a list of ``Finding``.
+
+    Implemented in ``analysis/_verify.py`` (lazy import — verification
+    pulls in kernels and models, which must not load when the kernels
+    themselves import ``analysis.tables``)."""
+    from repro.analysis._verify import verify_plan as _impl
+    return _impl(plan, graph)

@@ -1,0 +1,129 @@
+"""planlint fallback provenance — a jaxpr lint that names the op.
+
+``core/launch_count.py`` counts launch-like primitives; its gates can
+only say "the count regressed".  This lint generalizes it: every
+surviving fallback primitive (``gather`` / ``scatter*`` /
+``concatenate`` / ``reduce_window*`` / ``conv_general_dilated``) in a
+traced plan is attributed to the producing plan op through the
+``jax.named_scope`` tags ``core/plan.py``'s executors wrap their
+emissions in (``plan[<mode>:<op>]``), so a zero-fallback gate reports
+WHICH op leaked instead of a bare number.
+
+Policy (``lint_fallbacks``): a fallback primitive inside a
+co-execution scope is a finding — those modes exist to delete exactly
+these primitives — with two contractual exceptions:
+
+  * ``grouped_concat`` may emit ``concatenate``: the fused launch
+    writes branch tiles in place and the executor assembles the join
+    from maximal buffer slices + passthrough segments with ONE final
+    concat (strictly less copying than a standalone join; the launch
+    ceiling gates budget for it).
+  * ``grouped``, ``grouped_pooled`` and ``stacked`` may emit
+    ``concatenate``: the packed tile stacks (im2col views, the
+    tap-expanded pooled X stack, the pad-to-max branch stack) are
+    PACKING copies the modes' cost model and C2 budgets price
+    explicitly (``analysis/budgets.py``) — they feed the one launch,
+    they are not a surviving join (a join runs under its own op's
+    scope, never the producing group's).  ``grouped_chained`` gets no
+    such allowance: its pack path is dynamic-update-slice only, by
+    contract.
+  * serial / xla / degraded (``-> xla``) scopes emit native primitives
+    by design — they are reported in the attribution table but are not
+    findings.
+
+Tracing only — the plan is never executed.
+"""
+from __future__ import annotations
+
+import jax
+
+from repro.core.launch_count import _subjaxprs
+
+#: primitive name -> report key (launch_count's COUNTED plus the
+#: scatter/gather family the zero-fallback claims also cover)
+FALLBACK_PRIMS = {
+    "conv_general_dilated": "conv",
+    "reduce_window": "reduce_window",
+    "reduce_window_max": "reduce_window",
+    "reduce_window_min": "reduce_window",
+    "reduce_window_sum": "reduce_window",
+    "select_and_scatter_add": "reduce_window",
+    "concatenate": "concatenate",
+    "gather": "gather",
+    "scatter": "scatter",
+    "scatter-add": "scatter",
+    "scatter-mul": "scatter",
+    "scatter-min": "scatter",
+    "scatter-max": "scatter",
+}
+
+#: co-execution scope modes whose emissions must stay fallback-free
+CLEAN_MODES = ("grouped", "grouped_pooled", "grouped_chained",
+               "grouped_concat", "grouped_experts", "stacked", "fused")
+
+#: (mode, primitive key) pairs the mode's contract allows (see the
+#: module docstring for why each packing/assembly concat is budgeted)
+ALLOWED = {("grouped", "concatenate"),
+           ("grouped_concat", "concatenate"),
+           ("grouped_pooled", "concatenate"),
+           ("stacked", "concatenate")}
+
+
+def _own_tag(eqn) -> str | None:
+    """The innermost ``plan[...]`` tag on the equation's OWN name stack,
+    or None — sub-jaxpr stacks are relative, so an equation nested in a
+    pjit/scan body carries the enclosing call's scope instead (threaded
+    down by ``fallback_report``'s walk)."""
+    stack = str(eqn.source_info.name_stack)
+    tags = [s for s in stack.split("/") if s.startswith("plan[")]
+    return tags[-1] if tags else None
+
+
+def _mode_of(scope: str) -> str:
+    if scope.startswith("plan[") and ":" in scope:
+        return scope[len("plan["):].split(":", 1)[0]
+    return ""
+
+
+def _walk_scoped(jaxpr, inherited, hits) -> None:
+    """Recursive scoped walk: an equation's own ``plan[...]`` tag wins,
+    otherwise it inherits the scope of the call that encloses it — so a
+    ``gather`` hidden inside ``jnp.take``'s pjit body still attributes
+    to the plan op that emitted it."""
+    for eqn in jaxpr.eqns:
+        scope = _own_tag(eqn) or inherited
+        key = FALLBACK_PRIMS.get(eqn.primitive.name)
+        if key is not None:
+            k = (key, scope or "<untagged>")
+            hits[k] = hits.get(k, 0) + 1
+        for v in eqn.params.values():
+            for sub in _subjaxprs(v):
+                _walk_scoped(sub, scope, hits)
+
+
+def fallback_report(fn, *args, **kwargs) -> dict:
+    """Trace ``fn(*args, **kwargs)`` (never executed) and return the
+    attribution table ``{(primitive key, scope): count}`` over every
+    fallback primitive in the jaxpr, sub-jaxprs included."""
+    closed = jax.make_jaxpr(lambda *a: fn(*a, **kwargs))(*args)
+    hits: dict[tuple[str, str], int] = {}
+    _walk_scoped(closed.jaxpr, None, hits)
+    return hits
+
+
+def lint_fallbacks(fn, *args, **kwargs):
+    """Findings for every fallback primitive that leaked into a
+    co-execution scope: ``(kind, message)`` tuples with kind
+    ``"fallback"``.  Serial/xla/degraded scopes are exempt (native
+    primitives are their contract), as is the fused-concat assembly
+    concatenate."""
+    out = []
+    for (key, scope), n in sorted(fallback_report(fn, *args,
+                                                  **kwargs).items()):
+        mode = _mode_of(scope)
+        if mode not in CLEAN_MODES or (mode, key) in ALLOWED:
+            continue
+        out.append(("fallback",
+                    f"{key} x{n} leaked into {scope} — the {mode} launch "
+                    "claims to have deleted this primitive"))
+    return out

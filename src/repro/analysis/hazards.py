@@ -1,0 +1,150 @@
+"""planlint hazard analysis — happens-before on the chained wave
+schedule and write-write checks on fused-concat column layouts.
+
+The chained kernel (``grouped_matmul_chained``) runs its phases in a
+lag-1 wave: wave ``w`` executes phase ``p``'s M-block ``i = w - p``, so
+when a phase-``p+1`` consumer runs block ``i`` the producer phase has
+already stored blocks ``0..i+1`` — block ``i+1`` lands EARLIER in the
+same wave (phases ascend within a wave).  The kernel banks on that: a
+ring read assembles producer blocks ``i-1 / i / i+1`` from a 3-slot
+VMEM ring (slot = block mod 3) and slices the halo-shifted row window
+out of them.  Nothing at runtime checks the bank holds — these checkers
+prove it statically from the offset table alone:
+
+  ``check_chained_schedule``  walks the table in execution order,
+      tracking which M-block each (slot, ring column) pair last
+      received; every ring read must find exactly the block the slice
+      touches (mid always; lo when the halo shifts backward; hi when it
+      shifts forward), every tap must satisfy ``delta == dh*W + dw``
+      and ``|delta| <= bm`` (rows the shift pushes past a resident
+      block are exactly the rows the border mask zeroes — the algebra
+      is in the function docstring), and every ring column index must
+      sit inside the declared ring.
+
+  ``check_concat_segments``  the write-write hazard check for fused
+      concat layouts: branch panel segments and passthrough
+      dynamic-update-slice column ranges must tile the join's [M, N]
+      output without overlap.
+
+Pure numpy — callable on a mutated table in fault-injection tests
+without touching a kernel.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.analysis.tables import (CH_DELTA, CH_DH, CH_DW, CH_I, CH_LAST,
+                                   CH_RC, CH_ROWS, CH_RWC, CH_SRC)
+
+
+def check_chained_schedule(tab, m_blocks, nph, *, h, w, bm, nring):
+    """Happens-before + geometry check on a chained offset table.
+
+    Ring-read soundness: a read of producer block ``b`` is safe when the
+    slot ``b % 3`` last received exactly block ``b`` at an earlier step.
+    The border mask covers the rest: a window row ``r`` (global output
+    row) reads producer row ``r + delta`` with ``delta = dh*W + dw``;
+    when the tap is unmasked (``0 <= r//W%H + dh < H`` and
+    ``0 <= r%W + dw < W``) then ``r + delta`` provably stays inside the
+    same image — ``rem = r % (H*W)`` satisfies ``rem + dh*W + dw in
+    [0, H*W)`` — so unmasked rows never cross into a block outside the
+    resident ``i-1..i+1`` window as long as ``|delta| <= bm``.
+
+    Findings are ``(kind, message)`` with kind ``"hazard"`` (order or
+    slot violations) or ``"bounds"`` (ring geometry).
+    """
+    out = []
+    fam = "chained-schedule"
+    tab = np.asarray(tab)
+    if tab.ndim != 2 or tab.shape[0] < CH_ROWS + 2 * nph:
+        out.append(("hazard", f"{fam}: table has {tab.shape[0] if tab.ndim == 2 else 0} "
+                              f"rows, want >= {CH_ROWS + 2 * nph}"))
+        return out
+    ring: dict[tuple[int, int], int] = {}   # (slot, ring col) -> block
+    for t in range(tab.shape[1]):
+        i = int(tab[CH_I, t])
+        if not 0 <= i < m_blocks:
+            out.append(("bounds", f"{fam}: step {t} runs M-block {i} "
+                                  f"outside [0, {m_blocks})"))
+            continue
+        src = int(tab[CH_SRC, t])
+        if src == 2:
+            rc = int(tab[CH_RC, t])
+            d = int(tab[CH_DELTA, t])
+            dh, dw = int(tab[CH_DH, t]), int(tab[CH_DW, t])
+            if not 0 <= rc < nring:
+                out.append(("bounds", f"{fam}: ring read at step {t} "
+                                      f"addresses column {rc} outside "
+                                      f"[0, {nring})"))
+                continue
+            if d != dh * w + dw:
+                out.append(("bounds", f"{fam}: tap at step {t} has "
+                                      f"delta {d} != dh*W+dw = "
+                                      f"{dh * w + dw} (W={w})"))
+            if abs(d) > bm:
+                out.append(("bounds", f"{fam}: halo {d} at step {t} "
+                                      f"exceeds bm={bm} — the shift "
+                                      "window cannot cover it"))
+                continue
+            # which of the three ring slots does the shifted slice touch?
+            needs = []
+            if d < 0:
+                needs.append(i - 1)        # lo slot
+            if -bm < d < bm:
+                needs.append(i)            # mid slot
+            if d > 0:
+                needs.append(i + 1)        # hi slot
+            for b in needs:
+                if not 0 <= b < m_blocks:
+                    continue               # border-masked edge rows
+                got = ring.get((b % 3, rc))
+                if got != b:
+                    out.append((
+                        "hazard",
+                        f"{fam}: step {t} (block {i}) reads producer "
+                        f"block {b} from ring column {rc}, but slot "
+                        f"{b % 3} holds "
+                        f"{'nothing' if got is None else f'block {got}'}"
+                        " — the wave schedule broke happens-before"))
+        if int(tab[CH_LAST, t]) == 1:
+            rwc = int(tab[CH_RWC, t])
+            if rwc >= 0:
+                if rwc >= nring:
+                    out.append(("bounds", f"{fam}: ring write at step "
+                                          f"{t} addresses column {rwc} "
+                                          f"outside [0, {nring})"))
+                else:
+                    ring[(i % 3, rwc)] = i
+    return out
+
+
+def check_concat_segments(segments, total):
+    """Write-write hazard check on a fused-concat column layout.
+
+    ``segments`` is a list of ``(offset, width, who)`` column ranges —
+    branch panel segments plus passthrough DUS ranges — and ``total``
+    the join's N.  Findings (kind ``"hazard"``) when any two ranges
+    overlap or a range escapes ``[0, total)``; a gap is reported as a
+    schema finding (a join column nobody writes would serve garbage).
+    """
+    out = []
+    fam = "concat-segments"
+    segs = sorted((int(o), int(n), str(who)) for o, n, who in segments)
+    covered = 0
+    prev = None
+    for o, n, who in segs:
+        if n <= 0 or o < 0 or o + n > total:
+            out.append(("hazard", f"{fam}: segment {who} [{o}, {o + n}) "
+                                  f"escapes the join's [0, {total})"))
+            continue
+        if prev is not None and o < prev[0] + prev[1]:
+            out.append(("hazard", f"{fam}: segments {prev[2]} "
+                                  f"[{prev[0]}, {prev[0] + prev[1]}) and "
+                                  f"{who} [{o}, {o + n}) overlap — "
+                                  "write-write hazard on the join"))
+        prev = (o, n, who)
+        covered += n
+    if not out and covered != total:
+        out.append(("schema", f"{fam}: segments cover {covered} of "
+                              f"{total} join columns"))
+    return out

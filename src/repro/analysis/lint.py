@@ -1,0 +1,106 @@
+"""planlint CLI — sweep an architecture's lowered plans and exit nonzero
+on any finding.
+
+    python -m repro.analysis.lint --arch googlenet
+    python -m repro.analysis.lint --arch googlenet --full --fallbacks
+
+Per variant (fused default / chained / unfused-concat / unfused-pool /
+serial-joins) the forward AND the mirrored backward plan are statically
+verified (``analysis.verify_plan`` — offset-table schemas, chained-wave
+happens-before, C2 budgets), plus the MoE layer plan's expert tables.
+``--fallbacks`` additionally traces each variant's plan executor
+(``jax.make_jaxpr`` — no kernel runs) and lints surviving fallback
+primitives against the named-scope provenance policy
+(``analysis.fallbacks``).  This is the ``scripts/ci.sh`` gate: a plan
+change that breaks a table invariant, the wave schedule, a budget or the
+zero-fallback contract fails CI with the op-attributed finding, not a
+bare count.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+
+
+def _report(label: str, findings) -> int:
+    if findings:
+        print(f"[planlint] {label}: {len(findings)} finding(s)")
+        for f in findings:
+            print(f"    {f}")
+    else:
+        print(f"[planlint] {label}: ok")
+    return len(findings)
+
+
+VARIANTS = (
+    ("fused", {}),
+    ("chained", {"chain_modules": True}),
+    ("unfused-concat", {"fuse_concat": False}),
+    ("unfused-pool", {"fuse_pool": False}),
+    ("serial-joins", {"fuse_concat": False, "fuse_pool": False}),
+)
+
+#: the MoE layer swept alongside the CNN variants (small enough to lint
+#: in seconds, big enough that every expert-table row family appears)
+MOE_DIMS = dict(b=2, s=64, d=256, f=512, e=4, top_k=2,
+                capacity_factor=1.25)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis.lint",
+        description="statically verify lowered plans (planlint)")
+    ap.add_argument("--arch", default="googlenet",
+                    help="architecture config name (default: googlenet)")
+    ap.add_argument("--batch", type=int, default=2,
+                    help="lowering batch size (default: 2)")
+    ap.add_argument("--full", action="store_true",
+                    help="full config instead of the reduced one")
+    ap.add_argument("--fallbacks", action="store_true",
+                    help="also trace each plan executor and lint fallback"
+                         " primitive provenance (tracing only)")
+    args = ap.parse_args(argv)
+
+    from repro import analysis
+    from repro.configs import get_config, get_reduced
+    from repro.core import plan as planlib
+    from repro.models import cnn, moe
+
+    cfg = get_config(args.arch) if args.full else get_reduced(args.arch)
+    total = 0
+    params = x = None
+    for name, kw in VARIANTS:
+        plan, _ = cnn.plan_cnn(cfg, args.batch, **kw)
+        total += _report(f"{args.arch}/{name} fwd",
+                         analysis.verify_plan(plan))
+        total += _report(f"{args.arch}/{name} bwd",
+                         analysis.verify_plan(plan.context["backward"]))
+        if args.fallbacks:
+            import jax
+            import jax.numpy as jnp
+            from repro.analysis.fallbacks import lint_fallbacks
+            from repro.core.plan import execute_plan
+            if params is None:
+                h, w, c = cfg.img
+                params = cnn.init_params(cfg, jax.random.PRNGKey(0))
+                x = jnp.zeros((args.batch, h, w, c), jnp.float32)
+            raw = lint_fallbacks(
+                lambda p, xx, plan=plan: execute_plan(p, xx, plan,
+                                                      interpret=True),
+                params, x)
+            total += _report(
+                f"{args.arch}/{name} fallbacks",
+                [analysis.Finding(kind, "fallback", name, msg)
+                 for kind, msg in raw])
+
+    g = moe.build_moe_graph(**MOE_DIMS)
+    mplan = planlib.lower_moe(g, **MOE_DIMS)
+    total += _report("moe/grouped_experts fwd+bwd tables",
+                     analysis.verify_plan(mplan))
+
+    print(f"[planlint] total findings: {total}")
+    return 1 if total else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -32,14 +32,24 @@ COUNTED = {
 }
 
 
-def _walk(jaxpr, counts: dict) -> None:
+def walk_eqns(jaxpr):
+    """Yield every equation of ``jaxpr`` and, recursively, of every
+    sub-jaxpr reachable through its params (pjit's ``jaxpr``, custom-vjp
+    call_jaxpr, scan/cond/checkpoint bodies, ...) — the traversal both
+    this counter and the planlint fallback lint
+    (``analysis/fallbacks.py``) are built on."""
     for eqn in jaxpr.eqns:
+        yield eqn
+        for v in eqn.params.values():
+            for sub in _subjaxprs(v):
+                yield from walk_eqns(sub)
+
+
+def _walk(jaxpr, counts: dict) -> None:
+    for eqn in walk_eqns(jaxpr):
         key = COUNTED.get(eqn.primitive.name)
         if key is not None:
             counts[key] = counts.get(key, 0) + 1
-        for v in eqn.params.values():
-            for sub in _subjaxprs(v):
-                _walk(sub, counts)
 
 
 def _subjaxprs(v):

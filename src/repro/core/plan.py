@@ -84,6 +84,7 @@ from typing import Any, Callable
 import jax
 import jax.numpy as jnp
 
+from repro.analysis import budgets as _budgets
 from repro.core import cost_model as cm
 from repro.core.graph import OpGraph
 from repro.core.scheduler import Schedule
@@ -279,7 +280,6 @@ def _absorb_pools(graph: OpGraph, groups: list[ExecGroup], *,
     workspace; past the limit the taps fold at pack time and add
     nothing), and the pooled-lhs scratch claims VMEM — a pool whose
     absorption would bust a consuming group's budget stays standalone."""
-    from repro.kernels.grouped_matmul import POOL_TAP_LIMIT
     out: list[ExecGroup | None] = list(groups)
     for idx, pg in enumerate(out):
         if pg is None or len(pg.ops) != 1:
@@ -316,38 +316,20 @@ def _absorb_pools(graph: OpGraph, groups: list[ExecGroup], *,
         # dropping the pool group saves its makespan exactly ONCE, so the
         # SUM of repriced-group increases (stacked consumers moving onto
         # the grouped kernel) must stay below it
-        def _tap_count(pool_op):
-            t = 1
-            for win, _s in pool_op.p["chain"]:
-                t *= win * win
-            return t if t <= POOL_TAP_LIMIT else 1   # past limit: pack fold
-
         repriced: dict[int, ExecGroup] = {}
         delta = 0.0
         for j, branches in targets.items():
             gg = out[j]
-            # C2 re-check on the WHOLE pooled launch: (taps-1) extra lhs
-            # tiles per pooled branch in the packed X stack (pools already
-            # absorbed into this group included) plus the pooled-lhs VMEM
-            # scratch (default 128^2 blocks); the workspace base takes the
-            # GEMM lowering's im2col patch buffers into account, matching
-            # the gate ``lower`` applied to the unpooled group
-            gops = [graph.ops[n] for n in gg.ops]
-            extra_ws, extra_vmem = 0.0, 0.0
-            for b, pn in list(gg.pools) + [(b, pname) for b in branches]:
-                s = _gemm_shape(graph.ops[b])
-                extra_ws += (_tap_count(graph.ops[pn]) - 1) \
-                    * s[0] * s[1] * graph.ops[b].dtype_bytes
-                extra_vmem = max(extra_vmem,
-                                 -(-s[1] // 128) * 128 * 128 * 4)
-            base = [cm.profile(graph.ops[n], gg.algorithms[n])
-                    for n in gg.ops]
-            ws_base = max(sum(p.workspace_bytes for p in base),
-                          sum(p.workspace_bytes
-                              for p in cm.gemm_profiles(gops)))
-            if (ws_base + extra_ws > hbm_budget
-                    or sum(p.vmem_bytes for p in base) + extra_vmem
-                    > vmem_budget):
+            # C2 re-check on the WHOLE pooled launch (pools already
+            # absorbed into this group included); ``include_gemm_ws``
+            # prices the grouped kernel's im2col patch buffers even when
+            # a join op rides in the group, matching the gate ``lower``
+            # applied to the unpooled group
+            fp = _budgets.group_footprint(
+                graph, gg.ops, gg.algorithms, include_gemm_ws=True,
+                pools=tuple(gg.pools) + tuple((b, pname)
+                                              for b in branches))
+            if not fp.fits(hbm_budget, vmem_budget):
                 ok = False
                 break
             mode, t, reason = gg.mode, gg.modeled_time, gg.reason
@@ -422,21 +404,11 @@ def _chain_budgets_ok(graph: OpGraph, phases: list[list[str]], ring, *,
     chained-priced GEMM lowering (ring consumers drop their patch buffer —
     their lhs never exists outside VMEM) plus the launch's ring scratch
     against the VMEM budget: 3 wave slots per ring column, the (3*bm, blk)
-    shift window and the f32 accumulator."""
-    ops = [graph.ops[n] for ph in phases for n in ph]
-    profs = cm.chained_profiles(ops, ring)
-    if sum(p.workspace_bytes for p in profs) > hbm_budget:
-        return False
-    allnames = {m for ph in phases for m in ph}
-    consumed: set[str] = set()
-    for ph in phases:
-        for n in ph:
-            if n in ring:
-                consumed |= graph.pred[n] & allnames
-    nring = sum(-(-graph.ops[n].p["k"] // block) for n in consumed)
-    eb = max(op.dtype_bytes for op in ops)
-    ring_vmem = (3 * nring + 3) * block * block * eb + block * block * 4
-    return sum(p.vmem_bytes for p in profs) + ring_vmem <= vmem_budget
+    shift window and the f32 accumulator.  The footprint itself comes
+    from ``analysis.budgets.chained_footprint``."""
+    return _budgets.chained_footprint(graph, phases, ring,
+                                      block=block).fits(hbm_budget,
+                                                        vmem_budget)
 
 
 def _chain_modules(graph: OpGraph, groups: list[ExecGroup], *,
@@ -571,11 +543,35 @@ def _chain_modules(graph: OpGraph, groups: list[ExecGroup], *,
     return [g for i, g in enumerate(out) if g is not None and i not in dead]
 
 
+def _verify_requested(verify) -> bool:
+    """planlint default: explicit flag wins; otherwise on under pytest or
+    ``REPRO_PLANLINT=1`` (CI), off in production lowering paths."""
+    if verify is not None:
+        return bool(verify)
+    import os
+    return (os.environ.get("REPRO_PLANLINT") == "1"
+            or "PYTEST_CURRENT_TEST" in os.environ)
+
+
+def _maybe_verify(plan: Plan, graph: OpGraph | None, verify) -> Plan:
+    """Run ``analysis.verify_plan`` on a freshly lowered plan when
+    requested; raise ``PlanVerificationError`` on findings, stamp
+    ``context["verified"]`` on success (what ``plan_cache`` records)."""
+    if not _verify_requested(verify):
+        return plan
+    from repro import analysis
+    findings = analysis.verify_plan(plan, graph)
+    if findings:
+        raise analysis.PlanVerificationError(findings)
+    plan.context["verified"] = True
+    return plan
+
+
 def lower(graph: OpGraph, schedule: Schedule, *, mesh=None,
           hbm_budget: float = cm.HBM_BYTES * 0.25,
           vmem_budget: float = cm.VMEM_BYTES, train: bool = False,
           fuse_concat: bool = True, fuse_pool: bool = True,
-          chain_modules: bool = False) -> Plan:
+          chain_modules: bool = False, verify: bool | None = None) -> Plan:
     """Lower a Schedule to an executable Plan.
 
     Mode choice per CoGroup: budget-infeasible or singleton -> serial;
@@ -612,24 +608,18 @@ def lower(graph: OpGraph, schedule: Schedule, *, mesh=None,
     for cg in schedule.groups:
         ops = [graph.ops[n] for n in cg.ops]
         profs = [cm.profile(op, cg.algorithms[op.name]) for op in ops]
-        feasible = (sum(p.workspace_bytes for p in profs) <= hbm_budget
-                    and sum(p.vmem_bytes for p in profs) <= vmem_budget)
-        if feasible and len(ops) > 1 \
-                and all(_gemm_shape(op) is not None for op in ops):
-            # a grouped/stacked-family group executes the GEMM lowering,
-            # whose im2col patch buffers are the workspace the C2 gate
-            # must see (the chosen-algorithm profiles above price the
-            # SERIAL fallback's footprint — e.g. direct conv, ws=0)
-            feasible = sum(p.workspace_bytes
-                           for p in cm.gemm_profiles(ops)) <= hbm_budget
+        # the footprint computation lives in ``analysis.budgets`` — it
+        # prices the serial fallback AND (for a multi-op all-GEMM group)
+        # the GEMM lowering's im2col patch buffers, whichever is larger
+        feasible = _budgets.group_footprint(
+            graph, cg.ops, cg.algorithms).fits(hbm_budget, vmem_budget)
         if train and feasible:
             # forward and backward are separate sequential launches whose
             # footprints never co-reside: each direction must fit the
             # budgets on its own (not their sum)
-            bprofs = [p for op in ops
-                      for p in cm.backward_profiles(op, cg.algorithms[op.name])]
-            feasible = (sum(p.workspace_bytes for p in bprofs) <= hbm_budget
-                        and sum(p.vmem_bytes for p in bprofs) <= vmem_budget)
+            feasible = _budgets.group_footprint(
+                graph, cg.ops, cg.algorithms,
+                direction="bwd").fits(hbm_budget, vmem_budget)
         if len(ops) == 1:
             mode, t, reason = "serial", cm.serial_time(profs), "singleton"
         elif cg.serialized or not feasible:
@@ -656,7 +646,10 @@ def lower(graph: OpGraph, schedule: Schedule, *, mesh=None,
         # grouped_chained groups (see ``_chain_modules``)
         groups = _chain_modules(graph, groups, hbm_budget=hbm_budget,
                                 vmem_budget=vmem_budget)
-    return Plan(groups, context={"mesh": mesh})
+    plan = Plan(groups, context={"mesh": mesh, "graph": graph,
+                                 "budgets": {"hbm": hbm_budget,
+                                             "vmem": vmem_budget}})
+    return _maybe_verify(plan, graph, verify)
 
 
 # ---------------------------------------------------------------------------
@@ -665,7 +658,8 @@ def lower(graph: OpGraph, schedule: Schedule, *, mesh=None,
 
 def backward_plan(graph: OpGraph, plan: Plan, *,
                   hbm_budget: float = cm.HBM_BYTES * 0.25,
-                  vmem_budget: float = cm.VMEM_BYTES) -> Plan:
+                  vmem_budget: float = cm.VMEM_BYTES,
+                  verify: bool | None = None) -> Plan:
     """Derive the mirrored backward Plan from a lowered forward plan.
 
     The backward graph of a fork/join network is the forward graph
@@ -728,8 +722,11 @@ def backward_plan(graph: OpGraph, plan: Plan, *,
                   for p in cm.backward_profiles(
                       op, g.algorithms.get(op.name)
                       or cm.best_algorithm(op)[0])]
-        feasible = (sum(p.workspace_bytes for p in bprofs) <= hbm_budget
-                    and sum(p.vmem_bytes for p in bprofs) <= vmem_budget)
+        # same accounting as ``lower(train=True)``'s gate — the shared
+        # ``analysis.budgets`` computation keeps the mirror faithful
+        feasible = _budgets.group_footprint(
+            graph, g.ops, g.algorithms,
+            direction="bwd").fits(hbm_budget, vmem_budget)
         if g.mode == "grouped_concat" and feasible:
             branch_ops = [op for op in ops if op.name != g.join]
             mode, t = cm.group_execution_time_bwd(
@@ -766,7 +763,10 @@ def backward_plan(graph: OpGraph, plan: Plan, *,
             pools=tuple((f"grad:{b}", f"grad:{p}") for b, p in g.pools),
             chain=tuple(tuple(f"grad:{n}" for n in ph)
                         for ph in reversed(g.chain)) if g.chain else ()))
-    return Plan(groups, context={"forward": plan})
+    bwd = Plan(groups, context={"forward": plan, "graph": graph,
+                                "budgets": {"hbm": hbm_budget,
+                                            "vmem": vmem_budget}})
+    return _maybe_verify(bwd, graph, verify)
 
 
 # ---------------------------------------------------------------------------
@@ -1399,6 +1399,18 @@ def _run_spatial_group(group: ExecGroup, impls: dict[str, OpImpl], env: dict,
         env[name] = ys[i]
 
 
+def _scope(group: ExecGroup, executed: str | None = None, *, op=None):
+    """Provenance scope for everything a group (or one serial/degraded
+    op) emits: ``analysis/fallbacks.py`` attributes surviving fallback
+    primitives in a traced plan to these ``jax.named_scope`` tags, so a
+    zero-fallback gate reports WHICH op regressed instead of a bare
+    count.  ``/`` nests scopes in a jaxpr name stack, so op names
+    sanitize to ``.``."""
+    mode = executed or group.mode
+    tag = (op if op is not None else group.ops[0]).replace("/", ".")
+    return jax.named_scope(f"plan[{mode}:{tag}]")
+
+
 def run_plan(impls: dict[str, OpImpl], env: dict, plan: Plan, *,
              mesh=None, interpret=None, timings: dict | None = None,
              valid_images=None) -> dict:
@@ -1444,24 +1456,30 @@ def run_plan(impls: dict[str, OpImpl], env: dict, plan: Plan, *,
         if group.mode in ("grouped", "grouped_pooled") \
                 and _grouped_runnable(group, impls, pending) \
                 and _pools_runnable(group, impls, env):
-            _run_grouped(group, impls, env, interpret,
-                         valid_images=valid_images, batch=batch)
+            with _scope(group):
+                _run_grouped(group, impls, env, interpret,
+                             valid_images=valid_images, batch=batch)
         elif group.mode == "grouped_concat" and _grouped_concat_runnable(
                 group, impls, env, pending) \
                 and _pools_runnable(group, impls, env):
-            _run_grouped_concat(group, impls, env, interpret,
-                                valid_images=valid_images, batch=batch)
+            with _scope(group):
+                _run_grouped_concat(group, impls, env, interpret,
+                                    valid_images=valid_images, batch=batch)
         elif group.mode == "grouped_chained" and _chained_runnable(
                 group, impls, env, pending):
-            _run_grouped_chained(group, impls, env, interpret)
+            with _scope(group):
+                _run_grouped_chained(group, impls, env, interpret)
         elif group.mode == "stacked" and _stacked_runnable(group, impls,
                                                            pending):
-            _run_stacked(group, impls, env, interpret)
+            with _scope(group):
+                _run_stacked(group, impls, env, interpret)
         elif group.mode == "fused" and _fused_runnable(group, impls,
                                                        pending):
-            _run_fused(group, impls, env, interpret)
+            with _scope(group):
+                _run_fused(group, impls, env, interpret)
         elif group.mode == "spatial" and len(pending) == len(group.ops):
-            _run_spatial_group(group, impls, env, mesh)
+            with _scope(group):
+                _run_spatial_group(group, impls, env, mesh)
         else:
             # serial: scheduler-chosen per-op algorithm kernels.
             # xla: native ops emitted together; XLA interleaves.  Also the
@@ -1482,12 +1500,15 @@ def run_plan(impls: dict[str, OpImpl], env: dict, plan: Plan, *,
                         f"pooled group runs the pool's fn to materialize "
                         f"its branches' input — pool ops ride group.pools "
                         f"(not group.ops), so bind an impl for {p!r} too")
-                env[p] = pimpl.fn(*_dep_args(pimpl, env))
+                with _scope(group, executed, op=p):
+                    env[p] = pimpl.fn(*_dep_args(pimpl, env))
             for name in pending:
                 impl = impls[name]
                 alg = group.algorithms.get(name) if group.mode == "serial" \
                     else "xla"
-                env[name] = impl.fn(*_dep_args(impl, env), algorithm=alg)
+                with _scope(group, executed, op=name):
+                    env[name] = impl.fn(*_dep_args(impl, env),
+                                        algorithm=alg)
         if timings is not None:
             vals = []
             for n in group.ops:
@@ -1528,7 +1549,7 @@ def execute_plan(params, x, plan: Plan, *, mesh=None, interpret=None,
 def lower_moe(graph: OpGraph, *, b: int, s: int, d: int, f: int, e: int,
               top_k: int, capacity_factor: float, gated: bool = True,
               shared_f: int = 0, bm: int | None = None,
-              dtype_bytes: int = 4) -> Plan:
+              dtype_bytes: int = 4, verify: bool | None = None) -> Plan:
     """Lower one MoE layer's op graph (``models.moe.build_moe_graph``) to
     a Plan whose expert fork is a single ``grouped_experts`` ExecGroup.
 
@@ -1575,4 +1596,5 @@ def lower_moe(graph: OpGraph, *, b: int, s: int, d: int, f: int, e: int,
                    "capacity_factor": capacity_factor, "gated": gated,
                    "shared_f": shared_f, "bm": bm, "cap": cap,
                    "n_slots": n_slots, "times": times}}
-    return Plan(groups, ctx)
+    ctx["graph"] = graph
+    return _maybe_verify(Plan(groups, ctx), graph, verify)

@@ -88,6 +88,11 @@ class PlanCacheEntry:
     bucket: int
     executable: Any = None         # jitted serve step, set by the driver
     table_keys: tuple = ()         # pinned _device_table keys (attach_tables)
+    # True when planlint (``analysis.verify_plan``) ran on the lowering
+    # with zero findings — lower() stamps context["verified"] under
+    # pytest / REPRO_PLANLINT=1, so serving can report which cached
+    # plans were statically verified before their first launch
+    verified: bool = False
 
 
 _CACHE: "OrderedDict[tuple, PlanCacheEntry]" = OrderedDict()
@@ -192,7 +197,8 @@ def cached_cnn_plan(cfg, bucket: int, *, dtype="float32", backend=None,
                              fuse_concat=fuse_concat, fuse_pool=fuse_pool,
                              chain_modules=chain_modules)
     entry = PlanCacheEntry(plan=plan, schedule=sch, fingerprint=fp,
-                           bucket=int(bucket))
+                           bucket=int(bucket),
+                           verified=bool(plan.context.get("verified")))
     _insert(key, entry)
     return entry
 
@@ -225,6 +231,7 @@ def cached_moe_plan(*, b: int, s: int, d: int, f: int, e: int, top_k: int,
                              capacity_factor=capacity_factor, gated=gated,
                              shared_f=shared_f)
     entry = PlanCacheEntry(plan=plan, schedule=None, fingerprint=fp,
-                           bucket=int(b))
+                           bucket=int(b),
+                           verified=bool(plan.context.get("verified")))
     _insert(key, entry)
     return entry

@@ -98,6 +98,20 @@ import numpy as np
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.analysis.tables import (
+    GM_XT, GM_WT, GM_BJ, GM_FIRST, GM_LAST, GM_OT, GM_MI,
+    GP_XT, GP_WT, GP_FIRST, GP_LAST, GP_OT,
+    GP_POOL, GP_PFIRST, GP_PS, GP_UPOOL, GP_MI,
+    DW_XT, DW_DYT, DW_FIRST, DW_LAST, DW_OT, DW_BJ, DW_DODB,
+    BW_DYT, BW_ABT, BW_FIRST, BW_LAST, BW_OT, BW_DODB, BW_DW, BW_BJ,
+    CH_I, CH_XT, CH_WT, CH_BJ, CH_FIRST, CH_LAST, CH_PH, CH_SRC,
+    CH_PCA, CH_PCB, CH_RC, CH_DELTA, CH_DH, CH_DW, CH_RWC, CH_ROWS,
+    EX_BI, EX_XT, EX_WH, EX_WO, EX_PH, EX_FIRST, EX_LAST,
+    EX_HJ, EX_OT, EX_RES,
+    EB_BI, EB_DYT, EB_XT, EB_WHT, EB_WOT, EB_RES, EB_PH, EB_FIRST,
+    EB_LAST, EB_PJ, EB_DXOT, EB_DWH, EB_DWO,
+    ch_out_i_row, ch_out_j_row)
+
 
 # Eager kernel launches by wrapper name — the benchmark's
 # launches-per-grad-CoGroup instrument (under jit the wrapper runs once
@@ -204,7 +218,7 @@ def _gmm_kernel(tab_ref, *refs, relu: bool, masked: bool,
         x_ref, w_ref, b_ref, o_ref, acc_ref = refs
     t = pl.program_id(0)
 
-    @pl.when(tab_ref[3, t] == 1)
+    @pl.when(tab_ref[GM_FIRST, t] == 1)
     def _init():
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
@@ -214,7 +228,7 @@ def _gmm_kernel(tab_ref, *refs, relu: bool, masked: bool,
     acc_ref[...] += jnp.dot(x, w_ref[...],
                             preferred_element_type=jnp.float32)
 
-    @pl.when(tab_ref[4, t] == 1)
+    @pl.when(tab_ref[GM_LAST, t] == 1)
     def _store():
         y = acc_ref[...] + b_ref[...].astype(jnp.float32)
         if relu:
@@ -225,7 +239,7 @@ def _gmm_kernel(tab_ref, *refs, relu: bool, masked: bool,
             # prefetched scalar vector; rows at/past it store zeros (the
             # deterministic padded-M tail — same first-class in-kernel
             # masking as the ReLU cotangent's dY fold)
-            valid = mrow_ref[tab_ref[6, t]]
+            valid = mrow_ref[tab_ref[GM_MI, t]]
             ri = jax.lax.broadcasted_iota(jnp.int32, y.shape, 0)
             y = jnp.where(ri < valid, y, 0.0)
         o_ref[...] = y.astype(o_ref.dtype)
@@ -363,9 +377,9 @@ def _ragged_index_maps(ragged: bool):
     if ragged:
         return (lambda row: (lambda t, tab, mrow, row=row:
                              (tab[row, t], 0, 0)),
-                lambda t, tab, mrow: (0, tab[2, t]))
+                lambda t, tab, mrow: (0, tab[GM_BJ, t]))
     return (lambda row: (lambda t, tab, row=row: (tab[row, t], 0, 0)),
-            lambda t, tab: (0, tab[2, t]))
+            lambda t, tab: (0, tab[GM_BJ, t]))
 
 
 def grouped_matmul(xs, ws, bs=None, *, relu: bool = False, mask=None,
@@ -426,15 +440,15 @@ def grouped_matmul(xs, ws, bs=None, *, relu: bool = False, mask=None,
 
     ragged = m_valid is not None
     ix, ixb = _ragged_index_maps(ragged)
-    in_specs = [pl.BlockSpec((None, bm, bk), ix(0))]
+    in_specs = [pl.BlockSpec((None, bm, bk), ix(GM_XT))]
     ins = [xpk]
     if mask is not None:
         assert all(mk.shape == x.shape for mk, x in zip(mask, xs)), \
             [(mk.shape, x.shape) for mk, x in zip(mask, xs)]
-        in_specs.append(pl.BlockSpec((None, bm, bk), ix(0)))
+        in_specs.append(pl.BlockSpec((None, bm, bk), ix(GM_XT)))
         ins.append(pack_x(mask))
     in_specs += [
-        pl.BlockSpec((None, bk, bn), ix(1)),
+        pl.BlockSpec((None, bk, bn), ix(GM_WT)),
         pl.BlockSpec((1, bn), ixb),
     ]
     ins += [wpk, bpk]
@@ -443,7 +457,7 @@ def grouped_matmul(xs, ws, bs=None, *, relu: bool = False, mask=None,
         num_scalar_prefetch=2 if ragged else 1,
         grid=(tab.shape[1],),
         in_specs=in_specs,
-        out_specs=pl.BlockSpec((None, bm, bn), ix(5)),
+        out_specs=pl.BlockSpec((None, bm, bn), ix(GM_OT)),
         scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
     )
     scalars = (tab, _ragged_mrows(m_valid, mb, bm)) if ragged else (tab,)
@@ -619,11 +633,11 @@ def grouped_matmul_concat(xs, ws, bs=None, *, offsets, total: int,
         num_scalar_prefetch=2 if ragged else 1,
         grid=(tab.shape[1],),
         in_specs=[
-            pl.BlockSpec((None, bm, bk), ix(0)),
-            pl.BlockSpec((None, bk, bn), ix(1)),
+            pl.BlockSpec((None, bm, bk), ix(GM_XT)),
+            pl.BlockSpec((None, bk, bn), ix(GM_WT)),
             pl.BlockSpec((1, bn), ixb),
         ],
-        out_specs=pl.BlockSpec((None, bm, bn), ix(5)),
+        out_specs=pl.BlockSpec((None, bm, bn), ix(GM_OT)),
         scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
     )
     scalars = (tab, _ragged_mrows(m_valid, mb, bm)) if ragged else (tab,)
@@ -744,18 +758,18 @@ def _gmm_pooled_kernel(tab_ref, *refs, relu: bool, ragged: bool = False):
         mrow_ref, *refs = refs
     x_ref, w_ref, b_ref, o_ref, acc_ref, pool_ref = refs
     t = pl.program_id(0)
-    is_pool = tab_ref[6, t] == 1
-    ps = tab_ref[8, t]
+    is_pool = tab_ref[GP_POOL, t] == 1
+    ps = tab_ref[GP_PS, t]
 
     @pl.when(is_pool)
     def _pool():
         tile = x_ref[...].astype(jnp.float32)
 
-        @pl.when(tab_ref[7, t] == 1)
+        @pl.when(tab_ref[GP_PFIRST, t] == 1)
         def _seed():
             pool_ref[ps] = tile
 
-        @pl.when(tab_ref[7, t] == 0)
+        @pl.when(tab_ref[GP_PFIRST, t] == 0)
         def _max():
             # same NaN-propagating select as pool_from_taps (lax.max may
             # drop a NaN acc against a later finite tap on some backends)
@@ -765,23 +779,23 @@ def _gmm_pooled_kernel(tab_ref, *refs, relu: bool, ragged: bool = False):
 
     @pl.when(~is_pool)
     def _gemm():
-        @pl.when(tab_ref[3, t] == 1)
+        @pl.when(tab_ref[GP_FIRST, t] == 1)
         def _init():
             acc_ref[...] = jnp.zeros_like(acc_ref)
 
         x = x_ref[...]
-        x = jnp.where(tab_ref[9, t] == 1,
+        x = jnp.where(tab_ref[GP_UPOOL, t] == 1,
                       pool_ref[ps].astype(x.dtype), x)
         acc_ref[...] += jnp.dot(x, w_ref[...],
                                 preferred_element_type=jnp.float32)
 
-        @pl.when(tab_ref[4, t] == 1)
+        @pl.when(tab_ref[GP_LAST, t] == 1)
         def _store():
             y = acc_ref[...] + b_ref[...].astype(jnp.float32)
             if relu:
                 y = jnp.maximum(y, 0.0)
             if ragged:
-                valid = mrow_ref[tab_ref[10, t]]
+                valid = mrow_ref[tab_ref[GP_MI, t]]
                 ri = jax.lax.broadcasted_iota(jnp.int32, y.shape, 0)
                 y = jnp.where(ri < valid, y, 0.0)
             o_ref[...] = y.astype(o_ref.dtype)
@@ -986,11 +1000,11 @@ def _pooled_launch(xs, ws, bs, *, relu, concat, offsets=None, total=None,
         num_scalar_prefetch=2 if ragged else 1,
         grid=(tab.shape[1],),
         in_specs=[
-            pl.BlockSpec((None, bm, bk), ix(0)),
-            pl.BlockSpec((None, bk, bn), ix(1)),
+            pl.BlockSpec((None, bm, bk), ix(GP_XT)),
+            pl.BlockSpec((None, bk, bn), ix(GP_WT)),
             pl.BlockSpec((1, bn), ixb),
         ],
-        out_specs=pl.BlockSpec((None, bm, bn), ix(5)),
+        out_specs=pl.BlockSpec((None, bm, bn), ix(GP_OT)),
         scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32),
                         pltpu.VMEM((nkb_pool, bm, bk), jnp.float32)],
     )
@@ -1108,11 +1122,11 @@ def _gmm_dw_kernel(tab_ref, *refs, masked: bool):
     if masked:
         dy = jnp.where(y_ref[...] > 0, dy, jnp.zeros_like(dy))
 
-    @pl.when(tab_ref[2, t] == 1)
+    @pl.when(tab_ref[DW_FIRST, t] == 1)
     def _init():
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
-    @pl.when((tab_ref[2, t] == 1) & (tab_ref[6, t] == 1))
+    @pl.when((tab_ref[DW_FIRST, t] == 1) & (tab_ref[DW_DODB, t] == 1))
     def _init_db():
         db_acc_ref[...] = jnp.zeros_like(db_acc_ref)
 
@@ -1121,12 +1135,12 @@ def _gmm_dw_kernel(tab_ref, *refs, masked: bool):
         x_ref[...], dy, dimension_numbers=(((0,), (0,)), ((), ())),
         preferred_element_type=jnp.float32)
 
-    @pl.when(tab_ref[6, t] == 1)
+    @pl.when(tab_ref[DW_DODB, t] == 1)
     def _acc_db():
         # db rides the first k-row, whose dy blocks are streamed in anyway
         db_acc_ref[...] += dy.astype(jnp.float32).sum(0, keepdims=True)
 
-    @pl.when(tab_ref[3, t] == 1)
+    @pl.when(tab_ref[DW_LAST, t] == 1)
     def _store():
         dw_ref[...] = acc_ref[...].astype(dw_ref.dtype)
         db_ref[...] = db_acc_ref[...]
@@ -1212,15 +1226,15 @@ def grouped_matmul_dw(xs, dys, mask=None, *, bm: int | None = None,
 
     ins = [xpk, pack_dy(dys).astype(xpk.dtype)]
     in_specs = [
-        pl.BlockSpec((None, bm, bk), lambda t, tab: (tab[0, t], 0, 0)),
-        pl.BlockSpec((None, bm, bn), lambda t, tab: (tab[1, t], 0, 0)),
+        pl.BlockSpec((None, bm, bk), lambda t, tab: (tab[DW_XT, t], 0, 0)),
+        pl.BlockSpec((None, bm, bn), lambda t, tab: (tab[DW_DYT, t], 0, 0)),
     ]
     if mask is not None:
         assert all(mk.shape == dy.shape for mk, dy in zip(mask, dys)), \
             [(mk.shape, dy.shape) for mk, dy in zip(mask, dys)]
         ins.append(pack_dy(mask))
         in_specs.append(
-            pl.BlockSpec((None, bm, bn), lambda t, tab: (tab[1, t], 0, 0)))
+            pl.BlockSpec((None, bm, bn), lambda t, tab: (tab[DW_DYT, t], 0, 0)))
 
     _count_launch("grouped_matmul_dw")
     tab = _device_table(
@@ -1233,8 +1247,8 @@ def grouped_matmul_dw(xs, dys, mask=None, *, bm: int | None = None,
         grid=(tab.shape[1],),
         in_specs=in_specs,
         out_specs=[
-            pl.BlockSpec((None, bk, bn), lambda t, tab: (tab[4, t], 0, 0)),
-            pl.BlockSpec((1, bn), lambda t, tab: (0, tab[5, t])),
+            pl.BlockSpec((None, bk, bn), lambda t, tab: (tab[DW_OT, t], 0, 0)),
+            pl.BlockSpec((1, bn), lambda t, tab: (0, tab[DW_BJ, t])),
         ],
         scratch_shapes=[pltpu.VMEM((bk, bn), jnp.float32),
                         pltpu.VMEM((1, bn), jnp.float32)],
@@ -1278,10 +1292,10 @@ def grouped_matmul_dw_ref(xs, dys, mask=None):
 def _gmm_bwd_kernel(tab_ref, dy_ref, ab_ref, o_ref, db_ref,
                     acc_ref, accb_ref):
     t = pl.program_id(0)
-    is_dw = tab_ref[6, t] == 1
-    first = tab_ref[2, t] == 1
-    last = tab_ref[3, t] == 1
-    dodb = tab_ref[5, t] == 1
+    is_dw = tab_ref[BW_DW, t] == 1
+    first = tab_ref[BW_FIRST, t] == 1
+    last = tab_ref[BW_LAST, t] == 1
+    dodb = tab_ref[BW_DODB, t] == 1
     dy = dy_ref[...]          # pre-masked at pack time (ReLU cotangent)
 
     @pl.when(first)
@@ -1453,12 +1467,12 @@ def grouped_matmul_bwd(xs, ws, dys, mask=None, *, block: int | None = None,
         num_scalar_prefetch=1,
         grid=(tab.shape[1],),
         in_specs=[
-            pl.BlockSpec((None, b, b), lambda t, tab: (tab[0, t], 0, 0)),
-            pl.BlockSpec((None, b, b), lambda t, tab: (tab[1, t], 0, 0)),
+            pl.BlockSpec((None, b, b), lambda t, tab: (tab[BW_DYT, t], 0, 0)),
+            pl.BlockSpec((None, b, b), lambda t, tab: (tab[BW_ABT, t], 0, 0)),
         ],
         out_specs=[
-            pl.BlockSpec((None, b, b), lambda t, tab: (tab[4, t], 0, 0)),
-            pl.BlockSpec((1, b), lambda t, tab: (0, tab[7, t])),
+            pl.BlockSpec((None, b, b), lambda t, tab: (tab[BW_OT, t], 0, 0)),
+            pl.BlockSpec((1, b), lambda t, tab: (0, tab[BW_BJ, t])),
         ],
         scratch_shapes=[pltpu.VMEM((b, b), jnp.float32),
                         pltpu.VMEM((1, b), jnp.float32)],
@@ -1544,11 +1558,9 @@ def grouped_matmul_flops(shapes, bm: int = 128, bn: int = 128,
 # slabs — the layout the NEXT launch's panel descriptors address.
 # The bias+ReLU epilogue is fused (chained branches must be relu convs).
 
-# table rows (plus 2 per phase: output row-block / col-block, kept on the
-# "slot of the next write at step >= t" stability rule)
-(_CH_I, _CH_XT, _CH_WT, _CH_BJ, _CH_FIRST, _CH_LAST, _CH_PH, _CH_SRC,
- _CH_PCA, _CH_PCB, _CH_RC, _CH_DELTA, _CH_DH, _CH_DW, _CH_RWC) = range(15)
-_CH_ROWS = 15
+# table rows are the CH_* constants in ``analysis.tables`` (plus 2 per
+# phase via ch_out_i_row/ch_out_j_row: output row-block / col-block, kept
+# on the "slot of the next write at step >= t" stability rule)
 
 
 def _chain_ksteps(tag, src):
@@ -1569,7 +1581,7 @@ def _plan_tiles_chained(m_blocks: int, phases):
     cols), taps = ((delta, dh, dw), ...)); nbb = output n-blocks; rwcs =
     per-n-block ring write col (or ()).  Pure shape bookkeeping, cached."""
     nph = len(phases)
-    nrows = _CH_ROWS + 2 * nph
+    nrows = CH_ROWS + 2 * nph
     info = []
     xbase = wbase = bbase = 0
     for phase in phases:
@@ -1596,42 +1608,42 @@ def _plan_tiles_chained(m_blocks: int, phases):
                 for j in range(nbb):
                     for s, (kt, kd) in enumerate(ksteps):
                         c = [0] * nrows
-                        c[_CH_I] = i
-                        c[_CH_WT] = wb + s * nbb + j
-                        c[_CH_BJ] = bb + j
-                        c[_CH_FIRST] = 1 if s == 0 else 0
-                        c[_CH_LAST] = 1 if s == ns - 1 else 0
-                        c[_CH_PH] = p
-                        c[_CH_RWC] = -1
+                        c[CH_I] = i
+                        c[CH_WT] = wb + s * nbb + j
+                        c[CH_BJ] = bb + j
+                        c[CH_FIRST] = 1 if s == 0 else 0
+                        c[CH_LAST] = 1 if s == ns - 1 else 0
+                        c[CH_PH] = p
+                        c[CH_RWC] = -1
                         if kt == "x":
-                            c[_CH_SRC] = 0
-                            c[_CH_XT] = xb + i * src + kd
+                            c[CH_SRC] = 0
+                            c[CH_XT] = xb + i * src + kd
                         elif kt == "panel":
                             pidx, cb = kd
-                            c[_CH_SRC] = 3 + pidx
-                            c[_CH_PCA if pidx == 0 else _CH_PCB] = cb
+                            c[CH_SRC] = 3 + pidx
+                            c[CH_PCA if pidx == 0 else CH_PCB] = cb
                         else:
                             d, dh, dw, rc = kd
-                            c[_CH_SRC] = 2
-                            c[_CH_RC] = rc
-                            c[_CH_DELTA] = d
-                            c[_CH_DH] = dh
-                            c[_CH_DW] = dw
-                        if c[_CH_LAST]:
-                            c[_CH_ROWS + 2 * p] = i
-                            c[_CH_ROWS + 2 * p + 1] = ob + j
+                            c[CH_SRC] = 2
+                            c[CH_RC] = rc
+                            c[CH_DELTA] = d
+                            c[CH_DH] = dh
+                            c[CH_DW] = dw
+                        if c[CH_LAST]:
+                            c[ch_out_i_row(p)] = i
+                            c[ch_out_j_row(p)] = ob + j
                             if rwcs:
-                                c[_CH_RWC] = rwcs[j]
+                                c[CH_RWC] = rwcs[j]
                         cols.append(c)
     # output stability: each phase's index rows = slot of the next write at
     # step >= t (single transition between consecutive writes; the final
     # write is the phase's last (row, col) slab, which is also the default)
     ncbs = [sum(br[2] for br in pinfo) for pinfo in info]
     for p in range(nph):
-        nr, nc = _CH_ROWS + 2 * p, _CH_ROWS + 2 * p + 1
+        nr, nc = ch_out_i_row(p), ch_out_j_row(p)
         nxt = (m_blocks - 1, ncbs[p] - 1)
         for c in reversed(cols):
-            if c[_CH_PH] == p and c[_CH_LAST] == 1:
+            if c[CH_PH] == p and c[CH_LAST] == 1:
                 nxt = (c[nr], c[nc])
             c[nr], c[nc] = nxt
     return np.array(cols, np.int32).T
@@ -1644,12 +1656,12 @@ def _gmm_chained_kernel(tab_ref, dims_ref, *refs, nphases: int,
     out_refs = refs[3 + npanels:3 + npanels + nphases]
     acc_ref, ring_ref, win_ref = refs[3 + npanels + nphases:]
     t = pl.program_id(0)
-    i = tab_ref[_CH_I, t]
-    src = tab_ref[_CH_SRC, t]
+    i = tab_ref[CH_I, t]
+    src = tab_ref[CH_SRC, t]
     hd = dims_ref[0]
     wd = dims_ref[1]
 
-    @pl.when(tab_ref[_CH_FIRST, t] == 1)
+    @pl.when(tab_ref[CH_FIRST, t] == 1)
     def _init():
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
@@ -1659,15 +1671,15 @@ def _gmm_chained_kernel(tab_ref, dims_ref, *refs, nphases: int,
     slo = (i + 2) % 3
     smi = i % 3
     shi = (i + 1) % 3
-    rc = tab_ref[_CH_RC, t]
+    rc = tab_ref[CH_RC, t]
     win_ref[pl.ds(0, bm), :] = ring_ref[slo, rc]
     win_ref[pl.ds(bm, bm), :] = ring_ref[smi, rc]
     win_ref[pl.ds(2 * bm, bm), :] = ring_ref[shi, rc]
-    shifted = win_ref[pl.ds(bm + tab_ref[_CH_DELTA, t], bm), :]
+    shifted = win_ref[pl.ds(bm + tab_ref[CH_DELTA, t], bm), :]
     r = i * bm + jax.lax.broadcasted_iota(jnp.int32, (bm, 1), 0)[:, 0]
     rem = r % (hd * wd)
-    hh = rem // wd + tab_ref[_CH_DH, t]
-    ww = rem % wd + tab_ref[_CH_DW, t]
+    hh = rem // wd + tab_ref[CH_DH, t]
+    ww = rem % wd + tab_ref[CH_DW, t]
     valid = (hh >= 0) & (hh < hd) & (ww >= 0) & (ww < wd)
     xop = jnp.where(src == 2,
                     jnp.where(valid[:, None], shifted,
@@ -1677,19 +1689,19 @@ def _gmm_chained_kernel(tab_ref, dims_ref, *refs, nphases: int,
     acc_ref[...] += jnp.dot(xop, w_ref[...],
                             preferred_element_type=jnp.float32)
 
-    @pl.when(tab_ref[_CH_LAST, t] == 1)
+    @pl.when(tab_ref[CH_LAST, t] == 1)
     def _store():
-        bj = tab_ref[_CH_BJ, t]
+        bj = tab_ref[CH_BJ, t]
         y = jnp.maximum(
             acc_ref[...] + b_ref[bj, :].astype(jnp.float32)[None, :], 0.0)
         y = y.astype(out_refs[0].dtype)
-        ph = tab_ref[_CH_PH, t]
+        ph = tab_ref[CH_PH, t]
         for p, o_ref in enumerate(out_refs):
             @pl.when(ph == p)
             def _(o_ref=o_ref):
                 o_ref[...] = y
 
-        rwc = tab_ref[_CH_RWC, t]
+        rwc = tab_ref[CH_RWC, t]
 
         @pl.when(rwc >= 0)
         def _ring():
@@ -1846,23 +1858,23 @@ def grouped_matmul_chained(phases, *, m: int, h: int, w: int, panels=(),
 
     in_specs = [
         pl.BlockSpec((None, bm, blk),
-                     lambda t, tab, dims: (tab[_CH_XT, t], 0, 0)),
+                     lambda t, tab, dims: (tab[CH_XT, t], 0, 0)),
         pl.BlockSpec((None, blk, blk),
-                     lambda t, tab, dims: (tab[_CH_WT, t], 0, 0)),
+                     lambda t, tab, dims: (tab[CH_WT, t], 0, 0)),
         pl.BlockSpec(memory_space=pltpu.VMEM),
     ]
     ins = [xstack, wstack, bstack]
     for pi, pa in enumerate(pads):
-        row = _CH_PCA if pi == 0 else _CH_PCB
+        row = CH_PCA if pi == 0 else CH_PCB
         in_specs.append(pl.BlockSpec(
-            (bm, blk), lambda t, tab, dims, row=row: (tab[_CH_I, t],
+            (bm, blk), lambda t, tab, dims, row=row: (tab[CH_I, t],
                                                       tab[row, t])))
         ins.append(pa)
     ncbs = [sum(bs[2] for bs in pspec) for pspec in spec]
     out_specs = [
         pl.BlockSpec((bm, blk),
-                     lambda t, tab, dims, p=p: (tab[_CH_ROWS + 2 * p, t],
-                                                tab[_CH_ROWS + 2 * p + 1, t]))
+                     lambda t, tab, dims, ri=ch_out_i_row(p),
+                     rj=ch_out_j_row(p): (tab[ri, t], tab[rj, t]))
         for p in range(nph)
     ]
     grid_spec = pltpu.PrefetchScalarGridSpec(
@@ -2104,13 +2116,13 @@ def _gmm_experts_kernel(tab_ref, dyn_ref, x_ref, wh_ref, wo_ref, sw_ref,
     res_refs = rest[1:1 + nres]
     acc_ref, hin_s, hpost_s = rest[1 + nres:]
     t = pl.program_id(0)
-    phase = tab_ref[4, t]
-    last = tab_ref[6, t] == 1
-    hj = tab_ref[7, t]
+    phase = tab_ref[EX_PH, t]
+    last = tab_ref[EX_LAST, t] == 1
+    hj = tab_ref[EX_HJ, t]
     dt = y_ref.dtype
     act = _MOE_ACTS[activation]
 
-    @pl.when(tab_ref[5, t] == 1)
+    @pl.when(tab_ref[EX_FIRST, t] == 1)
     def _zero():
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
@@ -2148,7 +2160,7 @@ def _gmm_experts_kernel(tab_ref, dyn_ref, x_ref, wh_ref, wo_ref, sw_ref,
 
     @pl.when((phase == 2) & last)
     def _close_y():
-        valid = dyn_ref[1, tab_ref[0, t]]
+        valid = dyn_ref[1, tab_ref[EX_BI, t]]
         y = acc_ref[...].astype(dt) * sw_ref[...][:, None].astype(dt)
         ri = jax.lax.broadcasted_iota(jnp.int32, y.shape, 0)
         y_ref[...] = jnp.where(ri < valid, y, jnp.zeros_like(y))
@@ -2216,23 +2228,23 @@ def grouped_matmul_experts(xp, swp, w_in, w_out, w_gate, counts, *,
     whpe, wope = (1 + int(gated)) * db * fb, fb * db
 
     in_specs = [
-        pl.BlockSpec((None, bm, 128), lambda t, tab, dyn: (tab[1, t], 0, 0)),
+        pl.BlockSpec((None, bm, 128), lambda t, tab, dyn: (tab[EX_XT, t], 0, 0)),
         pl.BlockSpec((None, 128, 128),
                      lambda t, tab, dyn, s=whpe:
-                     (dyn[0, tab[0, t]] * s + tab[2, t], 0, 0)),
+                     (dyn[0, tab[EX_BI, t]] * s + tab[EX_WH, t], 0, 0)),
         pl.BlockSpec((None, 128, 128),
                      lambda t, tab, dyn, s=wope:
-                     (dyn[0, tab[0, t]] * s + tab[3, t], 0, 0)),
-        pl.BlockSpec((None, bm), lambda t, tab, dyn: (tab[0, t], 0)),
+                     (dyn[0, tab[EX_BI, t]] * s + tab[EX_WO, t], 0, 0)),
+        pl.BlockSpec((None, bm), lambda t, tab, dyn: (tab[EX_BI, t], 0)),
     ]
     out_shape = [jax.ShapeDtypeStruct((mbs * db, bm, 128), dt)]
     out_specs = [pl.BlockSpec((None, bm, 128),
-                              lambda t, tab, dyn: (tab[8, t], 0, 0))]
+                              lambda t, tab, dyn: (tab[EX_OT, t], 0, 0))]
     if train:
         for _ in range(2 if gated else 1):
             out_shape.append(jax.ShapeDtypeStruct((mbs * fb, bm, 128), dt))
             out_specs.append(pl.BlockSpec(
-                (None, bm, 128), lambda t, tab, dyn: (tab[9, t], 0, 0)))
+                (None, bm, 128), lambda t, tab, dyn: (tab[EX_RES, t], 0, 0)))
 
     nw = 1 + int(gated)
     grid = (mbs * (nw * fb * db + db * fb),)
@@ -2324,17 +2336,17 @@ def _gmm_experts_bwd_kernel(tab_ref, dyn_ref, x_ref, dy_ref, wht_ref,
     dx_ref, dwh_ref, dwo_ref = rest[:3]
     acc_ref, dpan_s, hpost_s, dwo_acc, dwh_acc = rest[3:]
     t = pl.program_id(0)
-    bi = tab_ref[0, t]
-    phase = tab_ref[6, t]
-    last = tab_ref[8, t] == 1
-    pj = tab_ref[9, t]
+    bi = tab_ref[EB_BI, t]
+    phase = tab_ref[EB_PH, t]
+    last = tab_ref[EB_LAST, t] == 1
+    pj = tab_ref[EB_PJ, t]
     febl = dyn_ref[2, bi] == 1
     lebl = dyn_ref[3, bi] == 1
     dt = dx_ref.dtype
     act = _MOE_ACTS[activation]
     cdims = (((0,), (0,)), ((), ()))           # tile^T @ tile
 
-    @pl.when(tab_ref[7, t] == 1)
+    @pl.when(tab_ref[EB_FIRST, t] == 1)
     def _zero_acc():
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
@@ -2362,7 +2374,7 @@ def _gmm_experts_bwd_kernel(tab_ref, dyn_ref, x_ref, dy_ref, wht_ref,
 
     @pl.when(phase == 1)
     def _b_step():
-        slot = tab_ref[12, t]
+        slot = tab_ref[EB_DWO, t]
 
         @pl.when(febl)
         def _zero_b():
@@ -2390,7 +2402,7 @@ def _gmm_experts_bwd_kernel(tab_ref, dyn_ref, x_ref, dy_ref, wht_ref,
 
     @pl.when(phase == 3)
     def _d_step():
-        slot = tab_ref[11, t]
+        slot = tab_ref[EB_DWH, t]
 
         @pl.when(febl)
         def _zero_d():
@@ -2455,17 +2467,17 @@ def grouped_matmul_experts_bwd(xp, dyp, w_in, w_out, w_gate, hinp, gatep,
 
     tile_ix = lambda row: (lambda t, tab, dyn, r=row: (tab[r, t], 0, 0))
     exp_ix = lambda row, s: (lambda t, tab, dyn, r=row, s=s:
-                             (dyn[0, tab[0, t]] * s + tab[r, t], 0, 0))
+                             (dyn[0, tab[EB_BI, t]] * s + tab[r, t], 0, 0))
     in_specs = [
-        pl.BlockSpec((None, bm, 128), tile_ix(2)),       # X
-        pl.BlockSpec((None, bm, 128), tile_ix(1)),       # dYs
-        pl.BlockSpec((None, 128, 128), exp_ix(3, whtpe)),  # Wh^T
-        pl.BlockSpec((None, 128, 128), exp_ix(4, wope)),   # Wout^T
-        pl.BlockSpec((None, bm, 128), tile_ix(5)),       # hin preact
+        pl.BlockSpec((None, bm, 128), tile_ix(EB_XT)),       # X
+        pl.BlockSpec((None, bm, 128), tile_ix(EB_DYT)),       # dYs
+        pl.BlockSpec((None, 128, 128), exp_ix(EB_WHT, whtpe)),  # Wh^T
+        pl.BlockSpec((None, 128, 128), exp_ix(EB_WOT, wope)),   # Wout^T
+        pl.BlockSpec((None, bm, 128), tile_ix(EB_RES)),       # hin preact
     ]
     ins = [x_tiles, dy_tiles, wht, wot, hin_tiles]
     if gated:
-        in_specs.append(pl.BlockSpec((None, bm, 128), tile_ix(5)))
+        in_specs.append(pl.BlockSpec((None, bm, 128), tile_ix(EB_RES)))
         ins.append(_pack_rows(gatep, bm, fp_))
 
     out_shape = [
@@ -2474,9 +2486,9 @@ def grouped_matmul_experts_bwd(xp, dyp, w_in, w_out, w_gate, hinp, gatep,
         jax.ShapeDtypeStruct((e * wope, 128, 128), jnp.float32),  # dWout
     ]
     out_specs = [
-        pl.BlockSpec((None, bm, 128), tile_ix(10)),
-        pl.BlockSpec((None, 128, 128), exp_ix(11, whtpe)),
-        pl.BlockSpec((None, 128, 128), exp_ix(12, wope)),
+        pl.BlockSpec((None, bm, 128), tile_ix(EB_DXOT)),
+        pl.BlockSpec((None, 128, 128), exp_ix(EB_DWH, whtpe)),
+        pl.BlockSpec((None, 128, 128), exp_ix(EB_DWO, wope)),
     ]
     grid = (mbs * fb * db * (2 + 2 * nw),)
     fn = pl.pallas_call(

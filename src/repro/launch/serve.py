@@ -153,6 +153,13 @@ def serve_cnn_metrics(cfg, *, max_images: int = 4, num_requests: int = 12,
         "p99_ms": float(np.percentile(lat_ms, 99)),
         "padded_m_factor_mean": float(np.mean(waste)),
         "plan_cache": stats,
+        # per-ladder planlint coverage: a bucket's entry is verified when
+        # its lowering ran analysis.verify_plan with zero findings
+        # (pytest / REPRO_PLANLINT=1 — see plan._verify_requested)
+        "plans_verified": sum(
+            1 for b in ladder
+            if plan_cache.cached_cnn_plan(
+                cfg, b, chain_modules=chain_modules).verified),
     }
 
 
