@@ -30,9 +30,10 @@ forward/backward mode counts and modeled train-step makespan, the
 cross-module-streaming column — chained-plan mode counts, modeled
 makespans and traced-jaxpr ``googlenet_launches`` per direction for the
 default AND ``chain_modules=True`` plans — the continuous-batching
-serving column (QPS + p50/p99 dispatch latency through the cached ragged
-plans of ``launch/serve.py``, plan-cache hit stats, padded-M waste, and
-the served chained forward's traced launch count) — the MoE
+serving column (QPS + request-level p50/p99 latency through the cached
+ragged plans of ``launch/serve.py``, plan-cache hit stats, padded-M
+waste, the served chained forward's traced launch count, the
+masked-chained bit-match verdict and the dead-block skip ratio) — the MoE
 expert-dispatch column (grouped ragged engine vs capacity-padded einsum:
 wall + modeled per engine, one-launch-per-direction counts, bit-match
 and zero-token-expert verdicts, padded_slot_fraction) — and the
@@ -63,6 +64,52 @@ def _emit(rows):
         us = r.pop("us_per_call", "")
         derived = ";".join(f"{k}={v}" for k, v in r.items())
         print(f"{name},{us},{derived}", flush=True)
+
+
+def _dead_block_skip():
+    """Executed-vs-skipped grid steps of a masked chained launch on a
+    rows/image == bm fixture (4 images, 4 M-blocks) at one live image:
+    the grid-step counter must show the dead blocks ran ZERO steps, so
+    the skip ratio is exactly 1 - n/bucket = 0.75."""
+    import importlib
+
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.analysis import tables
+    from repro.core import plan as planlib
+    gmm = importlib.import_module("repro.kernels.grouped_matmul")
+
+    b, h, w = 4, 16, 8                      # h*w = 128 rows/image = bm
+    m = b * h * w
+    ks = jax.random.split(jax.random.PRNGKey(0), 5)
+    x0 = jax.random.normal(ks[0], (m, 64)) * 0.3
+    w0 = jax.random.normal(ks[1], (64, 48)) * 0.3
+    wmat = jax.random.normal(ks[3], (48 * 9, 40)) * 0.3
+    phases = [
+        [{"n": 48, "w": planlib._pad_w_dense(w0, 128),
+          "b": jax.random.normal(ks[2], (48,)),
+          "src": ("x", [x0]), "ring_write": (0,)}],
+        [{"n": 40, "w": planlib._pack_w_ring(wmat, 3, 3, 48, 1, 128),
+          "b": jax.random.normal(ks[4], (40,)),
+          "src": ("ring", 3, 3, (0,)), "ring_write": None}],
+    ]
+    _, steps = gmm.grouped_matmul_chained(
+        phases, m=m, h=h, w=w, m_valid=h * w, debug_steps=True,
+        interpret=True)
+    tab = np.asarray(gmm._plan_tiles_chained(
+        m // 128, gmm._chain_static(phases, 128, 128, w)))
+    total = tab.shape[1]
+    executed = int(jnp.asarray(steps)[0, 0])
+    return {
+        "bucket_images": b,
+        "live_images": 1,
+        "grid_steps": total,
+        "executed_steps": executed,
+        "skip_ratio": (total - executed) / total,
+        "expected_skip_ratio": 1 - 1 / b,
+    }
 
 
 def main(smoke: bool = False) -> None:
@@ -218,7 +265,7 @@ def main(smoke: bool = False) -> None:
     plan_cache.reset(clear_entries=True)
     bench_json["serving"] = serve_cnn_metrics(
         get_reduced("googlenet"), max_images=4,
-        num_requests=6 if smoke else 12, seed=0)
+        num_requests=10 if smoke else 24, seed=0)
     # trace-only ceiling for FULL googlenet: the served (ragged, chained)
     # forward must stay under the same launch ceiling as the training
     # trace above — raggedness must not add launches
@@ -228,6 +275,24 @@ def main(smoke: bool = False) -> None:
         jnp.zeros((2,) + gcfg.img, jnp.float32), jnp.int32(1))
     bench_json["serving"]["served_chained_launches_per_forward"] = \
         sfwd["total"]
+
+    # masked-chained correctness + dead-block skip, gated by ci.sh:
+    # (a) a CHAINED reduced-googlenet plan served ragged must bit-match
+    # the dense forward on the valid images; (b) at the kernel layer a
+    # rows/image == bm fixture must skip exactly 1 - n/bucket of the
+    # chained grid's steps (the no-op guard executes nothing for dead
+    # M-blocks — the serving win raggedness buys the chained launch)
+    rcfg = get_reduced("googlenet")
+    rplan, _ = CNN.plan_cnn(rcfg, batch=4, chain_modules=True)
+    rparams = CNN.init_params(rcfg, jax.random.PRNGKey(0))
+    rimgs = jax.random.normal(jax.random.PRNGKey(2), (4,) + rcfg.img)
+    rdense = CNN.forward_plan(rparams, rcfg, rimgs, rplan)
+    rragged = CNN.forward_plan(rparams, rcfg, rimgs, rplan,
+                               valid_images=2)
+    bench_json["serving"]["chained_masked_ok"] = bool(
+        any(g.mode == "grouped_chained" for g in rplan.groups)
+        and jnp.array_equal(rragged[:2], rdense[:2]))
+    bench_json["serving"]["dead_block_skip"] = _dead_block_skip()
 
     # MoE expert-dispatch column (runs in smoke too — ci.sh gates it):
     # grouped ragged engine vs capacity-padded einsum on a

@@ -57,8 +57,12 @@ make bench-smoke
 #   - serving: the continuous-batching column (ragged-M + plan cache,
 #     launch/serve.py) ran — post-warmup stream entirely from the plan
 #     cache (hit rate 1.0: zero re-lowering / offset-table rebuilds /
-#     re-tracing), real p50/p99 latency recorded, and the served chained
-#     forward under the same launch ceiling as training's forward;
+#     re-tracing), REQUEST-level p50/p99 latency (one sample per request,
+#     oversized requests split — every submitted image reaches a launch),
+#     the served chained forward under the same launch ceiling as
+#     training's forward, the masked chained forward bit-matching dense
+#     on the valid images, and dead M-blocks skipped as no-op waves
+#     (skip ratio exactly 1 - n/bucket on the rows/image == bm fixture);
 #   - MoE expert dispatch: on the bench layer the grouped ragged engine's
 #     MODELED time beats the capacity-padded einsum strictly (FLOPs scale
 #     with routed tokens, not E*capacity), the smoke config runs exactly
@@ -138,10 +142,22 @@ s = d["serving"]
 assert s["plan_cache"]["hit_rate"] == 1.0 and s["plan_cache"]["misses"] == 0, \
     f"warm serving path missed the plan cache: {s['plan_cache']}"
 assert s["p50_ms"] > 0 and s["p99_ms"] >= s["p50_ms"], s
+assert s["latency_samples"] == s["requests"], \
+    f"latency percentiles not request-level: {s}"
+assert s["dispatch_p99_ms"] >= s["dispatch_p50_ms"] > 0, s
+assert s["images"] == s["images_submitted"], \
+    f"a submitted image never reached a launch: {s}"
 assert s["qps"] > 0 and s["dispatches"] > 0, s
 assert s["padded_m_factor_mean"] >= 1.0, s
+# the masked CHAINED forward rides the same ceiling — raggedness must
+# not add launches to the cross-module streaming path either
 assert s["served_chained_launches_per_forward"] <= \
     LAUNCH_CEILING_CHAINED_FWD, s
+assert s["chained_masked_ok"], \
+    "ragged chained serving forward != dense on the valid images"
+db = s["dead_block_skip"]
+assert db["skip_ratio"] == db["expected_skip_ratio"], \
+    f"dead M-blocks not skipped as no-op waves: {db}"
 # MoE expert-dispatch gates: modeled grouped beats einsum strictly, one
 # grouped-family launch per direction, bit-match vs the einsum oracle,
 # zero-token experts exact, wall within the interpret-emulation tolerance

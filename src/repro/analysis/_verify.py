@@ -20,7 +20,10 @@ Two deliberate normalizations (the invariants checked are unaffected):
     executor's env, which a static pass does not have, and the wave /
     ring schedule is invariant to the lhs source tag;
   * ragged-M serving launches are verified at the full bucket M — the
-    offset table is identical, raggedness only masks the epilogue.
+    offset table is identical for every request mix in the bucket, and
+    the chained masked obligations (mrow slot addressing, in-image tap
+    identity) are checked for ALL image-aligned cutoffs at once by
+    ``hazards.check_chained_masked``.
 
 Geometry checks are memoized: plans re-lower the same shapes constantly
 (every pytest case, every serve bucket) and the tables are pure
@@ -102,6 +105,7 @@ def _checked_chained(mb, spec, h, w, nring):
     raw = list(tables.check_chained(tab, mb, spec))
     raw += hazards.check_chained_schedule(tab, mb, len(spec), h=h, w=w,
                                           bm=BLK, nring=nring)
+    raw += hazards.check_chained_masked(tab, mb, len(spec), h=h, w=w)
     return tuple(raw)
 
 

@@ -21,6 +21,12 @@ prove it statically from the offset table alone:
       is in the function docstring), and every ring column index must
       sit inside the declared ring.
 
+  ``check_chained_masked``  the ragged-M extension: a serving launch
+      skips M-blocks entirely past ``m_valid`` (the per-phase mrow slot
+      row, ``tables.ch_mrow_row``), so a consumer wave must never need
+      a producer wave the mask could have skipped.  The checker proves
+      the liveness lookup is sound for EVERY image-aligned cutoff.
+
   ``check_concat_segments``  the write-write hazard check for fused
       concat layouts: branch panel segments and passthrough
       dynamic-update-slice column ranges must tile the join's [M, N]
@@ -34,7 +40,8 @@ from __future__ import annotations
 import numpy as np
 
 from repro.analysis.tables import (CH_DELTA, CH_DH, CH_DW, CH_I, CH_LAST,
-                                   CH_RC, CH_ROWS, CH_RWC, CH_SRC)
+                                   CH_PH, CH_RC, CH_ROWS, CH_RWC, CH_SRC,
+                                   ch_mrow_row)
 
 
 def check_chained_schedule(tab, m_blocks, nph, *, h, w, bm, nring):
@@ -115,6 +122,72 @@ def check_chained_schedule(tab, m_blocks, nph, *, h, w, bm, nring):
                                           f"outside [0, {nring})"))
                 else:
                     ring[(i % 3, rwc)] = i
+    return out
+
+
+def check_chained_masked(tab, m_blocks, nph, *, h, w):
+    """Prove a ragged-M chained launch cannot race for ANY image-aligned
+    cutoff ``m_valid = valid_images * h * w``.
+
+    The kernel guards every step with ``mrow[tab[ch_mrow_row, t]] > 0``
+    and the per-phase mrow vector holds ``clip(m_valid - i*bm, 0, bm)``
+    at slot ``p*m_blocks + i`` — liveness depends only on the block
+    index, identically for every phase.  Two obligations make the skip
+    safe:
+
+      1. the liveness lookup addresses THIS step's (phase, block): the
+         mrow slot row must equal ``phase * m_blocks + block``
+         everywhere.  A wrong slot could report a consumer live while
+         its producer wave was skipped (or mask a live block's store).
+      2. a live consumer row never taps a skipped producer block: an
+         unmasked ring tap of output row ``r`` reads ``r + delta`` with
+         ``delta == dh*W + dw`` inside the SAME image (the border-mask
+         algebra in ``check_chained_schedule``), and ``m_valid`` is
+         image-aligned — so ``r < m_valid`` implies
+         ``r + delta < m_valid``, i.e. the tapped block satisfies
+         ``b*bm <= r + delta < m_valid`` and is live.  Statically that
+         reduces to every ring tap satisfying the in-image identity,
+         re-checked here so the masked proof stands alone.
+
+    Dead blocks' epilogue stores are skipped too, but their panel slots
+    are only ever addressed by equally-dead consumer blocks (same block
+    index next launch), and live tail blocks store exact zeros past
+    ``m_valid`` — the kernel's epilogue row mask, not a table property.
+    """
+    out = []
+    fam = "chained-masked"
+    tab = np.asarray(tab)
+    mrr = ch_mrow_row(nph)
+    if tab.ndim != 2 or tab.shape[0] <= mrr:
+        out.append(("hazard", f"{fam}: table has no mrow slot row "
+                              f"(want > {mrr} rows, got "
+                              f"{tab.shape[0] if tab.ndim == 2 else 0})"))
+        return out
+    mr = tab[mrr].astype(np.int64)
+    bad = np.nonzero((mr < 0) | (mr >= nph * m_blocks))[0]
+    if bad.size:
+        out.append(("bounds", f"{fam}: mrow slot {int(mr[bad[0]])} at "
+                              f"step {int(bad[0])} outside "
+                              f"[0, {nph * m_blocks})"))
+    want = tab[CH_PH].astype(np.int64) * m_blocks + tab[CH_I].astype(
+        np.int64)
+    diff = np.nonzero(mr != want)[0]
+    if diff.size:
+        t = int(diff[0])
+        out.append(("hazard", f"{fam}: step {t} reads liveness slot "
+                              f"{int(mr[t])}, want {int(want[t])} "
+                              f"(phase*m_blocks + block) — the no-op "
+                              "guard would skip/run the wrong wave"))
+    ring_steps = np.nonzero(tab[CH_SRC] == 2)[0]
+    for t in ring_steps:
+        d = int(tab[CH_DELTA, t])
+        dh, dw = int(tab[CH_DH, t]), int(tab[CH_DW, t])
+        if d != dh * w + dw:
+            out.append(("bounds", f"{fam}: tap at step {int(t)} has "
+                                  f"delta {d} != dh*W+dw = {dh * w + dw}"
+                                  " — an unmasked row could tap across "
+                                  "the image (and the m_valid) boundary"
+                                  " into a skipped block"))
     return out
 
 

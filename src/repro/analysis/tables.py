@@ -21,8 +21,12 @@ Eight table families, one checker each:
                    over M-blocks.               -> ``check_dw``
   backward 2-phase ``_plan_tiles_bwd`` — (8, T): every dX tile then
                    every dW tile in ONE launch. -> ``check_bwd``
-  chained          ``_plan_tiles_chained`` — (_CH_ROWS + 2*P, T): the
-                   lag-1 wave schedule.         -> ``check_chained``
+  chained          ``_plan_tiles_chained`` — (_CH_ROWS + 2*P + 1, T):
+                   the lag-1 wave schedule plus the trailing per-phase
+                   valid-row metadata row (``ch_mrow_row`` — the slot a
+                   ragged-M launch's prefetched mrow vector is read at,
+                   so masked waves skip dead M-blocks).
+                                                -> ``check_chained``
   experts fwd      ``_plan_tiles_experts`` — (10, T) per-expert-ragged
                    H then Y phases.             -> ``check_experts``
   experts bwd      ``_plan_tiles_experts_bwd`` — (13, T) A/B/C/D
@@ -90,6 +94,16 @@ def ch_out_i_row(p: int) -> int:
 def ch_out_j_row(p: int) -> int:
     """Stability-backfilled output column row for chained phase ``p``."""
     return CH_ROWS + 2 * p + 1
+
+
+def ch_mrow_row(nph: int) -> int:
+    """Per-phase valid-row metadata row of a chained table (the LAST
+    row, after all ``nph`` phases' output rows): step t holds
+    ``phase * m_blocks + block`` — the slot of the prefetched per-phase
+    mrow vector a ragged-M chained launch reads its liveness from.  A
+    block with ``mrow == 0`` is entirely past ``m_valid`` and the wave
+    becomes a no-op guard (GEMM/ring/pool steps never execute)."""
+    return CH_ROWS + 2 * nph
 
 
 # ---------------------------------------------------------------------------
@@ -600,10 +614,11 @@ def _chain_steps(tag, src):
 def expected_chained(m_blocks, spec):
     """Independent replay of ``_plan_tiles_chained`` from the planner
     spec (per phase a tuple of ``(tag, src, nbb, rwcs)`` branch specs):
-    the expected (CH_ROWS + 2*P, T) table including the wave walk and
-    the per-phase output-stability backfill."""
+    the expected (CH_ROWS + 2*P + 1, T) table including the wave walk,
+    the per-phase output-stability backfill and the trailing
+    ``ch_mrow_row`` liveness-slot row."""
     nph = len(spec)
-    nrows = CH_ROWS + 2 * nph
+    nrows = CH_ROWS + 2 * nph + 1
     info, xbase, wbase, bbase = [], 0, 0, 0
     for phase in spec:
         pinfo, ob = [], 0
@@ -629,6 +644,7 @@ def expected_chained(m_blocks, spec):
                     for s, (kt, kd) in enumerate(steps):
                         c = [0] * nrows
                         c[CH_I], c[CH_PH] = i, p
+                        c[ch_mrow_row(nph)] = p * m_blocks + i
                         c[CH_WT] = wb + s * nbb + j
                         c[CH_BJ] = bb + j
                         c[CH_FIRST] = int(s == 0)
@@ -682,6 +698,15 @@ def check_chained(tab, m_blocks, spec):
         if (np.diff(wave) < 0).any():
             out.append(("schema", f"{fam}: wave order regresses — a step "
                                   "runs before its producers' wave"))
+        mr = tab[ch_mrow_row(nph)].astype(np.int64)
+        if not ((mr >= 0) & (mr < nph * m_blocks)).all():
+            out.append(("bounds", f"{fam}: mrow slot row outside "
+                                  f"[0, {nph * m_blocks})"))
+        if (mr != tab[CH_PH].astype(np.int64) * m_blocks
+                + tab[CH_I].astype(np.int64)).any():
+            out.append(("schema", f"{fam}: mrow slot row disagrees with "
+                                  "phase*m_blocks + block — a ragged "
+                                  "launch would read the wrong liveness"))
     return out
 
 

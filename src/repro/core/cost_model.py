@@ -650,7 +650,8 @@ def chained_profiles(ops: list[Op], ring=frozenset()) -> list[OpProfile]:
     return profs
 
 
-def chained_time(phase_ops: list[list[Op]], ring=frozenset()) -> float:
+def chained_time(phase_ops: list[list[Op]], ring=frozenset(),
+                 m_valid: int | None = None) -> float:
     """Modeled makespan of ONE chained launch over ``phase_ops`` (one op
     list per phase, Shi-et-al.-style honest pricing rather than
     assertion): the union co-executes like one big grouped launch —
@@ -660,11 +661,21 @@ def chained_time(phase_ops: list[list[Op]], ring=frozenset()) -> float:
     launch consumes the padded panels in place via its lhs-source
     descriptors).  On top rides the pipeline-FILL term the wave schedule
     costs: a P-phase chain runs mb + P - 1 waves for mb row blocks, so
-    the steady-state makespan stretches by (P-1)/(mb+P-1)."""
+    the steady-state makespan stretches by (P-1)/(mb+P-1).
+
+    ``m_valid`` prices the ragged serving launch: dead M-blocks past the
+    cutoff are skipped as no-op waves, so the steady-state work scales
+    by the live-block fraction and the fill term runs over live blocks
+    only (the no-op waves cost grid steps, not GEMMs — negligible next
+    to a block's tap-GEMM ladder, so the model drops them)."""
     ops = [op for ph in phase_ops for op in ph]
     t = co_execution_time(chained_profiles(ops, ring))
     m = max(gemm_shape(op)[0] for op in ops)
     mb = max(-(-m // 128), 1)
+    if m_valid is not None:
+        mbl = min(max(-(-m_valid // 128), 1), mb)
+        t *= mbl / mb
+        mb = mbl
     nph = len(phase_ops)
     return t * (1.0 + (nph - 1) / (mb + nph - 1))
 

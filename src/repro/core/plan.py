@@ -1024,11 +1024,33 @@ def _valid_rows(xs, valid_images, batch):
     contiguously at the head of the batch axis, and every lhs of a group
     has M = batch * rows_per_image for ITS spatial extent — so the true
     row count is ``valid_images * (M // batch)``.  None when the launch
-    is not ragged."""
+    is not ragged.
+
+    Every lhs must agree on M and M must divide by ``batch`` — a silent
+    floor here would hand the kernel a cutoff that splits an image and
+    the masked launch would serve truncated rows as if they were real.
+    """
     if valid_images is None:
         return None
-    x0 = xs[0]
-    m = (x0[0] if isinstance(x0, (list, tuple)) else x0).shape[0]
+    ms = {(x[0] if isinstance(x, (list, tuple)) else x).shape[0]
+          for x in xs}
+    if len(ms) != 1:
+        raise ValueError(
+            f"ragged group mixes lhs row counts {sorted(ms)} — "
+            "valid-row masking needs one M per launch")
+    return _valid_rows_from_m(ms.pop(), valid_images, batch)
+
+
+def _valid_rows_from_m(m, valid_images, batch):
+    """``_valid_rows`` from a known M (the chained path carries M as a
+    python int rather than arrays)."""
+    if valid_images is None:
+        return None
+    if m % batch != 0:
+        raise ValueError(
+            f"lhs M={m} is not a multiple of batch={batch} — "
+            "rows_per_image would be fractional, so an image-aligned "
+            "ragged cutoff cannot exist")
     return valid_images * (m // batch)
 
 
@@ -1205,7 +1227,8 @@ def _panel_index(panels: list, arr) -> int:
 
 
 def _run_grouped_chained(group: ExecGroup, impls: dict[str, OpImpl],
-                         env: dict, interpret):
+                         env: dict, interpret, valid_images=None,
+                         batch=None):
     """Execute a ``grouped_chained`` group as ONE multi-phase launch.
 
     Per-branch lhs sources, in preference order:
@@ -1292,9 +1315,10 @@ def _run_grouped_chained(group: ExecGroup, impls: dict[str, OpImpl],
                         "src": src, "ring_write": ring_cols.get(n)})
         phase_dicts.append(brs)
     assert m is not None and geom is not None, group.ops
+    mv = _valid_rows_from_m(m, valid_images, batch)
     outs = grouped_matmul_chained(phase_dicts, m=m, h=geom[0], w=geom[1],
                                   panels=tuple(panels), block=blk,
-                                  interpret=interpret)
+                                  m_valid=mv, interpret=interpret)
     lay: dict[str, tuple[int, int, int]] = {}
     for p, ph in enumerate(group.chain):
         cb = 0
@@ -1435,9 +1459,12 @@ def run_plan(impls: dict[str, OpImpl], env: dict, plan: Plan, *,
     ``plan.context["batch"]`` (the bucket size the plan was lowered for).
     Batch elements never mix inside a launch (im2col, pooling and ring
     taps are image-local by the border masks), so the first
-    ``valid_images`` outputs are exactly the dense run's — chained groups
-    therefore run unmasked: their padded rows carry isolated garbage the
-    caller's head slice drops.
+    ``valid_images`` outputs are exactly the dense run's.  Chained groups
+    mask too: the launch skips M-blocks past the cutoff as no-op waves
+    (dead blocks run zero GEMM/ring/pool steps) and zero-stores the live
+    tail block, so the next launch's panel descriptors and ring taps read
+    clean producer slots instead of relying on the caller to drop
+    garbage.
     """
     import time as _time
     import jax as _jax
@@ -1468,7 +1495,9 @@ def run_plan(impls: dict[str, OpImpl], env: dict, plan: Plan, *,
         elif group.mode == "grouped_chained" and _chained_runnable(
                 group, impls, env, pending):
             with _scope(group):
-                _run_grouped_chained(group, impls, env, interpret)
+                _run_grouped_chained(group, impls, env, interpret,
+                                     valid_images=valid_images,
+                                     batch=batch)
         elif group.mode == "stacked" and _stacked_runnable(group, impls,
                                                            pending):
             with _scope(group):

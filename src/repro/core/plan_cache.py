@@ -26,7 +26,11 @@ same bucket.  The three cached layers and who provides them:
                          the entry after its first trace; later mixes in
                          the bucket re-enter the same trace because the
                          ragged ``valid_images`` operand is a TRACED i32
-                         scalar, not a python constant.
+                         scalar, not a python constant.  That includes the
+                         chained cross-module launch: its offset table is
+                         bucket-shaped and m_valid-independent (liveness
+                         rides a prefetched mrow vector), so one pinned
+                         table + one trace serve every masked request mix.
 
 The cache itself is LRU-bounded (``CAPACITY`` entries — the transformer
 zoo's MoE configs make one-cfg growth assumptions wrong): a hit refreshes

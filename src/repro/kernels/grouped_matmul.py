@@ -110,7 +110,7 @@ from repro.analysis.tables import (
     EX_HJ, EX_OT, EX_RES,
     EB_BI, EB_DYT, EB_XT, EB_WHT, EB_WOT, EB_RES, EB_PH, EB_FIRST,
     EB_LAST, EB_PJ, EB_DXOT, EB_DWH, EB_DWO,
-    ch_out_i_row, ch_out_j_row)
+    ch_out_i_row, ch_out_j_row, ch_mrow_row)
 
 
 # Eager kernel launches by wrapper name — the benchmark's
@@ -1579,9 +1579,13 @@ def _plan_tiles_chained(m_blocks: int, phases):
     branch specs (tag, src, nbb, rwcs) with tag 'x' (src = k-block count),
     'panel' (src = ((panel, colblock), ...)) or 'ring' (src = (taps, ring
     cols), taps = ((delta, dh, dw), ...)); nbb = output n-blocks; rwcs =
-    per-n-block ring write col (or ()).  Pure shape bookkeeping, cached."""
+    per-n-block ring write col (or ()).  The trailing ``ch_mrow_row``
+    holds ``phase * m_blocks + block`` — the slot a ragged-M launch's
+    prefetched per-phase mrow vector is read at; dense launches carry
+    (and ignore) the same row, so one table serves both.  Pure shape
+    bookkeeping, cached."""
     nph = len(phases)
-    nrows = CH_ROWS + 2 * nph
+    nrows = CH_ROWS + 2 * nph + 1
     info = []
     xbase = wbase = bbase = 0
     for phase in phases:
@@ -1609,6 +1613,7 @@ def _plan_tiles_chained(m_blocks: int, phases):
                     for s, (kt, kd) in enumerate(ksteps):
                         c = [0] * nrows
                         c[CH_I] = i
+                        c[ch_mrow_row(nph)] = p * m_blocks + i
                         c[CH_WT] = wb + s * nbb + j
                         c[CH_BJ] = bb + j
                         c[CH_FIRST] = 1 if s == 0 else 0
@@ -1649,51 +1654,85 @@ def _plan_tiles_chained(m_blocks: int, phases):
     return np.array(cols, np.int32).T
 
 
-def _gmm_chained_kernel(tab_ref, dims_ref, *refs, nphases: int,
-                        npanels: int, bm: int, blk: int):
+def _gmm_chained_kernel(*args, nphases: int, npanels: int, bm: int,
+                        blk: int, ragged: bool = False,
+                        debug_steps: bool = False):
+    if ragged:
+        tab_ref, mrow_ref, dims_ref = args[0], args[1], args[2]
+        refs = args[3:]
+    else:
+        tab_ref, dims_ref = args[0], args[1]
+        refs = args[2:]
     x_ref, w_ref, b_ref = refs[0], refs[1], refs[2]
     p_refs = refs[3:3 + npanels]
     out_refs = refs[3 + npanels:3 + npanels + nphases]
-    acc_ref, ring_ref, win_ref = refs[3 + npanels + nphases:]
+    nout = 3 + npanels + nphases
+    cnt_ref = refs[nout] if debug_steps else None
+    acc_ref, ring_ref, win_ref = refs[nout + (1 if debug_steps else 0):]
     t = pl.program_id(0)
     i = tab_ref[CH_I, t]
     src = tab_ref[CH_SRC, t]
     hd = dims_ref[0]
     wd = dims_ref[1]
+    # per-phase liveness: this (phase, block)'s true row count.  mrow == 0
+    # means the block is entirely past m_valid and the whole wave is a
+    # no-op guard — init, window assembly, GEMM, store and ring write all
+    # skipped, never merely zeroed.
+    mrow = mrow_ref[tab_ref[ch_mrow_row(nphases), t]] if ragged else None
+    live = (mrow > 0) if ragged else None
 
-    @pl.when(tab_ref[CH_FIRST, t] == 1)
-    def _init():
-        acc_ref[...] = jnp.zeros_like(acc_ref)
+    if debug_steps:
+        @pl.when(t == 0)
+        def _cnt_init():
+            cnt_ref[0, 0] = 0
 
-    xop = x_ref[...]
-    # ring window: producer row-block panels i-1, i, i+1 assembled into a
-    # (3*bm, blk) scratch, then one dynamic-start shifted load + border mask
-    slo = (i + 2) % 3
-    smi = i % 3
-    shi = (i + 1) % 3
-    rc = tab_ref[CH_RC, t]
-    win_ref[pl.ds(0, bm), :] = ring_ref[slo, rc]
-    win_ref[pl.ds(bm, bm), :] = ring_ref[smi, rc]
-    win_ref[pl.ds(2 * bm, bm), :] = ring_ref[shi, rc]
-    shifted = win_ref[pl.ds(bm + tab_ref[CH_DELTA, t], bm), :]
-    r = i * bm + jax.lax.broadcasted_iota(jnp.int32, (bm, 1), 0)[:, 0]
-    rem = r % (hd * wd)
-    hh = rem // wd + tab_ref[CH_DH, t]
-    ww = rem % wd + tab_ref[CH_DW, t]
-    valid = (hh >= 0) & (hh < hd) & (ww >= 0) & (ww < wd)
-    xop = jnp.where(src == 2,
-                    jnp.where(valid[:, None], shifted,
-                              jnp.zeros_like(shifted)), xop)
-    for pi, p_ref in enumerate(p_refs):
-        xop = jnp.where(src == 3 + pi, p_ref[...], xop)
-    acc_ref[...] += jnp.dot(xop, w_ref[...],
-                            preferred_element_type=jnp.float32)
+        def _cnt():
+            cnt_ref[0, 0] += 1
+        if ragged:
+            pl.when(live)(_cnt)
+        else:
+            _cnt()
 
-    @pl.when(tab_ref[CH_LAST, t] == 1)
+    def _body():
+        @pl.when(tab_ref[CH_FIRST, t] == 1)
+        def _init():
+            acc_ref[...] = jnp.zeros_like(acc_ref)
+
+        xop = x_ref[...]
+        # ring window: producer row-block panels i-1, i, i+1 assembled
+        # into a (3*bm, blk) scratch, then one dynamic-start shifted load
+        # + border mask
+        slo = (i + 2) % 3
+        smi = i % 3
+        shi = (i + 1) % 3
+        rc = tab_ref[CH_RC, t]
+        win_ref[pl.ds(0, bm), :] = ring_ref[slo, rc]
+        win_ref[pl.ds(bm, bm), :] = ring_ref[smi, rc]
+        win_ref[pl.ds(2 * bm, bm), :] = ring_ref[shi, rc]
+        shifted = win_ref[pl.ds(bm + tab_ref[CH_DELTA, t], bm), :]
+        r = i * bm + jax.lax.broadcasted_iota(jnp.int32, (bm, 1), 0)[:, 0]
+        rem = r % (hd * wd)
+        hh = rem // wd + tab_ref[CH_DH, t]
+        ww = rem % wd + tab_ref[CH_DW, t]
+        valid = (hh >= 0) & (hh < hd) & (ww >= 0) & (ww < wd)
+        xop = jnp.where(src == 2,
+                        jnp.where(valid[:, None], shifted,
+                                  jnp.zeros_like(shifted)), xop)
+        for pi, p_ref in enumerate(p_refs):
+            xop = jnp.where(src == 3 + pi, p_ref[...], xop)
+        acc_ref[...] += jnp.dot(xop, w_ref[...],
+                                preferred_element_type=jnp.float32)
+
     def _store():
         bj = tab_ref[CH_BJ, t]
         y = jnp.maximum(
             acc_ref[...] + b_ref[bj, :].astype(jnp.float32)[None, :], 0.0)
+        if ragged:
+            # live tail block: exact zeros past the block's true rows, so
+            # next-phase ring taps and next-launch panel descriptors read
+            # clean producer slots
+            ri = jax.lax.broadcasted_iota(jnp.int32, (bm, blk), 0)
+            y = jnp.where(ri < mrow, y, 0.0)
         y = y.astype(out_refs[0].dtype)
         ph = tab_ref[CH_PH, t]
         for p, o_ref in enumerate(out_refs):
@@ -1706,6 +1745,14 @@ def _gmm_chained_kernel(tab_ref, dims_ref, *refs, nphases: int,
         @pl.when(rwc >= 0)
         def _ring():
             ring_ref[i % 3, jnp.maximum(rwc, 0)] = y
+
+    last = tab_ref[CH_LAST, t] == 1
+    if ragged:
+        pl.when(live)(_body)
+        pl.when(last & live)(_store)
+    else:
+        _body()
+        pl.when(last)(_store)
 
 
 def _chain_dims(h: int, w: int):
@@ -1762,7 +1809,9 @@ def _chain_static(phases, blk, bm, wimg):
 
 
 def grouped_matmul_chained(phases, *, m: int, h: int, w: int, panels=(),
-                           block: int = 128, interpret: bool = False):
+                           block: int = 128, m_valid=None,
+                           debug_steps: bool = False,
+                           interpret: bool = False):
     """Execute a chain of grouped branch phases as ONE kernel.
 
     ``phases``: list of phases, each a list of branch dicts
@@ -1783,6 +1832,24 @@ def grouped_matmul_chained(phases, *, m: int, h: int, w: int, panels=(),
     Returns one padded (Mp, ncb_p * block) panel per phase; true values
     sit at [:m, col_base*block : col_base*block + n] per ``chained_layout``
     — padding columns are exactly zero (relu(0 + 0)).
+
+    ``m_valid`` (python int or traced i32 scalar) makes the launch
+    ragged-M: rows at/past it are padding.  The wave schedule SKIPS
+    M-blocks entirely past ``m_valid`` (no-op guard — dead-block
+    GEMM/ring steps never execute), live tail blocks mask their epilogue
+    stores to exact zeros, and the per-phase liveness vector
+    (``_ragged_mrows`` tiled per phase) rides the launch as a second
+    scalar-prefetch operand.  ``m_valid`` must be image-aligned
+    (a multiple of h*w): ring taps are image-local, so valid rows never
+    read skipped blocks (``analysis.hazards.check_chained_masked``).
+    Every request mix in one padded-M bucket shares the same offset
+    table and traced executable.  Inference-only — the differentiable
+    wrapper in ``kernels/ops.py`` rejects ragged chains from its VJP.
+
+    ``debug_steps=True`` additionally returns an executed-step counter
+    (the skip instrument): ``(panels, steps)`` where ``steps`` is a
+    (1, 1) i32 of grid steps that ran their body — dense launches count
+    every step, ragged launches only live-block steps.
     """
     blk = block
     bm = blk
@@ -1856,29 +1923,50 @@ def grouped_matmul_chained(phases, *, m: int, h: int, w: int, panels=(),
     tab = _device_table(_plan_tiles_chained, mb, spec)
     dims = _device_table(_chain_dims, h, w)
 
+    ragged = m_valid is not None
+    if ragged:
+        # one liveness slot per (phase, block) — same per-block counts in
+        # every phase (all phases share m), laid out phase-major to match
+        # the table's ch_mrow_row slots.  broadcast+reshape, never
+        # concatenate: the chained pack path must stay concat-free.
+        mrows = jnp.broadcast_to(_ragged_mrows(m_valid, mb, bm)[None, :],
+                                 (nph, mb)).reshape(nph * mb)
+
+        def _im(fn):
+            return lambda t, tab, mrow, dims: fn(t, tab, dims)
+    else:
+        def _im(fn):
+            return lambda t, tab, dims: fn(t, tab, dims)
+
     in_specs = [
         pl.BlockSpec((None, bm, blk),
-                     lambda t, tab, dims: (tab[CH_XT, t], 0, 0)),
+                     _im(lambda t, tab, dims: (tab[CH_XT, t], 0, 0))),
         pl.BlockSpec((None, blk, blk),
-                     lambda t, tab, dims: (tab[CH_WT, t], 0, 0)),
+                     _im(lambda t, tab, dims: (tab[CH_WT, t], 0, 0))),
         pl.BlockSpec(memory_space=pltpu.VMEM),
     ]
     ins = [xstack, wstack, bstack]
     for pi, pa in enumerate(pads):
         row = CH_PCA if pi == 0 else CH_PCB
         in_specs.append(pl.BlockSpec(
-            (bm, blk), lambda t, tab, dims, row=row: (tab[CH_I, t],
-                                                      tab[row, t])))
+            (bm, blk), _im(lambda t, tab, dims, row=row:
+                           (tab[CH_I, t], tab[row, t]))))
         ins.append(pa)
     ncbs = [sum(bs[2] for bs in pspec) for pspec in spec]
     out_specs = [
         pl.BlockSpec((bm, blk),
-                     lambda t, tab, dims, ri=ch_out_i_row(p),
-                     rj=ch_out_j_row(p): (tab[ri, t], tab[rj, t]))
+                     _im(lambda t, tab, dims, ri=ch_out_i_row(p),
+                         rj=ch_out_j_row(p): (tab[ri, t], tab[rj, t])))
         for p in range(nph)
     ]
+    out_shape = [jax.ShapeDtypeStruct((mp, ncb * blk), dtype)
+                 for ncb in ncbs]
+    if debug_steps:
+        out_specs.append(pl.BlockSpec(
+            (1, 1), _im(lambda t, tab, dims: (0, 0))))
+        out_shape.append(jax.ShapeDtypeStruct((1, 1), jnp.int32))
     grid_spec = pltpu.PrefetchScalarGridSpec(
-        num_scalar_prefetch=2,
+        num_scalar_prefetch=3 if ragged else 2,
         grid=(tab.shape[1],),
         in_specs=in_specs,
         out_specs=out_specs,
@@ -1888,14 +1976,17 @@ def grouped_matmul_chained(phases, *, m: int, h: int, w: int, panels=(),
             pltpu.VMEM((3 * bm, blk), dtype),
         ],
     )
+    scalars = (tab, mrows, dims) if ragged else (tab, dims)
     outs = pl.pallas_call(
         functools.partial(_gmm_chained_kernel, nphases=nph,
-                          npanels=len(pads), bm=bm, blk=blk),
+                          npanels=len(pads), bm=bm, blk=blk,
+                          ragged=ragged, debug_steps=debug_steps),
         grid_spec=grid_spec,
-        out_shape=[jax.ShapeDtypeStruct((mp, ncb * blk), dtype)
-                   for ncb in ncbs],
+        out_shape=out_shape,
         interpret=interpret,
-    )(tab, dims, *ins)
+    )(*scalars, *ins)
+    if debug_steps:
+        return list(outs[:nph]), outs[nph]
     return list(outs)
 
 

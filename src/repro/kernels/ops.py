@@ -534,7 +534,8 @@ _fused_vjp.defvjp(_fused_fwd, _fused_bwd)
 # ---------------------------------------------------------------------------
 
 def grouped_matmul_chained(phases, *, m: int, h: int, w: int, panels=(),
-                           block: int = 128, interpret: bool | None = None):
+                           block: int = 128, m_valid=None,
+                           interpret: bool | None = None):
     """A CHAIN of grouped branch phases in ONE kernel — join-chaining
     (panel-source lhs descriptors), in-launch KxK ring convs and the
     fused bias+ReLU epilogue; see
@@ -548,8 +549,18 @@ def grouped_matmul_chained(phases, *, m: int, h: int, w: int, panels=(),
     back onto the producer's slab before its own phase runs), and
     panel-source branches' lhs cotangents accumulate onto the previous
     launch's panel arguments — so gradients flow across the whole chain
-    exactly as through the unchained plan."""
+    exactly as through the unchained plan.
+
+    ``m_valid`` (python int or traced i32 scalar, image-aligned) makes
+    the launch ragged-M and bypasses the VJP entirely — the serving
+    path's masked chained launch, where dead M-blocks are skipped as
+    no-op waves and live tail blocks store exact zeros.  Inference-only,
+    like every other ragged grouped-family wrapper."""
     interpret = default_interpret() if interpret is None else interpret
+    if m_valid is not None:
+        return list(_gmm.grouped_matmul_chained(
+            phases, m=m, h=h, w=w, panels=list(panels), block=block,
+            m_valid=m_valid, interpret=interpret))
     spec, xs_flat, ws, bss = [], [], [], []
     for phase in phases:
         ps = []

@@ -12,21 +12,29 @@ Two serving paths share this module:
 
   CNN (``--arch googlenet ...``): continuous-batching inference on the
   PLANNED executor — the paper's co-execution thesis applied where Opara
-  aims it (small ragged inference batches).  Requests (1..max images
-  each) are admitted FIFO into the current batch, the batch is padded up
-  to an M-bucket from the cost model's ladder
-  (``cost_model.serve_buckets`` — bucket granularity is a modeled
-  decision: pow2 image counts, merged where bm-alignment makes the
-  padding free), and each bucket dispatches through ONE cached plan +
-  offset tables + jitted executable (``core.plan_cache``).  The ragged
-  ``valid_images`` operand is a traced i32 scalar, so every request mix
-  in a bucket re-enters the same trace; the grouped-family kernels mask
-  the padded-M tail in-kernel.  A warm request pays zero lowering, zero
+  aims it (small ragged inference batches).  Requests are split into
+  chunks of at most ``max_images`` (an oversized request spans several
+  dispatches — no image is silently dropped), admitted deadline- and
+  size-aware (an EDF anchor plus a greedy fill that minimizes the
+  dispatch's ``cost_model.padded_m_factor`` — padding waste, not queue
+  order, decides who rides along), padded up to an M-bucket from the
+  cost model's ladder (``cost_model.serve_buckets`` — bucket granularity
+  is a modeled decision: pow2 image counts, merged where bm-alignment
+  makes the padding free), and each bucket dispatches through ONE cached
+  plan + offset tables + jitted executable (``core.plan_cache``).  The
+  ragged ``valid_images`` operand is a traced i32 scalar, so every
+  request mix in a bucket re-enters the same trace; the grouped-family
+  kernels — INCLUDING the chained cross-module launch — mask the
+  padded-M tail in-kernel (dead M-blocks skipped as no-op waves, live
+  tails zero-stored).  A warm request pays zero lowering, zero
   ``_plan_tiles*`` rebuilds and zero re-tracing — the driver warms every
   bucket once, resets the cache counters, and asserts the measured
-  stream runs at hit rate 1.0.  Reports QPS and p50/p99 dispatch latency
-  (``serve_cnn_metrics`` — the numbers ``benchmarks/run.py`` records
-  into BENCH_plan.json).
+  stream runs at hit rate 1.0.  Latency is attributed per REQUEST
+  (queue wait + dispatch wall, completion of the LAST chunk for split
+  requests); p50/p99 are request-level percentiles with the sample
+  count reported alongside, and the raw dispatch-wall percentiles keep
+  their own ``dispatch_*`` keys (``serve_cnn_metrics`` — the numbers
+  ``benchmarks/run.py`` records into BENCH_plan.json).
 
       PYTHONPATH=src python -m repro.launch.serve --arch googlenet \\
           --reduced --requests 12 --max-images 4
@@ -34,6 +42,7 @@ Two serving paths share this module:
 from __future__ import annotations
 
 import argparse
+import importlib
 import sys
 import time
 
@@ -46,6 +55,12 @@ from repro.launch.mesh import make_local_mesh
 from repro.models import transformer as T
 from repro.sharding import specs as SH
 
+# importlib, not ``from repro.kernels import grouped_matmul``: the
+# package re-exports a FUNCTION of that name which shadows the submodule
+# attribute.  Module scope, NOT inside dispatch() — the import-machinery
+# lookup has no business riding the per-dispatch hot loop.
+_gmm = importlib.import_module("repro.kernels.grouped_matmul")
+
 
 def _bucket_for(n: int, ladder: list[int]) -> int:
     for b in ladder:
@@ -54,17 +69,68 @@ def _bucket_for(n: int, ladder: list[int]) -> int:
     return ladder[-1]
 
 
+def _split_request(rid: int, imgs, deadline: float, max_images: int):
+    """Chunk one request into admission units of <= max_images images.
+    Every submitted image lands in exactly one chunk — an oversized
+    request spans several dispatches instead of being truncated."""
+    return [{"rid": rid, "imgs": imgs[o:o + max_images],
+             "deadline": deadline}
+            for o in range(0, imgs.shape[0], max_images)]
+
+
+def _admit(pending, max_images: int, ladder, rows_per_image: int, pmf):
+    """Pick the next co-batch from ``pending`` chunks (mutates it).
+
+    EDF anchor: the earliest-deadline chunk always dispatches next — a
+    latency guarantee no packing heuristic may trade away.  Fill: among
+    chunks that still fit under ``max_images``, greedily admit whichever
+    minimizes the resulting dispatch's padded-M factor, stopping when no
+    candidate improves on the current factor (a rider that bumps the
+    bucket would pay more padding than it removes).  Ties fall to the
+    earlier deadline via the stable sort.
+    """
+    pending.sort(key=lambda c: c["deadline"])
+    batch = [pending.pop(0)]
+    total = batch[0]["imgs"].shape[0]
+
+    def factor(n):
+        return pmf(n * rows_per_image,
+                   _bucket_for(n, ladder) * rows_per_image)
+
+    while True:
+        cands = [c for c in pending
+                 if total + c["imgs"].shape[0] <= max_images]
+        if not cands:
+            break
+        best = min(cands,
+                   key=lambda c: factor(total + c["imgs"].shape[0]))
+        if factor(total + best["imgs"].shape[0]) > factor(total):
+            break
+        # identity removal — list.remove would == -compare image arrays
+        pending.pop(next(i for i, c in enumerate(pending) if c is best))
+        batch.append(best)
+        total += best["imgs"].shape[0]
+    return batch, total
+
+
 def serve_cnn_metrics(cfg, *, max_images: int = 4, num_requests: int = 12,
                       seed: int = 0, chain_modules: bool = True,
                       interpret=None) -> dict:
     """Run the continuous-batching loop on ``cfg`` and return metrics.
 
-    Synthetic seeded request stream: each request carries 1..max_images
-    images.  Greedy FIFO admission packs consecutive requests while they
-    fit under ``max_images`` total; the co-batch dispatches through the
+    Synthetic seeded request stream: each request carries
+    1..max_images+1 images (the +1 deliberately exercises the oversized
+    path) and a deadline drawn from the same rng.  Requests split into
+    <= max_images chunks, co-batches form by EDF-anchored
+    padded-M-factor packing (``_admit``), and each dispatch rides the
     bucket's cached plan.  Warmup dispatches one batch per ladder bucket
     (populating plan cache, device offset tables and jit traces), then
     counters reset and the measured stream must be all cache hits.
+
+    Latency is per REQUEST: completion of its last chunk minus
+    submission, i.e. queue wait + dispatch wall.  ``p50_ms``/``p99_ms``
+    are request-level (``latency_samples`` counts them); the dispatch
+    walls keep their own ``dispatch_p50_ms``/``dispatch_p99_ms``.
     """
     from repro.core import cost_model as CM
     from repro.core import plan_cache
@@ -84,13 +150,13 @@ def serve_cnn_metrics(cfg, *, max_images: int = 4, num_requests: int = 12,
             entry.executable = jax.jit(step)
         return entry
 
-    def dispatch(reqs):
-        n = sum(r.shape[0] for r in reqs)
+    def dispatch(arrs):
+        n = sum(r.shape[0] for r in arrs)
         bucket = _bucket_for(n, ladder)
         entry = executable_for(bucket)
         imgs = np.zeros((bucket, h, w, c), np.float32)
         off = 0
-        for r in reqs:
+        for r in arrs:
             imgs[off:off + r.shape[0]] = r
             off += r.shape[0]
         t0 = time.perf_counter()
@@ -98,9 +164,7 @@ def serve_cnn_metrics(cfg, *, max_images: int = 4, num_requests: int = 12,
         # touches and pin them to the entry (first dispatch only): the
         # plan cache's LRU eviction unpins them, so table memory tracks
         # LIVE entries, not everything ever traced
-        import importlib
-        gmm = importlib.import_module("repro.kernels.grouped_matmul")
-        with gmm._device_table.recording() as touched:
+        with _gmm._device_table.recording() as touched:
             logits = entry.executable(params, jnp.asarray(imgs),
                                       jnp.int32(n))
             jax.block_until_ready(logits)
@@ -108,8 +172,10 @@ def serve_cnn_metrics(cfg, *, max_images: int = 4, num_requests: int = 12,
         lat = time.perf_counter() - t0
         return logits, lat, bucket, n
 
-    # request stream: per-request image counts in [1, max_images]
-    sizes = rng.integers(1, max_images + 1, size=num_requests)
+    # request stream: image counts in [1, max_images + 1] — the +1 makes
+    # oversized requests (must split, never truncate) part of every run
+    sizes = rng.integers(1, max_images + 2, size=num_requests)
+    deadlines = rng.uniform(0.05, 0.5, size=num_requests)
     requests = [rng.normal(size=(int(s), h, w, c)).astype(np.float32)
                 for s in sizes]
 
@@ -118,39 +184,55 @@ def serve_cnn_metrics(cfg, *, max_images: int = 4, num_requests: int = 12,
         dispatch([np.zeros((b, h, w, c), np.float32)])
     plan_cache.reset()          # counters only; entries stay warm
 
-    lat_s, queue = [], list(requests)
-    waste = []
+    pending = []
+    for rid, (r, dl) in enumerate(zip(requests, deadlines)):
+        pending.extend(_split_request(rid, r, float(dl), max_images))
+    chunks_left = {rid: sum(1 for c_ in pending if c_["rid"] == rid)
+                   for rid in range(num_requests)}
+    submitted_images = int(sum(sizes))
+
+    dispatch_s, waste = [], []
+    done_at: dict[int, float] = {}
     served_images = 0
     t_start = time.perf_counter()
-    while queue:
-        batch, total = [], 0
-        while queue and total + queue[0].shape[0] <= max_images:
-            r = queue.pop(0)
-            batch.append(r)
-            total += r.shape[0]
-        if not batch:           # oversized request: serve alone, clamped
-            batch = [queue.pop(0)[:max_images]]
-            total = batch[0].shape[0]
-        _, lat, bucket, n = dispatch(batch)
-        lat_s.append(lat)
+    while pending:
+        batch, total = _admit(pending, max_images, ladder, h * w,
+                              CM.padded_m_factor)
+        _, lat, bucket, n = dispatch([c_["imgs"] for c_ in batch])
+        t_end = time.perf_counter()
+        dispatch_s.append(lat)
         served_images += n
         waste.append(CM.padded_m_factor(n * h * w, bucket * h * w))
+        for c_ in batch:
+            chunks_left[c_["rid"]] -= 1
+            if chunks_left[c_["rid"]] == 0:
+                done_at[c_["rid"]] = t_end
     wall = time.perf_counter() - t_start
 
+    assert len(done_at) == num_requests and served_images == \
+        submitted_images, "a submitted image never reached a launch"
     stats = plan_cache.stats()
     assert stats["misses"] == 0 and stats["hit_rate"] == 1.0, (
         f"warm serving path re-lowered a plan: {stats}")
-    lat_ms = np.asarray(lat_s) * 1e3
+    req_ms = np.asarray([done_at[r] - t_start
+                         for r in range(num_requests)]) * 1e3
+    disp_ms = np.asarray(dispatch_s) * 1e3
     return {
         "arch": cfg.name,
         "buckets": ladder,
         "requests": int(num_requests),
-        "dispatches": len(lat_s),
+        "dispatches": len(dispatch_s),
         "images": int(served_images),
+        "images_submitted": submitted_images,
         "qps": float(num_requests / wall),
         "images_per_s": float(served_images / wall),
-        "p50_ms": float(np.percentile(lat_ms, 50)),
-        "p99_ms": float(np.percentile(lat_ms, 99)),
+        # request-level latency: queue wait + dispatch wall, last chunk
+        # for split requests
+        "p50_ms": float(np.percentile(req_ms, 50)),
+        "p99_ms": float(np.percentile(req_ms, 99)),
+        "latency_samples": int(req_ms.size),
+        "dispatch_p50_ms": float(np.percentile(disp_ms, 50)),
+        "dispatch_p99_ms": float(np.percentile(disp_ms, 99)),
         "padded_m_factor_mean": float(np.mean(waste)),
         "plan_cache": stats,
         # per-ladder planlint coverage: a bucket's entry is verified when
@@ -171,8 +253,10 @@ def _serve_cnn(args) -> int:
           f"({m['images']} images) in {m['dispatches']} dispatches, "
           f"buckets {m['buckets']}")
     print(f"[serve] qps {m['qps']:.2f} ({m['images_per_s']:.2f} img/s), "
-          f"p50 {m['p50_ms']:.1f} ms, p99 {m['p99_ms']:.1f} ms, "
-          f"padded-M waste x{m['padded_m_factor_mean']:.2f}")
+          f"request p50 {m['p50_ms']:.1f} ms / p99 {m['p99_ms']:.1f} ms "
+          f"(n={m['latency_samples']}), dispatch p50 "
+          f"{m['dispatch_p50_ms']:.1f} ms, padded-M waste "
+          f"x{m['padded_m_factor_mean']:.2f}")
     print(f"[serve] plan cache: {m['plan_cache']}")
     return 0
 

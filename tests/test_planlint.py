@@ -95,7 +95,9 @@ def test_chained_table_clean_and_mutants():
     tab = gmm._plan_tiles_chained(2, spec)
     check = lambda tb: tables.check_chained(tb, 2, spec)
     assert check(tab) == []
-    nrows = tables.CH_ROWS + 2 * len(spec)
+    # ... + 1: the trailing per-phase mrow slot row ragged launches
+    # read their liveness from (``tables.ch_mrow_row``)
+    nrows = tables.CH_ROWS + 2 * len(spec) + 1
     assert _mutants_fire(tab, check, range(nrows)) == nrows
 
 
@@ -148,6 +150,38 @@ def test_chained_schedule_bounds_mutants():
     bad = base.copy()
     bad[tables.CH_DH, t] += 1                      # delta != dh*W + dw
     assert any(k == "bounds" for k, _ in _schedule(bad))
+
+
+def _masked(tab):
+    return hazards.check_chained_masked(np.asarray(tab), 2, 2, h=4, w=4)
+
+
+def test_chained_masked_clean():
+    assert _masked(gmm._plan_tiles_chained(2, _chained_spec())) == []
+
+
+def test_chained_masked_mutants():
+    """Fault injection for every obligation of the ragged no-op guard:
+    a wrong liveness slot, an out-of-range slot, a tap whose delta
+    breaks the in-image identity (the masked proof's boundary premise),
+    and a table with no mrow row at all."""
+    base = np.array(gmm._plan_tiles_chained(2, _chained_spec()))
+    mrr = tables.ch_mrow_row(2)
+
+    bad = base.copy()
+    bad[mrr, 1] += 1                               # wrong (phase, block)
+    assert any(k == "hazard" for k, _ in _masked(bad))
+
+    bad = base.copy()
+    bad[mrr, 0] = 99                               # outside [0, nph*mb)
+    assert any(k == "bounds" for k, _ in _masked(bad))
+
+    t = int(np.nonzero(base[tables.CH_SRC] == 2)[0][0])
+    bad = base.copy()
+    bad[tables.CH_DW, t] += 1                      # delta != dh*W + dw
+    assert any(k == "bounds" for k, _ in _masked(bad))
+
+    assert any(k == "hazard" for k, _ in _masked(base[:mrr]))
 
 
 def test_concat_segments():

@@ -10,6 +10,8 @@ for the valid images bit-for-bit, through ONE grouped-family launch per
 co-executed group (the eager launch counters), and must be invariant to
 whatever garbage sits in the padding images.
 """
+import importlib
+
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -18,8 +20,13 @@ from conftest import given, settings, st
 
 from repro import kernels as K
 from repro.configs import get_reduced
+from repro.core import plan as planlib
 from repro.kernels import ops as kops
 from repro.models import cnn as CNN
+
+# the package re-exports a function named ``grouped_matmul`` that
+# shadows the submodule attribute — importlib reaches the module
+gmm = importlib.import_module("repro.kernels.grouped_matmul")
 
 # K <= 128 (one k-block): kernel accumulation == oracle's single f32 dot
 RAGGED_SETS = [
@@ -151,6 +158,106 @@ def test_ragged_traced_m_valid_shares_one_executable():
 
 
 # ---------------------------------------------------------------------------
+# chained launch: ragged-M inside grouped_matmul_chained
+# ---------------------------------------------------------------------------
+
+def _chain_case(b, h, w, dtype=jnp.float32, key=0):
+    """2-phase chain (dense producer -> in-launch 3x3 ring conv) plus a
+    phase-dict builder, so the same weights spec both the padded-bucket
+    launch and its sliced-input oracle."""
+    ks = jax.random.split(jax.random.PRNGKey(key), 5)
+    m = b * h * w
+    x0 = jax.random.normal(ks[0], (m, 64), dtype) * 0.3
+    w0 = jax.random.normal(ks[1], (64, 48), dtype) * 0.3
+    b0 = jax.random.normal(ks[2], (48,), dtype)
+    wmat = jax.random.normal(ks[3], (48 * 9, 40), dtype) * 0.3
+    b1 = jax.random.normal(ks[4], (40,), dtype)
+
+    def phases(x):
+        p0 = [{"n": 48, "w": planlib._pad_w_dense(w0, 128), "b": b0,
+               "src": ("x", [x]), "ring_write": (0,)}]
+        p1 = [{"n": 40, "w": planlib._pack_w_ring(wmat, 3, 3, 48, 1, 128),
+               "b": b1, "src": ("ring", 3, 3, (0,)), "ring_write": None}]
+        return [p0, p1]
+
+    return x0, phases
+
+
+def _assert_chained_ragged(got, oracle, m_valid, bm=128):
+    """Live rows bit-match; the LIVE TAIL BLOCK stores exact zeros past
+    ``m_valid``.  Dead blocks past the live tail are skipped outright —
+    their contents are unspecified garbage no live consumer reads, so
+    they are deliberately NOT asserted on."""
+    tail_end = min(-(-m_valid // bm) * bm, got[0].shape[0])
+    for y, yw in zip(got, oracle):
+        y = np.asarray(y)
+        np.testing.assert_array_equal(y[:m_valid],
+                                      np.asarray(yw)[:m_valid])
+        assert not y[m_valid:tail_end].any(), \
+            "live tail block rows past m_valid not zeroed"
+
+
+@pytest.mark.parametrize("dtype", ["float32", "bfloat16"])
+@pytest.mark.parametrize("bucket", [2, 4])
+def test_ragged_chained_bitmatches_per_request_oracle(bucket, dtype):
+    """Every ladder bucket x dtype: the masked chained launch bit-matches
+    the dense chained kernel run on just the request's images (requests
+    pack contiguously, so the per-request oracle IS the sliced input;
+    accumulation is row-local, so padding cannot perturb live rows)."""
+    h, w = 8, 8
+    x0, phases = _chain_case(bucket, h, w, jnp.dtype(dtype), key=bucket)
+    for vi in range(1, bucket + 1):
+        mv = vi * h * w
+        got = kops.grouped_matmul_chained(phases(x0), m=x0.shape[0],
+                                          h=h, w=w, m_valid=mv)
+        oracle = kops.grouped_matmul_chained(phases(x0[:mv]), m=mv,
+                                             h=h, w=w)
+        _assert_chained_ragged(got, oracle, mv)
+
+
+def test_ragged_chained_traced_m_valid_shares_one_executable():
+    x0, phases = _chain_case(2, 8, 8)
+    traces = []
+
+    @jax.jit
+    def run(mv):
+        traces.append(1)
+        return kops.grouped_matmul_chained(phases(x0), m=x0.shape[0],
+                                           h=8, w=8, m_valid=mv)
+
+    for vi in (1, 2):
+        mv = vi * 64
+        got = run(jnp.int32(mv))
+        oracle = kops.grouped_matmul_chained(phases(x0[:mv]), m=mv,
+                                             h=8, w=8)
+        _assert_chained_ragged(got, oracle, mv)
+    assert len(traces) == 1, "chained m_valid retraced per value"
+
+
+def test_ragged_chained_dead_blocks_execute_zero_steps():
+    """The no-op guard SKIPS dead M-blocks — it does not merely zero
+    them.  rows/image == bm (h*w = 128) makes image count == block
+    count, so the grid-step counter must read exactly the live blocks'
+    share of the table and the skip ratio is exactly 1 - n/bucket."""
+    b, h, w = 4, 16, 8          # 128 rows/image == bm: 4 images, 4 blocks
+    x0, phases = _chain_case(b, h, w)
+    m = b * h * w
+    spec = gmm._chain_static(phases(x0), 128, 128, w)
+    tab = np.asarray(gmm._plan_tiles_chained(m // 128, spec))
+    total = tab.shape[1]
+    from repro.analysis import tables
+    for vi in (1, 2, 3, 4):
+        _, steps = gmm.grouped_matmul_chained(
+            phases(x0), m=m, h=h, w=w, m_valid=vi * h * w,
+            debug_steps=True, interpret=True)
+        executed = int(np.asarray(steps)[0, 0])
+        expected = int((tab[tables.CH_I] < vi).sum())
+        assert executed == expected, (vi, executed, expected)
+        assert total - executed == total * (1 - vi / b), \
+            "skip ratio != 1 - n/bucket"
+
+
+# ---------------------------------------------------------------------------
 # model level: the served planned forward
 # ---------------------------------------------------------------------------
 
@@ -200,3 +307,103 @@ def test_run_plan_valid_images_requires_batch_context():
     imgs = jnp.zeros((2,) + cfg.img)
     with pytest.raises(AssertionError):
         CNN.forward_plan(params, cfg, imgs, plan, valid_images=1)
+
+
+def test_valid_rows_rejects_inconsistent_geometry():
+    """_valid_rows must not trust xs[0]: mixed per-branch M is a loud
+    error, and M not divisible by the batch (fractional rows/image)
+    cannot produce an image-aligned cutoff."""
+    a, b = jnp.zeros((128, 4)), jnp.zeros((64, 4))
+    with pytest.raises(ValueError, match="mixes lhs row counts"):
+        planlib._valid_rows([a, b], 1, 2)
+    with pytest.raises(ValueError, match="not a multiple"):
+        planlib._valid_rows([jnp.zeros((129, 4))], 1, 2)
+    assert planlib._valid_rows([a, a], 1, 2) == 64
+    assert planlib._valid_rows([a], None, 2) is None
+
+
+def test_planned_ragged_chained_forward_bitmatches_dense():
+    """The chained (cross-module) plan served with valid_images: valid
+    logits bit-match the dense run and are invariant to garbage in the
+    padding images — the masked chained launch, not a caller-side slice,
+    provides the isolation."""
+    cfg = get_reduced("googlenet")
+    plan, _ = CNN.plan_cnn(cfg, batch=4, chain_modules=True)
+    assert any(g.mode == "grouped_chained" for g in plan.groups), \
+        "chain_modules plan lost its chained groups"
+    params = CNN.init_params(cfg, jax.random.PRNGKey(0))
+    imgs = jax.random.normal(jax.random.PRNGKey(1), (4,) + cfg.img)
+
+    dense = CNN.forward_plan(params, cfg, imgs, plan)
+    for vi in (1, 3):
+        ragged = CNN.forward_plan(params, cfg, imgs, plan, valid_images=vi)
+        np.testing.assert_array_equal(np.asarray(ragged)[:vi],
+                                      np.asarray(dense)[:vi])
+    junk = imgs.at[2:].set(jax.random.normal(jax.random.PRNGKey(9),
+                                             (2,) + cfg.img) * 50.0)
+    ragged2 = CNN.forward_plan(params, cfg, junk, plan, valid_images=2)
+    np.testing.assert_array_equal(np.asarray(ragged2)[:2],
+                                  np.asarray(dense)[:2])
+
+
+# ---------------------------------------------------------------------------
+# serving: admission, oversized splits, request-level latency
+# ---------------------------------------------------------------------------
+
+def test_serve_split_request_conserves_images():
+    from repro.launch import serve
+
+    imgs = np.arange(5 * 2 * 2 * 1, dtype=np.float32).reshape(5, 2, 2, 1)
+    chunks = serve._split_request(7, imgs, 0.1, max_images=2)
+    assert [c["imgs"].shape[0] for c in chunks] == [2, 2, 1]
+    assert all(c["rid"] == 7 for c in chunks)
+    np.testing.assert_array_equal(
+        np.concatenate([c["imgs"] for c in chunks]), imgs)
+
+
+def test_serve_admit_edf_anchor_and_waste_packing():
+    from repro.core.cost_model import padded_m_factor
+    from repro.launch import serve
+
+    def chunk(rid, n, dl):
+        return {"rid": rid, "imgs": np.zeros((n, 2, 2, 1), np.float32),
+                "deadline": dl}
+
+    # rows_per_image = 128 = bm, so factor(n images) =
+    # bucket_for(n)/n and the packing choice is visible.  EDF: the
+    # earliest deadline (r2) anchors even from the back of the queue.
+    # Fill: r1 (earlier deadline) would leave 3 images in the 4-bucket
+    # (factor 4/3); r0 fills it exactly (factor 1.0) — waste, not queue
+    # order, picks the rider.
+    pending = [chunk(0, 2, 0.9), chunk(1, 1, 0.5), chunk(2, 2, 0.1)]
+    batch, total = serve._admit(pending, 4, [1, 2, 4], 128,
+                                padded_m_factor)
+    assert batch[0]["rid"] == 2 and total == 4
+    assert {c["rid"] for c in batch} == {0, 2}
+
+    # conservation: repeated admission drains every chunk exactly once
+    pending = [chunk(i, 1 + i % 3, 0.1 * i) for i in range(7)]
+    want = sum(c["imgs"].shape[0] for c in pending)
+    got = 0
+    while pending:
+        batch, total = serve._admit(pending, 4, [1, 2, 4], 128,
+                                    padded_m_factor)
+        got += total
+    assert got == want, "admission dropped or duplicated a chunk"
+
+
+def test_serving_loop_serves_every_submitted_image():
+    """End-to-end regression for the oversized-truncation bug: the
+    stream contains requests larger than max_images (sizes reach
+    max_images + 1), and every submitted image must reach a launch.
+    Also pins the request-level latency contract: one sample per
+    request, not per dispatch."""
+    from repro.launch.serve import serve_cnn_metrics
+
+    m = serve_cnn_metrics(get_reduced("googlenet"), max_images=2,
+                          num_requests=5, seed=3)
+    assert m["images"] == m["images_submitted"] > 0
+    assert m["latency_samples"] == m["requests"] == 5
+    assert m["p99_ms"] >= m["p50_ms"] > 0
+    assert m["dispatch_p99_ms"] >= m["dispatch_p50_ms"] > 0
+    assert m["plan_cache"]["hit_rate"] == 1.0
